@@ -1,0 +1,41 @@
+"""Paper Fig. 1: uploaded parameters vs accuracy per method (reads the
+Table I + Table IV results; renders an ASCII scatter + CSV)."""
+from __future__ import annotations
+
+import json
+
+from benchmarks.common import RESULTS, get_experiment, print_table, save_result
+
+
+def run(preset: str = "paper", table1=None):
+    if table1 is None:
+        p = RESULTS / "table1_main.json"
+        if p.exists():
+            table1 = json.loads(p.read_text())
+        else:
+            from benchmarks import table1_main
+            table1 = table1_main.run(preset)
+    rows = []
+    for m, res in table1.items():
+        rows.append({"method": m, "uploaded_params": res["upload_params"],
+                     "accuracy_pct": res["avg"] * 100})
+    rows.sort(key=lambda r: r["uploaded_params"])
+    print_table("Fig. 1 — upload size vs accuracy", rows,
+                ["method", "uploaded_params", "accuracy_pct"])
+    # ASCII scatter (log-x)
+    import math
+    print("\n  acc%  | log10(params uploaded)")
+    for r in rows:
+        x = 0 if r["uploaded_params"] == 0 else math.log10(r["uploaded_params"])
+        bar = " " * int(x * 6) + "*"
+        print(f"  {r['accuracy_pct']:5.1f} |{bar} {r['method']}")
+    save_result("fig1_comm_vs_acc", rows)
+    return rows
+
+
+def main():
+    run()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,80 @@
+"""Kernel micro-benchmarks: wall time of the Pallas interpret path vs the
+jnp oracle (CPU — correctness/parity harness; TPU timings are the perf
+story in EXPERIMENTS.md §Perf, derived structurally from the dry-run)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import print_table, save_result
+
+
+def _time(fn, *args, iters=5):
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def run():
+    key = jax.random.PRNGKey(0)
+    rows = []
+
+    from repro.kernels.flash_attention import ops as fa_ops, ref as fa_ref
+    q = jax.random.normal(key, (2, 256, 4, 64))
+    k = jax.random.normal(key, (2, 256, 2, 64))
+    v = jax.random.normal(key, (2, 256, 2, 64))
+    ref_fn = jax.jit(lambda q, k, v: fa_ref.attention(
+        q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+        v.transpose(0, 2, 1, 3)))
+    rows.append({"name": "flash_attention_interp",
+                 "us_per_call": _time(fa_ops.flash_attention, q, k, v),
+                 "derived": "S=256 GQA4/2 hd=64"})
+    rows.append({"name": "attention_ref_jit",
+                 "us_per_call": _time(ref_fn, q, k, v),
+                 "derived": "same shape"})
+
+    from repro.kernels.rmsnorm import ops as rn_ops, ref as rn_ref
+    x = jax.random.normal(key, (4096, 1024))
+    s = jax.random.normal(key, (1024,)) * 0.1
+    rows.append({"name": "rmsnorm_interp",
+                 "us_per_call": _time(rn_ops.rmsnorm, x, s),
+                 "derived": "(4096,1024)"})
+    rows.append({"name": "rmsnorm_ref_jit",
+                 "us_per_call": _time(jax.jit(rn_ref.rmsnorm), x, s),
+                 "derived": "same"})
+
+    from repro.kernels.cfg_fuse import ops as cfg_ops, ref as cfg_ref
+    shape = (64, 16, 16, 3)
+    ks = jax.random.split(key, 4)
+    xs = [jax.random.normal(kk, shape) for kk in ks]
+    rows.append({"name": "cfg_fuse_interp",
+                 "us_per_call": _time(
+                     lambda *a: cfg_ops.cfg_update(*a[:3], 7.5, 0.3, 0.5, a[3]),
+                     *xs),
+                 "derived": str(shape)})
+    rows.append({"name": "cfg_fuse_ref_jit",
+                 "us_per_call": _time(
+                     jax.jit(lambda *a: cfg_ref.cfg_update(*a[:3], 7.5, 0.3, 0.5, a[3])),
+                     *xs),
+                 "derived": "same"})
+
+    print_table("Kernel microbench (CPU; Pallas interpret vs jnp oracle)",
+                rows, ["name", "us_per_call", "derived"])
+    for r in rows:
+        print(f"{r['name']},{r['us_per_call']:.1f},{r['derived']}")
+    save_result("kernels_bench", rows)
+    return rows
+
+
+def main():
+    run()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,73 @@
+"""§Roofline report: per (arch × shape × mesh) compute/memory/collective
+terms from the dry-run compile cache (benchmarks/results/dryrun*.json).
+
+The cache is produced by ``PYTHONPATH=src python -m repro.launch.dryrun
+--all [--multi-pod]`` (a subprocess because it forces 512 host devices).
+This module only aggregates — it never imports repro.launch.dryrun.
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from benchmarks.common import RESULTS, print_table, save_result
+
+SHAPES = ("train_4k", "prefill_32k", "decode_32k", "long_500k")
+
+
+def load(path: Path | None = None) -> dict:
+    path = path or (RESULTS / "dryrun.json")
+    if not path.exists():
+        return {}
+    return json.loads(path.read_text())
+
+
+def rows_from(data: dict, pod: str = "1pod", overrides: str = "{}"):
+    rows = []
+    for key, v in sorted(data.items()):
+        arch, shape, p, ov = key.split("|", 3)
+        if p != pod or ov != overrides:
+            continue
+        if v["status"] == "skip":
+            rows.append({"arch": arch, "shape": shape, "status": "SKIP",
+                         "note": v.get("note", "")[:48]})
+            continue
+        if v["status"] != "ok":
+            rows.append({"arch": arch, "shape": shape, "status": "ERROR"})
+            continue
+        t = v["roofline"]
+        rows.append({
+            "arch": arch, "shape": shape, "status": "ok",
+            "t_compute_ms": t["t_compute"] * 1e3,
+            "t_memory_ms": t["t_memory"] * 1e3,
+            "t_collective_ms": t["t_collective"] * 1e3,
+            "bottleneck": v["bottleneck"],
+            "useful_flops": (v.get("useful_flops_ratio") or 0.0),
+        })
+    return rows
+
+
+def run(pod: str = "1pod"):
+    data = load()
+    rows = rows_from(data, pod)
+    if not rows:
+        print("(roofline cache empty — run repro.launch.dryrun --all first)")
+        return []
+    print_table(f"Roofline terms per (arch × shape), {pod} mesh", rows,
+                ["arch", "shape", "status", "t_compute_ms", "t_memory_ms",
+                 "t_collective_ms", "bottleneck", "useful_flops"])
+    ok = [r for r in rows if r["status"] == "ok"]
+    n_skip = sum(r["status"] == "SKIP" for r in rows)
+    print(f"\n{len(ok)} compiled, {n_skip} documented skips, "
+          f"{len(rows)-len(ok)-n_skip} errors")
+    save_result(f"roofline_{pod}", rows)
+    return rows
+
+
+def main():
+    run("1pod")
+    run("2pod")
+
+
+if __name__ == "__main__":
+    main()

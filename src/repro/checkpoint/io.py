@@ -1,0 +1,47 @@
+"""Checkpointing: pytree <-> .npz + JSON manifest (host-gathered).
+
+Flat keys are the ``tree_paths`` path strings, so checkpoints are stable
+across refactors that keep parameter names, and are inspectable with
+plain numpy.  Used for the frozen DM cache and trained global models.
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+import jax
+import numpy as np
+
+from repro.utils import tree_paths
+
+
+def save_pytree(tree, path: str | Path, meta: dict | None = None):
+    path = Path(path)
+    path.parent.mkdir(parents=True, exist_ok=True)
+    flat = tree_paths(tree)
+    arrays = {p: np.asarray(l) for p, l in flat}
+    np.savez(path.with_suffix(".npz"), **arrays)
+    manifest = {"keys": [p for p, _ in flat], "meta": meta or {}}
+    path.with_suffix(".json").write_text(json.dumps(manifest, indent=1))
+
+
+def load_pytree(template, path: str | Path):
+    """Restore into the structure of ``template`` (values replaced)."""
+    path = Path(path)
+    data = np.load(path.with_suffix(".npz"))
+    flat = tree_paths(template)
+    leaves = []
+    for p, leaf in flat:
+        if p not in data:
+            raise KeyError(f"checkpoint missing key {p}")
+        arr = data[p]
+        if tuple(arr.shape) != tuple(leaf.shape):
+            raise ValueError(f"{p}: shape {arr.shape} != {leaf.shape}")
+        leaves.append(jax.numpy.asarray(arr))
+    treedef = jax.tree.structure(template)
+    return jax.tree.unflatten(treedef, leaves)
+
+
+def exists(path: str | Path) -> bool:
+    path = Path(path)
+    return path.with_suffix(".npz").exists() and path.with_suffix(".json").exists()

@@ -1,0 +1,28 @@
+"""Config registry: importing this package registers every assigned arch.
+
+Assigned pool (10 archs × 6 families) — see each module for the citation.
+"""
+from repro.configs.base import (INPUT_SHAPES, InputShape, ModelConfig,
+                                MoEConfig, MambaConfig, XLSTMConfig,
+                                get_config, list_configs, register)
+
+# Architecture registration (order matches the assignment table).
+from repro.configs import hubert_xlarge      # noqa: F401
+from repro.configs import granite_20b        # noqa: F401
+from repro.configs import gemma2_2b          # noqa: F401
+from repro.configs import phi35_moe          # noqa: F401
+from repro.configs import xlstm_125m         # noqa: F401
+from repro.configs import internvl2_1b       # noqa: F401
+from repro.configs import qwen2_7b           # noqa: F401
+from repro.configs import olmoe_1b_7b        # noqa: F401
+from repro.configs import qwen3_32b          # noqa: F401
+from repro.configs import jamba_15_large     # noqa: F401
+from repro.configs import oscar              # noqa: F401
+
+from repro.configs.shapes import input_specs, smoke_config  # noqa: F401
+
+ARCH_IDS = [
+    "hubert-xlarge", "granite-20b", "gemma2-2b", "phi3.5-moe-42b-a6.6b",
+    "xlstm-125m", "internvl2-1b", "qwen2-7b", "olmoe-1b-7b", "qwen3-32b",
+    "jamba-1.5-large-398b",
+]

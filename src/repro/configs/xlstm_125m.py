@@ -1,0 +1,23 @@
+"""xLSTM-125M [arXiv:2405.04517] — sLSTM + mLSTM blocks, attention-free.
+
+12 blocks, d_model=768, 4 heads, vocab=50304, d_ff=0 (the xLSTM blocks
+carry their own up/down projections).  Alternating (mLSTM, sLSTM) period.
+O(1) recurrent decode state → ``long_500k`` runs natively.
+"""
+from repro.configs.base import MLSTM, SLSTM, ModelConfig, XLSTMConfig, register
+
+CONFIG = register(ModelConfig(
+    name="xlstm-125m",
+    arch_type="ssm",
+    num_layers=12,
+    d_model=768,
+    num_heads=4,
+    num_kv_heads=4,
+    d_ff=0,
+    vocab_size=50304,
+    layer_pattern=(MLSTM, SLSTM),
+    xlstm=XLSTMConfig(),
+    tie_embeddings=True,
+    remat="none",
+    source="arXiv:2405.04517",
+))

@@ -1,0 +1,11 @@
+"""The paper's contribution: OSCAR one-shot FL pipeline + the baseline zoo.
+
+Layout:
+  classifier_train — global/local classifier training + evaluation
+  fl               — multi-round FL baselines (Local/FedAvg/FedProx/FedDyn)
+  dm_baselines     — DM-assisted OSFL baselines (FedCADO, FedDISC)
+  oscar            — OSCAR itself (Eq. 6-9 pipeline)
+  comm             — per-client upload accounting (Table IV / Fig. 1)
+"""
+from repro.core.oscar import OscarResult, run_oscar
+from repro.core.comm import upload_params

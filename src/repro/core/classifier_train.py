@@ -1,0 +1,75 @@
+"""Classifier training/eval used by the server (global model) and by the
+FL baselines (local models).  Pure-functional, jit/vmap friendly."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.classifiers import classifier_apply, init_classifier
+from repro.optim import sgdm, apply_updates, init_sgdm
+
+
+def xent(params, name, images, labels, *, l2: float = 0.0):
+    logits = classifier_apply(params, name, images)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    loss = -jnp.mean(jnp.take_along_axis(logp, labels[:, None], axis=-1))
+    if l2:
+        loss = loss + l2 * sum(jnp.sum(jnp.square(w))
+                               for w in jax.tree.leaves(params))
+    return loss
+
+
+@partial(jax.jit, static_argnames=("name", "steps", "batch", "lr", "momentum"))
+def train_classifier(params, name, images, labels, key, *, steps: int = 300,
+                     batch: int = 64, lr: float = 0.05, momentum: float = 0.9):
+    """SGD training loop (lax.fori) on a fixed in-memory dataset."""
+    opt = init_sgdm(params)
+    N = images.shape[0]
+
+    def body(i, carry):
+        params, opt = carry
+        k = jax.random.fold_in(key, i)
+        idx = jax.random.randint(k, (batch,), 0, N)
+        loss, grads = jax.value_and_grad(xent)(params, name, images[idx],
+                                               labels[idx])
+        updates, opt = sgdm(grads, opt, params, lr=lr, momentum=momentum,
+                            weight_decay=1e-4)
+        return apply_updates(params, updates), opt
+
+    params, _ = jax.lax.fori_loop(0, steps, body, (params, opt))
+    return params
+
+
+@partial(jax.jit, static_argnames=("name",))
+def predict(params, name, images):
+    return jnp.argmax(classifier_apply(params, name, images), axis=-1)
+
+
+def evaluate(params, name, images, labels, batch: int = 256) -> float:
+    correct = 0
+    N = len(images)
+    for i in range(0, N, batch):
+        pred = predict(params, name, jnp.asarray(images[i:i + batch]))
+        correct += int(jnp.sum(pred == jnp.asarray(labels[i:i + batch])))
+    return correct / max(N, 1)
+
+
+def evaluate_per_domain(params, name, data) -> dict:
+    """Global + per-client (=per-domain) test accuracy, Table I layout."""
+    res = {"avg": evaluate(params, name, data.test_images, data.test_labels)}
+    for r in range(data.num_domains):
+        xi, yi = data.client_test_set(r)
+        res[f"client{r + 1}"] = evaluate(params, name, xi, yi)
+    return res
+
+
+def fit_global(key, name, num_classes, images, labels, *, steps=400,
+               batch=64, lr=0.05):
+    """Init + train + return params (server-side global model training)."""
+    params = init_classifier(key, name, num_classes)
+    return train_classifier(params, name, jnp.asarray(images),
+                            jnp.asarray(labels), key, steps=steps,
+                            batch=batch, lr=lr)

@@ -1,0 +1,143 @@
+"""End-to-end experiment driver: one call = one paper table row/column.
+
+The DM is pre-trained ONCE on the broad (union) distribution with frozen-FM
+conditioning — playing Stable Diffusion's role — then reused frozen by
+OSCAR / FedCADO / FedDISC, exactly as the paper reuses SD v1.5.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import replace
+
+import jax
+import numpy as np
+
+from repro.configs.oscar import OscarConfig
+from repro.core import comm
+from repro.core.dm_baselines import run_fedcado, run_feddisc
+from repro.core.fl import run_fl, run_local_only
+from repro.core.oscar import run_oscar
+from repro.data.federated import make_federated_data
+from repro.diffusion.ddpm import pretrain_dm
+from repro.encoders.foundation import FrozenFM
+
+ALL_METHODS = ("local", "fedavg", "fedprox", "feddyn", "fedcado", "feddisc",
+               "oscar")
+
+
+class Experiment:
+    """Caches the dataset + pre-trained DM across method runs.  The frozen
+    DM is also checkpointed to disk (keyed by config) so repeated benchmark
+    invocations skip the pre-training, as the paper reuses frozen SD."""
+
+    def __init__(self, ocfg: OscarConfig | None = None, *, verbose: bool = True,
+                 pretrain_steps: int | None = None, cache_dir: str | None = None):
+        self.ocfg = ocfg or OscarConfig()
+        self.verbose = verbose
+        key = jax.random.PRNGKey(self.ocfg.seed)
+        self.key, kdm = jax.random.split(key)
+        t0 = time.time()
+        self.data = make_federated_data(self.ocfg.data)
+        self.fm = FrozenFM(self.ocfg.encoding_dim)
+        if self.data.pool_images is not None:
+            # DM pre-trains on the broad pool (SD's web-scale analogue),
+            # independent of what the clients hold (DESIGN.md §8)
+            union_x = self.data.pool_images
+            union_lab = self.data.pool_labels
+            union_dom = self.data.pool_domains
+        else:
+            union_x = self.data.client_images.reshape(
+                -1, *self.data.client_images.shape[2:])
+            union_lab = self.data.client_labels.reshape(-1)
+            union_dom = self.data.client_domains.reshape(-1)
+        union_y = np.asarray(self.fm(union_x))
+        if self.verbose:
+            print(f"[exp] data ready ({union_x.shape[0]} train images) "
+                  f"{time.time()-t0:.1f}s", flush=True)
+
+        from pathlib import Path
+        from repro.checkpoint import io as ckpt
+        from repro.diffusion.dit import init_dit
+        from repro.diffusion.schedule import make_schedule
+        steps = pretrain_steps or self.ocfg.diffusion.pretrain_steps
+        cache_dir = Path(cache_dir or
+                         Path(__file__).resolve().parents[3] / "benchmarks"
+                         / "results" / "dm_cache")
+        import hashlib
+        tag = "dm_" + hashlib.md5(
+            repr((self.ocfg.data, self.ocfg.diffusion, steps)).encode()
+        ).hexdigest()[:10]
+        cpath = cache_dir / tag
+        self.sched = make_schedule(self.ocfg.diffusion.train_timesteps,
+                                   self.ocfg.diffusion.schedule)
+        if ckpt.exists(cpath):
+            template = init_dit(kdm, self.ocfg.diffusion,
+                                self.ocfg.data.image_size,
+                                self.ocfg.data.channels)
+            self.dm_params = ckpt.load_pytree(template, cpath)
+            self.dm_losses = []
+            if self.verbose:
+                print(f"[exp] frozen DM loaded from cache {tag}", flush=True)
+        else:
+            t0 = time.time()
+            if self.verbose:
+                print("[exp] pre-training DM...", flush=True)
+            C = self.data.num_categories
+            groups = union_dom.astype(np.int64) * C + union_lab
+            self.dm_params, self.sched, self.dm_losses = pretrain_dm(
+                kdm, self.ocfg.diffusion, union_x, union_y,
+                image_size=self.ocfg.data.image_size,
+                channels=self.ocfg.data.channels,
+                steps=steps, log_every=200 if verbose else 0, groups=groups)
+            ckpt.save_pytree(self.dm_params, cpath,
+                             meta={"steps": steps, "tag": tag})
+            if self.verbose:
+                print(f"[exp] DM pre-trained in {time.time()-t0:.1f}s "
+                      f"(cached as {tag})", flush=True)
+
+    def _clf_params(self, name):
+        from repro.models.classifiers import (classifier_param_count,
+                                              init_classifier)
+        p = init_classifier(jax.random.PRNGKey(0), name,
+                            self.data.num_categories)
+        return classifier_param_count(p)
+
+    def run(self, method: str, *, classifier: str = None, rounds: int = 10,
+            samples_per_category: int | None = None, **kw) -> dict:
+        """Returns {metrics..., upload_params, method}."""
+        method = method.lower()
+        classifier = classifier or self.ocfg.classifier
+        import zlib
+        key = jax.random.fold_in(self.key, zlib.crc32(method.encode()))
+        t0 = time.time()
+        if method == "local":
+            _, metrics, upload = run_local_only(key, self.data, name=classifier)
+        elif method in ("fedavg", "fedprox", "feddyn"):
+            _, metrics, upload = run_fl(key, self.data, name=classifier,
+                                        method=method, rounds=rounds, **kw)
+        elif method == "fedcado":
+            _, metrics, upload, _ = run_fedcado(
+                key, self.ocfg, self.data, self.dm_params, self.sched,
+                classifier=classifier,
+                samples_per_category=samples_per_category)
+        elif method == "feddisc":
+            _, metrics, upload, _ = run_feddisc(
+                key, self.ocfg, self.data, self.dm_params, self.sched,
+                self.fm, classifier=classifier,
+                samples_per_category=samples_per_category)
+        elif method == "oscar":
+            res = run_oscar(key, self.ocfg, self.data, self.dm_params,
+                            self.sched, self.fm, classifier=classifier,
+                            samples_per_category=samples_per_category, **kw)
+            metrics, upload = res.metrics, res.upload_per_client
+        else:
+            raise ValueError(method)
+        out = dict(metrics)
+        out["upload_params"] = upload
+        out["method"] = method
+        out["wall_s"] = round(time.time() - t0, 1)
+        if self.verbose:
+            print(f"[exp] {method:8s} avg={out['avg']*100:5.2f}% "
+                  f"upload={upload/1e3:.1f}k params ({out['wall_s']}s)",
+                  flush=True)
+        return out

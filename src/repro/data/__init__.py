@@ -1,0 +1,2 @@
+from repro.data.federated import (FederatedData, make_federated_data,
+                                  partition_feature_skew, partition_label_skew)

@@ -1,0 +1,93 @@
+"""DDPM training (Eq. 3) with classifier-free conditioning dropout.
+
+``pretrain_dm`` plays the role of Stable Diffusion's web-scale pre-training
+(DESIGN.md §8): the DM is trained ONCE on a broad distribution (union of
+all domains), then frozen; the FL experiments never update it.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.oscar import DiffusionConfig
+from repro.diffusion.dit import dit_apply, init_dit
+from repro.diffusion.schedule import NoiseSchedule, make_schedule, q_sample
+from repro.optim import adamw, apply_updates, init_adamw
+
+
+def diffusion_loss(params, dc: DiffusionConfig, sched: NoiseSchedule,
+                   x0, y, key, y_group=None):
+    """Eq. 3: E ||ε - ε_θ(x_t, t, y)||².  Conditioning is dropped with
+    prob ``dc.cond_drop_prob`` (classifier-free training, Ho & Salimans).
+
+    ``y_group`` (optional): the (renormalised) mean encoding of each
+    sample's (category × domain) group.  With prob ``dc.group_cond_prob``
+    the model is conditioned on the GROUP MEAN instead of the per-image
+    encoding — this is exactly the ȳ_c statistic clients upload (Eq. 7),
+    so the server-side conditional p(x | ȳ_c) is trained in-distribution.
+    (Beyond-paper training detail; recorded in DESIGN.md §8.)"""
+    B = x0.shape[0]
+    kt, kn, kd, kg = jax.random.split(key, 4)
+    t = jax.random.randint(kt, (B,), 0, sched.T)
+    noise = jax.random.normal(kn, x0.shape)
+    x_t = q_sample(sched, x0, t, noise)
+    y_in = y
+    if y_group is not None:
+        use_g = jax.random.bernoulli(kg, dc.group_cond_prob, (B,))
+        y_in = jnp.where(use_g[:, None], y_group, y_in)
+    drop = jax.random.bernoulli(kd, dc.cond_drop_prob, (B,))
+    y_in = jnp.where(drop[:, None], params["null_y"][None], y_in)
+    eps = dit_apply(params, dc, x_t, t, y_in)
+    return jnp.mean(jnp.square(eps - noise))
+
+
+def make_dm_train_step(dc: DiffusionConfig, sched: NoiseSchedule):
+    def step(params, opt, x0, y, y_group, key):
+        loss, grads = jax.value_and_grad(diffusion_loss)(params, dc, sched,
+                                                         x0, y, key, y_group)
+        updates, opt = adamw(grads, opt, params, lr=dc.lr, weight_decay=0.0)
+        return apply_updates(params, updates), opt, loss
+    return jax.jit(step)
+
+
+def pretrain_dm(key, dc: DiffusionConfig, images, conds, *,
+                image_size: int, channels: int, steps: int | None = None,
+                log_every: int = 0, groups=None):
+    """Pre-train the classifier-free DM on (images, cond-encodings).
+
+    images: (N,H,W,C) in [-1,1]; conds: (N, cond_dim); groups: optional
+    (N,) int group ids (category × domain) enabling group-mean
+    conditioning (see ``diffusion_loss``).
+    Returns (params, schedule, losses)."""
+    steps = steps or dc.pretrain_steps
+    sched = make_schedule(dc.train_timesteps, dc.schedule)
+    kinit, kloop = jax.random.split(key)
+    params = init_dit(kinit, dc, image_size, channels)
+    opt = init_adamw(params)
+    step = make_dm_train_step(dc, sched)
+    N = images.shape[0]
+    conds = jnp.asarray(conds)
+    if groups is not None:
+        import numpy as np
+        groups = np.asarray(groups)
+        G = int(groups.max()) + 1
+        gm = np.zeros((G, conds.shape[-1]), np.float32)
+        np.add.at(gm, groups, np.asarray(conds))
+        cnt = np.bincount(groups, minlength=G)[:, None].clip(1)
+        gm = gm / cnt
+        gm /= np.linalg.norm(gm, axis=-1, keepdims=True) + 1e-6
+        group_conds = jnp.asarray(gm)[groups]          # (N, cond_dim)
+    else:
+        group_conds = conds
+    losses = []
+    for i in range(steps):
+        kloop, kb, ks = jax.random.split(kloop, 3)
+        idx = jax.random.randint(kb, (min(dc.batch_size, N),), 0, N)
+        params, opt, loss = step(params, opt, images[idx], conds[idx],
+                                 group_conds[idx], ks)
+        if log_every and (i % log_every == 0 or i == steps - 1):
+            losses.append((i, float(loss)))
+            print(f"  [dm-pretrain] step {i:5d} loss {float(loss):.4f}", flush=True)
+        else:
+            losses.append((i, float(loss)))
+    return params, sched, losses

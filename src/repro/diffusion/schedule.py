@@ -1,0 +1,44 @@
+"""Noise schedules for DDPM (Ho et al. 2020) — Eq. 1 of the paper."""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple
+
+import jax.numpy as jnp
+
+
+class NoiseSchedule(NamedTuple):
+    betas: jnp.ndarray            # (T,)
+    alphas: jnp.ndarray           # (T,)
+    alpha_bar: jnp.ndarray        # (T,) cumulative products
+    sqrt_ab: jnp.ndarray          # sqrt(alpha_bar)
+    sqrt_1mab: jnp.ndarray        # sqrt(1 - alpha_bar)
+
+    @property
+    def T(self) -> int:
+        return self.betas.shape[0]
+
+
+def make_schedule(T: int = 1000, kind: str = "cosine",
+                  beta_start: float = 1e-4, beta_end: float = 0.02) -> NoiseSchedule:
+    if kind == "linear":
+        betas = jnp.linspace(beta_start, beta_end, T)
+    elif kind == "cosine":  # Nichol & Dhariwal
+        s = 0.008
+        t = jnp.arange(T + 1) / T
+        f = jnp.cos((t + s) / (1 + s) * math.pi / 2) ** 2
+        alpha_bar = f / f[0]
+        betas = jnp.clip(1 - alpha_bar[1:] / alpha_bar[:-1], 0, 0.999)
+    else:
+        raise ValueError(kind)
+    alphas = 1.0 - betas
+    alpha_bar = jnp.cumprod(alphas)
+    return NoiseSchedule(betas, alphas, alpha_bar,
+                         jnp.sqrt(alpha_bar), jnp.sqrt(1.0 - alpha_bar))
+
+
+def q_sample(sched: NoiseSchedule, x0, t, noise):
+    """Forward process (Eq. 1 marginal): x_t = √ᾱ_t x_0 + √(1-ᾱ_t) ε."""
+    a = sched.sqrt_ab[t][..., None, None, None]
+    b = sched.sqrt_1mab[t][..., None, None, None]
+    return a * x0 + b * noise

@@ -1,0 +1,1 @@
+from repro.encoders.foundation import FrozenFM, category_encodings

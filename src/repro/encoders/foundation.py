@@ -1,0 +1,100 @@
+"""Frozen foundation-model encoder — the BLIP→CLIP stand-in (DESIGN.md §8).
+
+The paper's clients run ``y_cn = CLIP_text(BLIP(x_cn))`` (Eq. 6) with
+FROZEN weights, zero-shot.  What OSCAR needs from this pipeline is a frozen
+deterministic map image → R^512 whose geometry reflects semantic content
+(same category ⇒ nearby encodings).  We realise that with a fixed-seed
+random convolutional feature extractor + projection (random features
+preserve input geometry); the diffusion model is then *trained with these
+encodings as conditioning*, exactly as SD was trained with CLIP encodings.
+
+Nothing here is ever trained or communicated except the final 512-d
+vectors — matching the paper's communication accounting (512 floats per
+category per client).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class FrozenFM:
+    """Deterministic frozen encoder: images (B,H,W,C) in [-1,1] -> (B,512).
+
+    A small hand-fixed multi-scale vision backbone (pooled colour stats,
+    edge-energy maps, soft colour histograms, a low-res view, and random
+    nonlinear patch features) followed by a fixed random projection —
+    frozen, zero-shot, and strongly category-informative, as a real
+    foundation encoder would be."""
+
+    def __init__(self, dim: int = 512, seed: int = 1234, patch: int = 4):
+        self.dim = dim
+        self.patch = patch
+        self._rng = np.random.default_rng(seed)
+        self._built = None
+
+    def _build(self, H, W, C, feat_dim):
+        p = self.patch
+        pd = p * p * C
+        w1 = self._rng.normal(size=(pd, 128)) / np.sqrt(pd)
+        wo = self._rng.normal(size=(feat_dim, self.dim)) / np.sqrt(feat_dim)
+        self._proj = (jnp.asarray(w1, jnp.float32), jnp.asarray(wo, jnp.float32))
+        self._built = (H, W, C, feat_dim)
+
+    def _features(self, images):
+        B, H, W, C = images.shape
+        p = self.patch
+
+        def pool(x, g):
+            return x.reshape(B, g, H // g, g, W // g, C).mean((2, 4)).reshape(B, -1)
+
+        f_pool4 = pool(images, 4)                            # 4×4 grid stats
+        f_pool2 = pool(images, 2)
+        dx = jnp.diff(images, axis=2, append=images[:, :, -1:])
+        dy = jnp.diff(images, axis=1, append=images[:, -1:])
+        edge = jnp.sqrt(dx ** 2 + dy ** 2 + 1e-8).mean(-1, keepdims=True)
+        f_edge = edge.reshape(B, 4, H // 4, 4, W // 4, 1).mean((2, 4)).reshape(B, -1)
+        bins = jnp.linspace(-1, 1, 5)
+        f_hist = jax.nn.softmax(-((images[..., None] - bins) ** 2) / 0.125,
+                                axis=-1).mean((1, 2)).reshape(B, -1)
+        small = images.reshape(B, 8, H // 8, 8, W // 8, C).mean((2, 4)).reshape(B, -1)
+        x = images.reshape(B, H // p, p, W // p, p, C).transpose(0, 1, 3, 2, 4, 5)
+        x = x.reshape(B, -1, p * p * C)
+        return [f_pool4, f_pool2, f_edge, f_hist, small], x
+
+    def __call__(self, images) -> jax.Array:
+        images = jnp.asarray(images, jnp.float32)
+        B, H, W, C = images.shape
+        # first pass builds projections once the feature dim is known
+        feats, xpatch = self._features(images)
+        pd = self.patch * self.patch * C
+        if self._built is None or self._built[:3] != (H, W, C):
+            base = sum(f.shape[-1] for f in feats)
+            self._build(H, W, C, base + 128)
+        w1, wo = self._proj
+        f_rand = jnp.tanh(xpatch @ w1).mean(1)
+        z = jnp.concatenate(feats + [f_rand], axis=-1) @ wo   # (B, 512)
+        z = z - jnp.mean(z, axis=-1, keepdims=True)
+        return z / (jnp.linalg.norm(z, axis=-1, keepdims=True) + 1e-6)
+
+
+def category_encodings(fm: FrozenFM, images, labels, num_categories: int):
+    """Eq. 6 + Eq. 7: encode every image, mean-pool per category.
+
+    Returns (ȳ (C, 512), present (C,) bool) — ȳ_c is zero for absent
+    categories.  ȳ is exactly what a client uploads (C × 512 floats)."""
+    z = fm(images)
+    C = num_categories
+    out = jnp.zeros((C, z.shape[-1]), jnp.float32)
+    cnt = jnp.zeros((C,), jnp.float32)
+    out = out.at[labels].add(z)
+    cnt = cnt.at[labels].add(1.0)
+    present = cnt > 0
+    mean = out / jnp.maximum(cnt[:, None], 1.0)
+    # re-project the mean onto the unit sphere: the DM is conditioned on
+    # unit-norm encodings (CLIP convention), and a mean of unit vectors is
+    # shorter — without this the server conditions out-of-distribution.
+    mean = mean / (jnp.linalg.norm(mean, axis=-1, keepdims=True) + 1e-6)
+    mean = jnp.where(present[:, None], mean, 0.0)
+    return mean, present

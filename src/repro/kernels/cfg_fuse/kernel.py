@@ -1,0 +1,57 @@
+"""Pallas TPU kernel: fused CFG guidance-combine + ancestral update.
+
+On GPU implementations (diffusers etc.) this is a chain of ~10 elementwise
+HBM round-trips; here it is ONE VMEM-resident pass over (x, ε_c, ε_u, z).
+Tiling: inputs flattened to (rows, 128) lanes, 8-row sublane alignment,
+(256, 128) VMEM blocks.  The per-step schedule constants (ᾱ_t, ᾱ_prev) are
+traced scalars carried in SMEM; the guidance scale s and η are static.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+LANES = 128
+BLOCK_ROWS = 256
+
+
+def _cfg_kernel(scal_ref, x_ref, ec_ref, eu_ref, z_ref, out_ref, *, s, eta):
+    ab_t = scal_ref[0]
+    ab_prev = scal_ref[1]
+    x = x_ref[...].astype(jnp.float32)
+    eps = (1.0 + s) * ec_ref[...].astype(jnp.float32) \
+        - s * eu_ref[...].astype(jnp.float32)
+    x0 = (x - jnp.sqrt(1.0 - ab_t) * eps) * jax.lax.rsqrt(ab_t)
+    x0 = jnp.clip(x0, -1.0, 1.0)
+    var = (1.0 - ab_prev) / (1.0 - ab_t) * (1.0 - ab_t / ab_prev)
+    sigma = eta * jnp.sqrt(jnp.maximum(var, 0.0))
+    dir_coef = jnp.sqrt(jnp.maximum(1.0 - ab_prev - sigma * sigma, 0.0))
+    out = jnp.sqrt(ab_prev) * x0 + dir_coef * eps \
+        + sigma * z_ref[...].astype(jnp.float32)
+    out_ref[...] = out.astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("s", "eta", "interpret"))
+def cfg_update_2d(x, eps_c, eps_u, noise, ab_t, ab_prev, *, s: float,
+                  eta: float = 1.0, interpret: bool = False):
+    """All tensor args pre-flattened to (rows, 128), rows % 8 == 0."""
+    rows = x.shape[0]
+    block = min(BLOCK_ROWS, rows)
+    grid = (pl.cdiv(rows, block),)
+    scal = jnp.stack([ab_t, ab_prev]).astype(jnp.float32)
+    kern = functools.partial(_cfg_kernel, s=float(s), eta=float(eta))
+    return pl.pallas_call(
+        kern,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[pl.BlockSpec((block, LANES), lambda i, s: (i, 0))] * 4,
+            out_specs=pl.BlockSpec((block, LANES), lambda i, s: (i, 0)),
+        ),
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        interpret=interpret,
+    )(scal, x, eps_c, eps_u, noise)

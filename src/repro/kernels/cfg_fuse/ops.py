@@ -1,0 +1,38 @@
+"""jit'd public wrapper around the cfg_fuse Pallas kernel: handles
+flattening/padding to the (rows, 128) lane layout and CPU interpret mode."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.cfg_fuse import kernel as K
+
+
+def _on_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+def cfg_update(x, eps_c, eps_u, s, ab_t, ab_prev, noise, eta: float = 1.0,
+               *, interpret: bool | None = None):
+    """Fused (1+s)·ε_c − s·ε_u guidance + ancestral update.  Shapes of
+    x/eps_c/eps_u/noise are identical and arbitrary; s and eta are static."""
+    if interpret is None:
+        interpret = _on_cpu()
+    shape = x.shape
+    n = int(np.prod(shape))
+    rows = -(-n // K.LANES)
+    rows = -(-rows // 8) * 8
+    pad = rows * K.LANES - n
+
+    def flat(a):
+        a = a.reshape(-1)
+        if pad:
+            a = jnp.pad(a, (0, pad))
+        return a.reshape(rows, K.LANES)
+
+    out = K.cfg_update_2d(flat(x), flat(eps_c), flat(eps_u), flat(noise),
+                          jnp.asarray(ab_t, jnp.float32),
+                          jnp.asarray(ab_prev, jnp.float32),
+                          s=float(s), eta=float(eta), interpret=interpret)
+    return out.reshape(-1)[:n].reshape(shape)

@@ -1,0 +1,28 @@
+"""Pure-jnp oracle for the fused CFG-guidance + ancestral-update step.
+
+This is the numerical contract the Pallas kernel must match:
+
+    ε̂      = (1+s)·ε_c − s·ε_u                        (paper Eq. 8)
+    x̂₀     = clip((x_t − √(1−ᾱ_t)·ε̂)/√ᾱ_t, ±1)
+    σ_t    = η·√((1−ᾱ_prev)/(1−ᾱ_t)·(1−ᾱ_t/ᾱ_prev))
+    x_{t-1} = √ᾱ_prev·x̂₀ + √(1−ᾱ_prev−σ²)·ε̂ + σ·z     (paper Eq. 9 / DDIM η)
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def ancestral_step(x, eps, ab_t, ab_prev, noise, eta: float = 1.0):
+    sqrt_ab = jnp.sqrt(ab_t)
+    sqrt_1mab = jnp.sqrt(1.0 - ab_t)
+    x0 = (x - sqrt_1mab * eps) / sqrt_ab
+    x0 = jnp.clip(x0, -1.0, 1.0)
+    var = (1.0 - ab_prev) / (1.0 - ab_t) * (1.0 - ab_t / ab_prev)
+    sigma = eta * jnp.sqrt(jnp.maximum(var, 0.0))
+    dir_coef = jnp.sqrt(jnp.maximum(1.0 - ab_prev - sigma ** 2, 0.0))
+    return jnp.sqrt(ab_prev) * x0 + dir_coef * eps + sigma * noise
+
+
+def cfg_update(x, eps_c, eps_u, s, ab_t, ab_prev, noise, eta: float = 1.0):
+    eps = (1.0 + s) * eps_c - s * eps_u
+    return ancestral_step(x, eps, ab_t, ab_prev, noise, eta)

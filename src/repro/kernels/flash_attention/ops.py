@@ -1,0 +1,39 @@
+"""Public wrapper: (B, S, H, hd) layout, padding to block multiples, GQA,
+CPU interpret fallback."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention import kernel as K
+
+
+def _on_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    softcap: float = 0.0, interpret: bool | None = None):
+    """q: (B, Sq, Hq, hd); k/v: (B, Sk, Hkv, hd) → (B, Sq, Hq, hd)."""
+    if interpret is None:
+        interpret = _on_cpu()
+    B, Sq, Hq, hd = q.shape
+    Sk = k.shape[1]
+    qt = q.transpose(0, 2, 1, 3)
+    kt = k.transpose(0, 2, 1, 3)
+    vt = v.transpose(0, 2, 1, 3)
+    blk_q = min(K.DEFAULT_BLOCK_Q, max(8, Sq))
+    blk_k = min(K.DEFAULT_BLOCK_K, max(8, Sk))
+    pad_q = (-Sq) % blk_q
+    pad_k = (-Sk) % blk_k
+    if pad_q:
+        qt = jnp.pad(qt, ((0, 0), (0, 0), (0, pad_q), (0, 0)))
+    if pad_k:
+        kt = jnp.pad(kt, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+        vt = jnp.pad(vt, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+    out = K.flash_attention_bhsd(qt, kt, vt, causal=causal, window=window,
+                                 softcap=softcap, blk_q=blk_q, blk_k=blk_k,
+                                 interpret=interpret, true_sk=Sk)
+    if pad_q:
+        out = out[:, :, :Sq, :]
+    return out.transpose(0, 2, 1, 3)

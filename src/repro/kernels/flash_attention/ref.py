@@ -1,0 +1,36 @@
+"""Pure-jnp oracle for the flash-attention kernel: plain materialised
+softmax attention with the zoo's mask/softcap variants.
+
+Layout contract (kernel + oracle): q,k,v are (B, H, S, hd); GQA is
+expressed by H_q = rep · H_kv with k/v already *unrepeated* — the oracle
+repeats explicitly."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def attention(q, k, v, *, causal: bool = True, window: int = 0,
+              softcap: float = 0.0):
+    B, Hq, Sq, hd = q.shape
+    Hkv, Sk = k.shape[1], k.shape[2]
+    rep = Hq // Hkv
+    if rep > 1:
+        k = jnp.repeat(k, rep, axis=1)
+        v = jnp.repeat(v, rep, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q, k,
+                   preferred_element_type=jnp.float32) * (hd ** -0.5)
+    if softcap:
+        s = softcap * jnp.tanh(s / softcap)
+    qpos = jnp.arange(Sq)[:, None]
+    kpos = jnp.arange(Sk)[None, :]
+    mask = jnp.ones((Sq, Sk), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window:
+        mask &= kpos > qpos - window
+    s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", p.astype(v.dtype), v,
+                     preferred_element_type=jnp.float32)
+    return out.astype(q.dtype)

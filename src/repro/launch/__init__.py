@@ -1,0 +1,5 @@
+"""Launchers: mesh construction, multi-pod dry-run, training/serving CLIs.
+
+``repro.launch.dryrun`` must only run as a __main__ subprocess (it forces
+a 512-device host platform before jax init).
+"""

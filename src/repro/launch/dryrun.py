@@ -1,0 +1,278 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch × input shape) on the
+production mesh, with zero allocation (ShapeDtypeStruct stand-ins).
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2-7b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod]
+
+Per pair this records: memory analysis (bytes/device), cost analysis
+(FLOPs, HBM bytes), the collective schedule (bytes-on-wire by kind), and
+the three roofline terms.  Results merge into a JSON cache consumed by
+``benchmarks/roofline.py`` and EXPERIMENTS.md.
+
+NOTE: the XLA_FLAGS line above must run before ANY jax import — jax locks
+the device count on first init.  Do not import this module from test or
+benchmark code (they must see 1 device); shell out instead.
+"""
+import argparse
+import json
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ARCH_IDS, INPUT_SHAPES, get_config, input_specs
+from repro.configs.shapes import resolve_decode_config, shape_supported
+from repro.launch import hlo_analysis as hlo
+from repro.launch.mesh import make_production_mesh, mesh_axes
+from repro.models.moe import Parallel
+from repro.models.transformer import decode_step, init_lm
+from repro.optim import init_adamw
+from repro.serve.steps import make_prefill_step
+from repro.sharding.rules import (batch_specs, cache_specs, param_specs,
+                                  to_shardings)
+from repro.train.steps import TrainState, make_train_step
+from repro.utils import tree_bytes, tree_size
+
+RESULTS_DIR = Path(__file__).resolve().parents[3] / "benchmarks" / "results"
+
+
+def _sharded_bytes(sds_tree, spec_tree, mesh) -> float:
+    """Per-device bytes of a pytree under the given specs (analytic)."""
+    import math
+    total = 0.0
+    leaves_s = jax.tree.leaves(sds_tree)
+    leaves_p = jax.tree.leaves(spec_tree,
+                               is_leaf=lambda x: isinstance(x, jax.sharding.PartitionSpec))
+    for sds, spec in zip(leaves_s, leaves_p):
+        shards = 1
+        for entry in spec:
+            if entry is None:
+                continue
+            names = entry if isinstance(entry, tuple) else (entry,)
+            for n in names:
+                shards *= mesh.shape[n]
+        total += math.prod(sds.shape) * sds.dtype.itemsize / shards
+    return total
+
+
+def build(arch: str, shape_name: str, *, multi_pod: bool, overrides: dict | None = None):
+    """Lower + compile one (arch × shape × mesh).  Returns result dict."""
+    shape = INPUT_SHAPES[shape_name]
+    cfg = get_config(arch)
+    ok, note = shape_supported(cfg, shape)
+    if not ok:
+        return {"arch": arch, "shape": shape_name, "multi_pod": multi_pod,
+                "status": "skip", "note": note}
+    cfg = resolve_decode_config(cfg, shape)
+    overrides = overrides or {}
+    par_kw = {k: v for k, v in overrides.items()
+              if k in ("moe_combine", "use_pallas", "attn_impl",
+                       "prefill_last_only", "gqa_repeat", "decode_cache")}
+    cfg_kw = {k: v for k, v in overrides.items() if k in ("remat", "dtype")}
+    if cfg_kw:
+        cfg = cfg.replace(**cfg_kw)
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    ax = mesh_axes(mesh)
+    n_dev = mesh.size
+    data_shards = int(np.prod([mesh.shape[a] for a in ax.data]))
+    batch_sharded = shape.global_batch % data_shards == 0
+
+    from jax.sharding import NamedSharding
+    from jax.sharding import PartitionSpec as P
+    bdim = ax.all_data if batch_sharded else None
+    par = Parallel(model_axis="model", data_axes=ax.data, mesh=mesh,
+                   batch_sharded=batch_sharded,
+                   logits_spec=NamedSharding(mesh, P(bdim, None, "model")),
+                   **par_kw)
+    if overrides.get("seq_parallel"):
+        par = Parallel(**{**par.__dict__,
+                          "resid_spec": NamedSharding(mesh, P(bdim, "model", None))})
+    if overrides.get("shard_heads"):
+        # pin q on (padded) head sharding over model; kv replicated on model
+        par = Parallel(**{**par.__dict__,
+                          "qkv_spec": (NamedSharding(mesh, P(bdim, None, "model", None)),
+                                       NamedSharding(mesh, P(bdim, None, None, None)))})
+
+    specs = input_specs(cfg, shape)
+    params_sds = jax.eval_shape(lambda: init_lm(jax.random.PRNGKey(0), cfg))
+    if shape.kind != "train":
+        # serving runs on cast weights (bf16), not f32 optimizer masters
+        params_sds = jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct(s.shape, cfg.act_dtype)
+            if jnp.issubdtype(s.dtype, jnp.floating) else s, params_sds)
+    p_mode = "train"
+    if shape.kind != "train":
+        if overrides.get("serve2d"):
+            p_mode = "serve2d"
+        elif overrides.get("serve1d"):
+            p_mode = "serve1d"
+    pspecs = param_specs(params_sds, ax, mode=p_mode)
+    psh = to_shardings(pspecs, mesh)
+
+    t0 = time.time()
+    if shape.kind == "train":
+        state_sds = TrainState(params_sds,
+                               jax.eval_shape(lambda: init_adamw(params_sds)))
+        opt_specs = jax.eval_shape(lambda: init_adamw(params_sds))  # structure
+        from repro.optim.optimizers import AdamWState
+        state_specs = TrainState(
+            pspecs, AdamWState(jax.sharding.PartitionSpec(), pspecs, pspecs))
+        state_sh = to_shardings(state_specs, mesh)
+        b_specs = batch_specs(cfg, shape, ax, batch_sharded)
+        b_sh = to_shardings(b_specs, mesh)
+        step = make_train_step(cfg, par)
+        jitted = jax.jit(step, in_shardings=(state_sh, b_sh),
+                         out_shardings=(state_sh, None), donate_argnums=(0,))
+        lowered = jitted.lower(state_sds, specs["batch"])
+        arg_bytes = _sharded_bytes(state_sds, state_specs, mesh)
+    elif shape.kind == "prefill":
+        b_specs = batch_specs(cfg, shape, ax, batch_sharded)
+        b_sh = to_shardings(b_specs, mesh)
+        step = make_prefill_step(cfg, par)
+        jitted = jax.jit(step, in_shardings=(psh, b_sh))
+        lowered = jitted.lower(params_sds, specs["batch"])
+        arg_bytes = _sharded_bytes(params_sds, pspecs, mesh)
+    else:  # decode
+        c_specs = cache_specs(cfg, shape, ax, batch_sharded, specs["caches"])
+        c_sh = to_shardings(c_specs, mesh)
+        bdim = ax.all_data if batch_sharded else None
+        tok_sh = to_shardings(jax.sharding.PartitionSpec(bdim, None), mesh)
+        pos_sh = to_shardings(jax.sharding.PartitionSpec(), mesh)
+        fn = lambda p, t, c, pos: decode_step(p, cfg, t, c, pos, par)
+        jitted = jax.jit(fn, in_shardings=(psh, tok_sh, c_sh, pos_sh),
+                         out_shardings=(None, c_sh), donate_argnums=(2,))
+        lowered = jitted.lower(params_sds, specs["tokens"], specs["caches"],
+                               specs["pos"])
+        arg_bytes = (_sharded_bytes(params_sds, pspecs, mesh)
+                     + _sharded_bytes(specs["caches"], c_specs, mesh))
+    t_lower = time.time() - t0
+
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    # ---- memory ----
+    mem = {}
+    try:
+        ma = compiled.memory_analysis()
+        for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                  "temp_size_in_bytes", "generated_code_size_in_bytes",
+                  "alias_size_in_bytes"):
+            v = getattr(ma, k, None)
+            if v is not None:
+                mem[k] = int(v)
+    except Exception as e:  # CPU backend may not support it
+        mem["error"] = str(e)
+    mem["arg_bytes_analytic_per_device"] = arg_bytes
+
+    # ---- trip-count-aware FLOPs / bytes / collectives (see hlo_analysis) ----
+    hlo_text = compiled.as_text()
+    cost = hlo.analyze(hlo_text, n_dev)
+    flops, bytes_accessed = cost.flops, cost.bytes
+
+    terms = hlo.roofline_terms(flops, bytes_accessed, cost.collective_bytes)
+    pc = cfg.param_counts()
+    # MODEL_FLOPS: 6·N·D for training, 2·N·D forward-only (decode/prefill)
+    tokens = shape.global_batch * (shape.seq_len if shape.kind != "decode" else 1)
+    mf_factor = 6 if shape.kind == "train" else 2
+    model_flops = mf_factor * pc["active"] * tokens
+    flops_global = flops * n_dev
+
+    result = {
+        "arch": arch, "shape": shape_name, "multi_pod": multi_pod,
+        "status": "ok", "note": note,
+        "mesh": dict(zip(mesh.axis_names, [int(mesh.shape[a]) for a in mesh.axis_names])),
+        "n_devices": n_dev,
+        "batch_sharded": batch_sharded,
+        "overrides": overrides,
+        "t_lower_s": round(t_lower, 2), "t_compile_s": round(t_compile, 2),
+        "params_total": pc["total"], "params_active": pc["active"],
+        "flops_per_device": flops, "bytes_per_device": bytes_accessed,
+        "collective_bytes_per_device": cost.collective_bytes,
+        "collectives": {k: {"bytes": v, "count": cost.coll_count_by_kind[k]}
+                        for k, v in cost.coll_bytes_by_kind.items()},
+        "roofline": terms,
+        "bottleneck": hlo.dominant_term(terms),
+        "model_flops": model_flops,
+        "useful_flops_ratio": (model_flops / flops_global) if flops_global else None,
+        "memory": mem,
+    }
+    return result
+
+
+def merge_result(result: dict, out_path: Path):
+    out_path.parent.mkdir(parents=True, exist_ok=True)
+    data = {}
+    if out_path.exists():
+        data = json.loads(out_path.read_text())
+    key = "|".join([result["arch"], result["shape"],
+                    "2pod" if result["multi_pod"] else "1pod",
+                    json.dumps(result.get("overrides") or {}, sort_keys=True)])
+    data[key] = result
+    out_path.write_text(json.dumps(data, indent=1, sort_keys=True))
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=list(INPUT_SHAPES))
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default=str(RESULTS_DIR / "dryrun.json"))
+    ap.add_argument("--override", action="append", default=[],
+                    help="k=v (remat, dtype, moe_combine, seq_parallel)")
+    args = ap.parse_args()
+
+    overrides = {}
+    for ov in args.override:
+        k, v = ov.split("=", 1)
+        overrides[k] = {"true": True, "false": False}.get(v.lower(), v)
+
+    pairs = []
+    if args.all:
+        for a in ARCH_IDS:
+            for s in INPUT_SHAPES:
+                pairs.append((a, s))
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        pairs.append((args.arch, args.shape))
+
+    out_path = Path(args.out)
+    for arch, shape in pairs:
+        print(f"=== dry-run {arch} × {shape} "
+              f"({'2-pod 512' if args.multi_pod else '1-pod 256'} chips) ===",
+              flush=True)
+        try:
+            res = build(arch, shape, multi_pod=args.multi_pod,
+                        overrides=overrides)
+        except Exception:
+            res = {"arch": arch, "shape": shape, "multi_pod": args.multi_pod,
+                   "status": "error", "error": traceback.format_exc(),
+                   "overrides": overrides}
+        merge_result(res, out_path)
+        if res["status"] == "ok":
+            t = res["roofline"]
+            print(f"  lower {res['t_lower_s']}s compile {res['t_compile_s']}s | "
+                  f"flops/dev {res['flops_per_device']:.3e} "
+                  f"bytes/dev {res['bytes_per_device']:.3e} "
+                  f"coll/dev {res['collective_bytes_per_device']:.3e}")
+            print(f"  roofline: compute {t['t_compute']*1e3:.2f}ms "
+                  f"memory {t['t_memory']*1e3:.2f}ms "
+                  f"collective {t['t_collective']*1e3:.2f}ms "
+                  f"-> {res['bottleneck']}-bound | useful-flops "
+                  f"{(res['useful_flops_ratio'] or 0):.2f}")
+            print(f"  memory: {res['memory']}")
+        else:
+            print(f"  {res['status'].upper()}: "
+                  f"{res.get('note') or res.get('error', '')[-2000:]}")
+
+
+if __name__ == "__main__":
+    main()

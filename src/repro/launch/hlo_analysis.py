@@ -1,0 +1,415 @@
+"""HLO post-processing: trip-count-aware FLOP/byte/collective accounting
+plus roofline terms.
+
+Why not ``compiled.cost_analysis()``: XLA's analysis counts each ``while``
+body ONCE, but our stacks scan over layer groups (a 64-layer qwen3 runs its
+body 64×) — verified experimentally, so we parse the optimised HLO text and
+scale every computation by the loop trip count XLA records in
+``backend_config={"known_trip_count":{"n":...}}``.
+
+Accounting model (per-device; the SPMD module is already partitioned):
+* FLOPs — ``dot``: 2·|result|·(contracted dims);  reductions: |operand|;
+  other float elementwise ops: |result|;  data-movement ops: 0.
+* HBM bytes — for every top-level instruction of a non-fused computation:
+  |result| + Σ|operands| (fusion internals are VMEM-resident and skipped).
+* Collective bytes-on-wire — ring factors:
+    all-reduce 2(n-1)/n·|res|, all-gather (n-1)/n·|res|,
+    reduce-scatter (n-1)·|res|, all-to-all (n-1)/n·|res|,
+    collective-permute |res|,  n = participants per replica group.
+"""
+from __future__ import annotations
+
+import math
+import re
+from collections import defaultdict
+from dataclasses import dataclass, field
+
+# TPU v5e hardware constants (per task spec).
+PEAK_FLOPS = 197e12       # bf16 FLOP/s per chip
+HBM_BW = 819e9            # bytes/s per chip
+ICI_BW = 50e9             # bytes/s per link
+ICI_LINKS = 4             # v5e: 4 ICI links per chip (2D torus x±, y±)
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1, "bf16": 2, "f16": 2, "f32": 4, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+_FLOAT_DTYPES = {"bf16", "f16", "f32", "f64", "f8e4m3fn", "f8e5m2"}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_HDR_ARG_RE = re.compile(r"([\w.\-]+):\s*((?:\([^)]*\)|[\w\[\],]+))")
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*((?:\([^)]*\)|[\w\[\],]+(?:\{[\d,]*\})?))\s+([\w\-]+)(?:\(|\.)")
+_COMP_HDR_RE = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s+\(.*\)\s*->", )
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+_TRIP_RE = re.compile(r'known_trip_count"?\s*[:=]\s*\{"?n"?\s*[:=]\s*"?(\d+)"?\}')
+_BODY_RE = re.compile(r"body=%?([\w.\-]+)")
+_COND_RE = re.compile(r"condition=%?([\w.\-]+)")
+_CALLS_RE = re.compile(r"calls=%?([\w.\-]+)")
+_GROUPS_V1_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+_GROUPS_V2_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+_ZERO_FLOP_OPS = {
+    "parameter", "constant", "get-tuple-element", "tuple", "bitcast",
+    "broadcast", "reshape", "transpose", "copy", "copy-start", "copy-done",
+    "slice", "dynamic-slice", "dynamic-update-slice", "concatenate", "pad",
+    "iota", "convert", "gather", "scatter", "reverse", "while", "call",
+    "conditional", "custom-call", "after-all", "all-gather", "all-reduce",
+    "reduce-scatter", "all-to-all", "collective-permute", "partition-id",
+    "replica-id", "rng-bit-generator", "optimization-barrier", "domain",
+    "send", "recv", "send-done", "recv-done", "infeed", "outfeed", "fusion",
+    "get-dimension-size", "add-dependency",
+}
+_DATA_MOVEMENT = {
+    "parameter", "constant", "get-tuple-element", "tuple", "bitcast",
+    "after-all", "optimization-barrier", "domain", "partition-id",
+    "replica-id", "get-dimension-size", "add-dependency",
+    # bodies are counted separately; the call-op carry tuples are not traffic
+    "while", "call", "conditional",
+}
+# ops that touch only a slice of their big operand: bytes = 2·|slice|
+_SLICE_READ_OPS = {"dynamic-slice", "slice", "gather"}
+# in-place update ops: bytes = 2·|update operand| (read-modify-write)
+_UPDATE_OPS = {"dynamic-update-slice": 1, "scatter": 2}
+_COLLECTIVES = {"all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute"}
+
+
+def _shape_numel_bytes(shape_str: str) -> tuple[int, int]:
+    """(numel, bytes) summed over a possibly-tuple shape string."""
+    numel = total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        numel += n
+        total += n * _DTYPE_BYTES[dt]
+    return numel, total
+
+
+def _group_size(line: str, default: int) -> int:
+    m = _GROUPS_V2_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_V1_RE.search(line)
+    if m:
+        return max(1, m.group(1).count(",") + 1)
+    return default
+
+
+@dataclass
+class HloCost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    collective_bytes: float = 0.0
+    coll_bytes_by_kind: dict = field(default_factory=lambda: defaultdict(float))
+    coll_count_by_kind: dict = field(default_factory=lambda: defaultdict(int))
+
+
+class _Instr:
+    __slots__ = ("name", "shape", "op", "line")
+
+    def __init__(self, name, shape, op, line):
+        self.name, self.shape, self.op, self.line = name, shape, op, line
+
+
+def _parse(text: str):
+    """Returns (comps: name -> [instrs], symbols: name -> shape str,
+    entry name, comp_params: name -> [param names in order])."""
+    comps: dict[str, list[_Instr]] = {}
+    symbols: dict[str, str] = {}
+    comp_params: dict[str, list[str]] = {}
+    current = None
+    entry = None
+    for raw in text.splitlines():
+        line = raw.rstrip()
+        if not line or line.startswith("HloModule"):
+            continue
+        hdr = _COMP_HDR_RE.match(line)
+        if hdr and "{" in line:
+            current = hdr.group(2)
+            comps[current] = []
+            if hdr.group(1):
+                entry = current
+            # computation parameters: "(name: f32[a,b], ...)" -> symbols
+            arglist = line[line.find("("):line.rfind("->")]
+            names = []
+            for am in _HDR_ARG_RE.finditer(arglist):
+                symbols[am.group(1)] = am.group(2)
+                names.append(am.group(1))
+            comp_params[current] = names
+            continue
+        if current is None:
+            continue
+        m = _DEF_RE.match(line)
+        if not m:
+            continue
+        name, shape, op = m.group(1), m.group(2), m.group(3)
+        symbols[name] = shape
+        comps[current].append(_Instr(name, shape, op, line))
+    return comps, symbols, entry, comp_params
+
+
+def _multipliers(comps, entry):
+    """Computation execution multipliers from while trip counts."""
+    mult: dict[str, float] = defaultdict(float)
+    mult[entry] = 1.0
+    # edges: (caller, callee, factor, kind)
+    order = [entry]
+    seen = {entry}
+    while order:
+        nxt = []
+        for cname in order:
+            cm = mult[cname]
+            for ins in comps.get(cname, []):
+                factors = []
+                if ins.op == "while":
+                    t = _TRIP_RE.search(ins.line)
+                    n = float(t.group(1)) if t else 1.0
+                    b = _BODY_RE.search(ins.line)
+                    c = _COND_RE.search(ins.line)
+                    if b:
+                        factors.append((b.group(1), n))
+                    if c:
+                        factors.append((c.group(1), n))
+                elif ins.op in ("fusion", "call", "map"):
+                    m = _CALLS_RE.search(ins.line) or re.search(r"to_apply=%?([\w.\-]+)", ins.line)
+                    if m:
+                        factors.append((m.group(1), 1.0))
+                elif ins.op == "conditional":
+                    for m in re.finditer(r"(?:branch_computations=\{([^}]*)\}|(?:true|false)_computation=%?([\w.\-]+))", ins.line):
+                        names = (m.group(1) or m.group(2) or "").replace("%", "")
+                        for nm in names.split(","):
+                            nm = nm.strip()
+                            if nm:
+                                factors.append((nm, 1.0))
+                # NOTE: reduce/sort to_apply bodies intentionally not visited
+                for callee, f in factors:
+                    newm = cm * f
+                    if newm > mult[callee] + 1e-9:
+                        mult[callee] = newm
+                        if callee not in seen or True:
+                            nxt.append(callee)
+                            seen.add(callee)
+        order = nxt
+    return mult
+
+
+# computations reached via fusion `calls=` contribute flops but no HBM bytes
+def _fused_comps(comps):
+    fused = set()
+    for cname, instrs in comps.items():
+        for ins in instrs:
+            if ins.op == "fusion":
+                m = _CALLS_RE.search(ins.line)
+                if m:
+                    fused.add(m.group(1))
+    return fused
+
+
+def _dot_flops(ins: _Instr, symbols) -> float:
+    res_numel, _ = _shape_numel_bytes(ins.shape)
+    ops = _OPERAND_RE.findall(ins.line.split("(", 1)[1])
+    lhs_shape = symbols.get(ops[0], "") if ops else ""
+    cdims_m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", ins.line)
+    cdims = [int(d) for d in cdims_m.group(1).split(",") if d] if cdims_m else []
+    k = 1
+    m = _SHAPE_RE.search(lhs_shape)
+    if m and cdims:
+        lhs_dims = [int(d) for d in m.group(2).split(",") if d]
+        for d in cdims:
+            if d < len(lhs_dims):
+                k *= lhs_dims[d]
+    return 2.0 * res_numel * k
+
+
+def _fusion_effective_bytes(ins, comps, symbols, comp_params, res_b, opnds):
+    """Traffic estimate for one fusion call.
+
+    * a parameter used ONLY via slice-reads (dynamic-slice/slice/gather)
+      contributes the sliced bytes, not the full buffer;
+    * a DUS-rooted fusion aliases its big operand in place: traffic is the
+      updated slice, not the whole buffer.
+    """
+    cal = _CALLS_RE.search(ins.line)
+    callee = cal.group(1) if cal else None
+    internal = comps.get(callee, [])
+    # map fusion operands -> parameter names by the parameter(N) index
+    # (header order is NOT numeric order in optimised HLO)
+    plist_map: dict[int, str] = {}
+    for i in internal:
+        if i.op == "parameter":
+            pm = re.search(r"parameter\((\d+)\)", i.line)
+            if pm:
+                plist_map[int(pm.group(1))] = i.name
+    if not plist_map:
+        names = comp_params.get(callee, [])
+        plist_map = dict(enumerate(names))
+    plist = [plist_map.get(i) for i in range(len(opnds))]
+    pnames = set(n for n in plist if n)
+    # CPU bf16-dot emulation artifact: a fusion that only converts dtypes /
+    # re-lays-out dot operands materialises an f32 (or transposed) shadow
+    # of a bf16 buffer; the TPU MXU consumes bf16 in native tiled layouts —
+    # count as zero traffic (documented in EXPERIMENTS.md §Roofline notes).
+    body_ops = {i.op for i in internal if i.op != "parameter"}
+    if body_ops and body_ops <= {"convert", "bitcast", "copy", "reshape",
+                                 "transpose"}:
+        return 0.0
+
+    def dims_of(shape_str):
+        m = _SHAPE_RE.search(shape_str)
+        return m.group(2) if m else ""
+
+    res_dims = dims_of(ins.shape)
+
+    # transparent single-operand ops: resolve back to the source param
+    alias: dict[str, str] = {}
+
+    def resolve(name):
+        seen = 0
+        while name in alias and seen < 20:
+            name = alias[name]
+            seen += 1
+        return name
+
+    # per-parameter usage scan
+    slice_only: dict[str, float] = {}     # param -> sliced bytes
+    full_use: set[str] = set()
+    dus_updates = 0.0
+    dus_targets: set[str] = set()
+    for i in internal:
+        args = _OPERAND_RE.findall(i.line.split("(", 1)[1]) if "(" in i.line else []
+        args = [resolve(a) for a in args]
+        if i.op in ("convert", "bitcast", "copy", "reshape") and len(args) == 1:
+            alias[i.name] = args[0]
+            continue
+        if i.op in ("dynamic-slice", "slice", "gather"):
+            _, rb = _shape_numel_bytes(i.shape)
+            if args and args[0] in pnames:
+                slice_only[args[0]] = slice_only.get(args[0], 0.0) + rb
+            continue
+        if i.op == "dynamic-update-slice":
+            if len(args) > 1 and args[1] in symbols:
+                dus_updates += _shape_numel_bytes(symbols[args[1]])[1]
+            if args and args[0] in pnames:
+                dus_targets.add(args[0])
+            continue
+        for a in args:
+            if a in pnames:
+                full_use.add(a)
+
+    total = 0.0
+    aliased_out = 0.0
+    for k, opn in enumerate(opnds):
+        if opn not in symbols:
+            continue
+        pname = plist[k] if k < len(plist) else None
+        _, b = _shape_numel_bytes(symbols[opn])
+        if pname in dus_targets and pname not in full_use:
+            # in-place updated buffer: reads/writes only the slice (a dtype
+            # change would be real traffic — require exact byte match)
+            if dims_of(symbols[opn]) == res_dims and b == res_b:
+                aliased_out = max(aliased_out, b)
+            continue
+        if pname is not None and pname in slice_only and pname not in full_use:
+            total += slice_only[pname]
+        else:
+            total += b
+    total += max(0.0, res_b - aliased_out) + 2 * dus_updates
+    return total
+
+
+def analyze(text: str, total_devices: int) -> HloCost:
+    comps, symbols, entry, comp_params = _parse(text)
+    mult = _multipliers(comps, entry)
+    fused = _fused_comps(comps)
+    cost = HloCost()
+    for cname, instrs in comps.items():
+        cm = mult.get(cname, 0.0)
+        if cm == 0.0:
+            continue
+        in_fusion = cname in fused
+        for ins in instrs:
+            base_op = ins.op.replace("-start", "").replace("-done", "")
+            # ---- flops ----
+            if ins.op == "dot":
+                cost.flops += cm * _dot_flops(ins, symbols)
+            elif ins.op == "convolution":
+                # rough: 2 * |result| * (kernel numel / out-channels)
+                res_numel, _ = _shape_numel_bytes(ins.shape)
+                cost.flops += cm * 2.0 * res_numel
+            elif ins.op in ("reduce", "reduce-window", "sort"):
+                opnds = _OPERAND_RE.findall(ins.line.split("(", 1)[1])
+                if opnds and opnds[0] in symbols:
+                    n, _ = _shape_numel_bytes(symbols[opnds[0]])
+                    cost.flops += cm * n
+            elif ins.op not in _ZERO_FLOP_OPS:
+                dt = ins.shape.split("[")[0].lstrip("(")
+                n, _ = _shape_numel_bytes(ins.shape)
+                cost.flops += cm * n
+            # ---- bytes (skip fusion internals) ----
+            if not in_fusion and ins.op not in _DATA_MOVEMENT:
+                argstr = ins.line.split("(", 1)[1] if "(" in ins.line else ""
+                argstr = argstr.split("), ")[0]
+                opnds = _OPERAND_RE.findall(argstr)
+                _, res_b = _shape_numel_bytes(ins.shape)
+                if ins.op in _SLICE_READ_OPS:
+                    cost.bytes += cm * 2 * res_b
+                elif ins.op in _UPDATE_OPS:
+                    idx = _UPDATE_OPS[ins.op]
+                    upd_b = res_b
+                    if idx < len(opnds) and opnds[idx] in symbols:
+                        _, upd_b = _shape_numel_bytes(symbols[opnds[idx]])
+                    cost.bytes += cm * 2 * upd_b
+                else:
+                    op_b = 0
+                    for opn in opnds:
+                        if opn in symbols:
+                            _, b = _shape_numel_bytes(symbols[opn])
+                            op_b += b
+                    if ins.op == "fusion":
+                        total = _fusion_effective_bytes(
+                            ins, comps, symbols, comp_params, res_b, opnds)
+                    else:
+                        total = res_b + op_b
+                    cost.bytes += cm * total
+            # ---- collectives ----
+            if base_op in _COLLECTIVES and not ins.op.endswith("-done"):
+                _, size = _shape_numel_bytes(ins.shape)
+                n = _group_size(ins.line, total_devices)
+                if n <= 1:
+                    continue
+                if base_op == "all-reduce":
+                    wire = 2.0 * (n - 1) / n * size
+                elif base_op == "reduce-scatter":
+                    wire = float(n - 1) * size
+                elif base_op == "collective-permute":
+                    wire = float(size)
+                else:
+                    wire = (n - 1) / n * size
+                cost.coll_bytes_by_kind[base_op] += wire * cm
+                cost.coll_count_by_kind[base_op] += int(cm)
+    cost.collective_bytes = sum(cost.coll_bytes_by_kind.values())
+    return cost
+
+
+def roofline_terms(flops_per_dev: float, bytes_per_dev: float,
+                   coll_bytes_per_dev: float) -> dict:
+    """Three roofline terms in seconds (per-device quantities = HLO_global /
+    chips, matching the task formulas)."""
+    return {
+        "t_compute": flops_per_dev / PEAK_FLOPS,
+        "t_memory": bytes_per_dev / HBM_BW,
+        "t_collective": coll_bytes_per_dev / (ICI_BW * ICI_LINKS),
+    }
+
+
+def dominant_term(terms: dict) -> str:
+    key = max(("t_compute", "t_memory", "t_collective"), key=lambda k: terms[k])
+    return {"t_compute": "compute", "t_memory": "memory",
+            "t_collective": "collective"}[key]

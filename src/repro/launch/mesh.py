@@ -1,0 +1,27 @@
+"""Production mesh construction (TPU v5e target).
+
+A FUNCTION, not a module constant: importing this module never touches jax
+device state (the dry-run sets XLA_FLAGS before any jax initialisation).
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.sharding.rules import MeshAxes
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def mesh_axes(mesh) -> MeshAxes:
+    names = mesh.axis_names
+    data = tuple(n for n in names if n != "model")
+    return MeshAxes(data=data, model="model")
+
+
+def make_host_mesh(data: int = 1, model: int = 1):
+    """Small mesh over however many (host) devices exist — tests/benches."""
+    return jax.make_mesh((data, model), ("data", "model"))

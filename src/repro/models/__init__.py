@@ -1,0 +1,1 @@
+"""Model substrate: unified transformer zoo + classifier zoo."""

@@ -1,0 +1,230 @@
+"""Multi-head attention with the zoo's variants.
+
+Supports: GQA/MQA (num_kv_heads <= num_heads), QKV bias (qwen2), qk-norm
+(qwen3/olmoe), attention-logit softcap (gemma2), sliding-window masks
+(gemma2 local layers), bidirectional encoder mode (hubert), KV-cache decode.
+
+The matmul path can be routed through the Pallas flash-attention kernel
+(``repro.kernels.flash_attention``) via ``use_pallas=True``; the jnp path
+below is the reference used for CPU smoke tests and as the kernel oracle.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import apply_rope, dense, init_dense, init_rmsnorm, rmsnorm
+from repro.utils import softcap as _softcap
+
+
+class KVCache(NamedTuple):
+    k: jax.Array  # (B, S_max, n_kv, head_dim)
+    v: jax.Array  # (B, S_max, n_kv, head_dim)
+
+
+def init_attention(key, cfg: ModelConfig):
+    d, hd = cfg.d_model, cfg.head_dim
+    ks = jax.random.split(key, 6)
+    p = {
+        "wq": init_dense(ks[0], d, cfg.num_heads * hd, bias=cfg.qkv_bias),
+        "wk": init_dense(ks[1], d, cfg.num_kv_heads * hd, bias=cfg.qkv_bias),
+        "wv": init_dense(ks[2], d, cfg.num_kv_heads * hd, bias=cfg.qkv_bias),
+        "wo": init_dense(ks[3], cfg.num_heads * hd, d, bias=False),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = init_rmsnorm(ks[4], hd)
+        p["k_norm"] = init_rmsnorm(ks[5], hd)
+    return p
+
+
+def _project_qkv(params, cfg: ModelConfig, x, positions):
+    B, S, _ = x.shape
+    hd = cfg.head_dim
+    q = dense(params["wq"], x).reshape(B, S, cfg.num_heads, hd)
+    k = dense(params["wk"], x).reshape(B, S, cfg.num_kv_heads, hd)
+    v = dense(params["wv"], x).reshape(B, S, cfg.num_kv_heads, hd)
+    if cfg.qk_norm:
+        q = rmsnorm(params["q_norm"], q, cfg.norm_eps)
+        k = rmsnorm(params["k_norm"], k, cfg.norm_eps)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _attend(q, k, v, mask, cfg: ModelConfig, window: int):
+    """Reference attention.  q: (B,Sq,Hq,hd); k,v: (B,Sk,Hkv,hd).
+
+    ``mask``: (B, Sq, Sk) or (Sq, Sk) boolean, True = attend.
+    """
+    B, Sq, Hq, hd = q.shape
+    Hkv = k.shape[2]
+    rep = Hq // Hkv
+    scale = hd ** -0.5
+    # keep q/k in the storage dtype; accumulate the contraction in f32
+    # (MXU-native: no full-cache f32 materialisation on the decode path)
+    qs = (q * scale).reshape(B, Sq, Hkv, rep, hd)
+    logits = jnp.einsum("bqhrd,bkhd->bhrqk", qs, k,
+                        preferred_element_type=jnp.float32)
+    if cfg.attn_softcap:
+        logits = _softcap(logits, cfg.attn_softcap)
+    if mask is not None:
+        if mask.ndim == 2:
+            mask = mask[None]
+        logits = jnp.where(mask[:, None, None], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhrqk,bkhd->bqhrd", probs.astype(v.dtype), v,
+                     preferred_element_type=jnp.float32)
+    return out.astype(v.dtype).reshape(B, Sq, Hq * hd)
+
+
+def _attend_chunked(q, k, v, cfg: ModelConfig, *, causal: bool, window: int,
+                    blk: int = 1024):
+    """Flash-semantics attention in pure XLA (§Perf): lax.scan over KV
+    blocks with online-softmax running stats.  Never materialises the
+    (B,H,Sq,Sk) probability tensor — peak intermediate is (B,H,Sq,blk) and
+    the per-block mask is computed from iotas (no (Sq,Sk) bool buffer).
+    This is the XLA-level analogue of kernels/flash_attention (which is
+    the TPU-native Pallas version of the same blocking)."""
+    B, Sq, Hq, hd = q.shape
+    Sk, Hkv = k.shape[1], k.shape[2]
+    rep = Hq // Hkv
+    blk = min(blk, Sk)
+    assert Sk % blk == 0, (Sk, blk)
+    nk = Sk // blk
+    scale = hd ** -0.5
+    qs = (q * scale).reshape(B, Sq, Hkv, rep, hd)
+    kc = k.reshape(B, nk, blk, Hkv, hd).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(B, nk, blk, Hkv, hd).transpose(1, 0, 2, 3, 4)
+    qpos = jnp.arange(Sq)
+
+    def step(carry, inp):
+        m, l, acc = carry
+        j, kb, vb = inp
+        s = jnp.einsum("bqhrd,bkhd->bhrqk", qs, kb,
+                       preferred_element_type=jnp.float32)
+        if cfg.attn_softcap:
+            s = _softcap(s, cfg.attn_softcap)
+        kpos = j * blk + jnp.arange(blk)
+        mask = jnp.ones((Sq, blk), bool)
+        if causal:
+            mask &= kpos[None, :] <= qpos[:, None]
+        if window:
+            mask &= kpos[None, :] > qpos[:, None] - window
+        s = jnp.where(mask[None, None, None], s, -1e30)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        alpha = jnp.exp(m - m_new)
+        l_new = alpha * l + jnp.sum(p, axis=-1)
+        pv = jnp.einsum("bhrqk,bkhd->bhrqd", p.astype(v.dtype), vb,
+                        preferred_element_type=jnp.float32)
+        acc_new = acc * alpha[..., None] + pv
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, Hkv, rep, Sq), -1e30, jnp.float32)
+    l0 = jnp.zeros((B, Hkv, rep, Sq), jnp.float32)
+    a0 = jnp.zeros((B, Hkv, rep, Sq, hd), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(step, (m0, l0, a0),
+                                  (jnp.arange(nk), kc, vc))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    out = out.transpose(0, 3, 1, 2, 4).reshape(B, Sq, Hq * hd)
+    return out.astype(q.dtype)
+
+
+def make_mask(Sq: int, Sk: int, *, causal: bool, window: int, q_offset: int = 0):
+    """(Sq, Sk) boolean attention mask.  q position i maps to absolute
+    position ``i + q_offset``; keys are absolute positions 0..Sk-1."""
+    qpos = jnp.arange(Sq)[:, None] + q_offset
+    kpos = jnp.arange(Sk)[None, :]
+    mask = jnp.ones((Sq, Sk), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window:
+        mask &= kpos > qpos - window
+    return mask
+
+
+def attention(params, cfg: ModelConfig, x, positions, *, kind: str = "attn",
+              use_pallas: bool = False, impl: str = "naive", par=None):
+    """Full-sequence attention (train / prefill).  Returns (out, (k, v))."""
+    B, S, _ = x.shape
+    q, k, v = _project_qkv(params, cfg, x, positions)
+    kv_cache = (k, v)
+    if par is not None and par.gqa_repeat:
+        rep = cfg.num_heads // cfg.num_kv_heads
+        if rep > 1:
+            k = jnp.repeat(k, rep, axis=2)
+            v = jnp.repeat(v, rep, axis=2)
+    if par is not None and par.qkv_spec is not None:
+        q_sh, kv_sh = par.qkv_spec
+        q = jax.lax.with_sharding_constraint(q, q_sh)
+        k = jax.lax.with_sharding_constraint(k, q_sh if par.gqa_repeat else kv_sh)
+        v = jax.lax.with_sharding_constraint(v, q_sh if par.gqa_repeat else kv_sh)
+    window = cfg.sliding_window if kind == "attn_local" else 0
+    causal = not cfg.is_encoder
+    if use_pallas:
+        from repro.kernels.flash_attention import ops as fa_ops
+        out = fa_ops.flash_attention(
+            q, k, v, causal=causal, window=window, softcap=cfg.attn_softcap)
+        out = out.reshape(B, S, cfg.num_heads * cfg.head_dim)
+    elif impl == "chunked":
+        out = _attend_chunked(q, k, v, cfg, causal=causal, window=window)
+    else:
+        mask = make_mask(S, S, causal=causal, window=window)
+        out = _attend(q, k, v, mask, cfg, window)
+    return dense(params["wo"], out), kv_cache
+
+
+def attention_decode(params, cfg: ModelConfig, x, cache: KVCache, pos,
+                     *, kind: str = "attn"):
+    """Single-token decode.  x: (B, 1, d); pos: scalar int32 (same for the
+    whole batch — standard synchronous decode).  Returns (out, new_cache)."""
+    B = x.shape[0]
+    positions = jnp.full((B, 1), pos, jnp.int32)
+    q, k_new, v_new = _project_qkv(params, cfg, x, positions)
+    k = jax.lax.dynamic_update_slice_in_dim(cache.k, k_new.astype(cache.k.dtype), pos, axis=1)
+    v = jax.lax.dynamic_update_slice_in_dim(cache.v, v_new.astype(cache.v.dtype), pos, axis=1)
+    S_max = k.shape[1]
+    window = cfg.sliding_window if kind == "attn_local" else 0
+    kpos = jnp.arange(S_max)
+    valid = kpos <= pos
+    if window:
+        valid &= kpos > pos - window
+    mask = jnp.broadcast_to(valid[None, None, :], (B, 1, S_max))
+    out = _attend(q, k, v, mask, cfg, window)
+    return dense(params["wo"], out), KVCache(k, v)
+
+
+def attention_decode_stacked(params, cfg: ModelConfig, x, cache: KVCache,
+                             g, pos, *, kind: str = "attn"):
+    """Single-token decode against the STACKED (num_groups-leading) cache:
+    writes the new K/V token in place at [g, :, pos] — one token-sized DUS
+    per layer instead of a group-sized scan-ys writeback (§Perf: decode
+    cache traffic drops from O(cache) to O(token) per step)."""
+    B = x.shape[0]
+    positions = jnp.full((B, 1), pos, jnp.int32)
+    q, k_new, v_new = _project_qkv(params, cfg, x, positions)
+    zero = jnp.zeros((), jnp.int32)
+    start = (g, zero, pos, zero, zero)
+    k_all = jax.lax.dynamic_update_slice(cache.k,
+                                         k_new[None].astype(cache.k.dtype), start)
+    v_all = jax.lax.dynamic_update_slice(cache.v,
+                                         v_new[None].astype(cache.v.dtype), start)
+    k = jax.lax.dynamic_index_in_dim(k_all, g, 0, keepdims=False)
+    v = jax.lax.dynamic_index_in_dim(v_all, g, 0, keepdims=False)
+    S_max = k.shape[1]
+    window = cfg.sliding_window if kind == "attn_local" else 0
+    kpos = jnp.arange(S_max)
+    valid = kpos <= pos
+    if window:
+        valid &= kpos > pos - window
+    mask = jnp.broadcast_to(valid[None, None, :], (B, 1, S_max))
+    out = _attend(q, k, v, mask, cfg, window)
+    return dense(params["wo"], out), KVCache(k_all, v_all)
+
+
+def init_kv_cache(cfg: ModelConfig, batch: int, max_len: int, dtype) -> KVCache:
+    shape = (batch, max_len, cfg.num_kv_heads, cfg.head_dim)
+    return KVCache(jnp.zeros(shape, dtype), jnp.zeros(shape, dtype))

@@ -1,0 +1,315 @@
+"""Classifier zoo for the OSCAR global model (paper Tables I & II).
+
+Scaled-to-16×16 analogues of the paper's backbones: ResNet-18/50/101
+(basic/bottleneck residual stacks), VGG-16 (plain conv stacks),
+DenseNet-121 (dense connectivity), ViT-B/16 (patch transformer).  Width
+and depth are reduced for the CPU budget but the family ordering of
+capacity (and the paper's Table II trend) is preserved.
+
+BatchNorm → GroupNorm substitution (noted in DESIGN.md §8): avoids
+cross-client running-statistics leakage and state plumbing; standard in
+FL implementations for exactly this reason.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.utils import lecun_init, zeros_init
+
+
+# ---------------------------------------------------------------------------
+# primitives
+# ---------------------------------------------------------------------------
+
+def _init_conv(key, kh, kw, cin, cout):
+    fan_in = kh * kw * cin
+    w = jax.random.truncated_normal(key, -2, 2, (kh, kw, cin, cout)) / math.sqrt(fan_in)
+    return {"w": w.astype(jnp.float32)}
+
+
+def _conv(p, x, stride=1):
+    return jax.lax.conv_general_dilated(
+        x, p["w"], (stride, stride), "SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+
+
+def _init_gn(key, ch):
+    return {"scale": jnp.ones((ch,)), "bias": jnp.zeros((ch,))}
+
+
+def _gn(p, x, groups=4):
+    B, H, W, C = x.shape
+    g = min(groups, C)
+    while C % g:
+        g -= 1
+    xg = x.reshape(B, H, W, g, C // g)
+    mu = jnp.mean(xg, axis=(1, 2, 4), keepdims=True)
+    var = jnp.var(xg, axis=(1, 2, 4), keepdims=True)
+    xg = (xg - mu) * jax.lax.rsqrt(var + 1e-5)
+    return xg.reshape(B, H, W, C) * p["scale"] + p["bias"]
+
+
+def _init_fc(key, din, dout):
+    return {"w": lecun_init(key, (din, dout)), "b": zeros_init(key, (dout,))}
+
+
+def _fc(p, x):
+    return x @ p["w"] + p["b"]
+
+
+# ---------------------------------------------------------------------------
+# ResNet family
+# ---------------------------------------------------------------------------
+
+def _init_basic_block(key, cin, cout, stride):
+    ks = jax.random.split(key, 5)
+    p = {"c1": _init_conv(ks[0], 3, 3, cin, cout), "n1": _init_gn(ks[1], cout),
+         "c2": _init_conv(ks[2], 3, 3, cout, cout), "n2": _init_gn(ks[3], cout)}
+    if stride != 1 or cin != cout:
+        p["proj"] = _init_conv(ks[4], 1, 1, cin, cout)
+    return p
+
+
+def _basic_block(p, x, stride):
+    h = jax.nn.relu(_gn(p["n1"], _conv(p["c1"], x, stride)))
+    h = _gn(p["n2"], _conv(p["c2"], h))
+    sc = _conv(p["proj"], x, stride) if "proj" in p else x
+    return jax.nn.relu(h + sc)
+
+
+def _init_bottleneck(key, cin, cout, stride):
+    mid = cout // 4
+    ks = jax.random.split(key, 7)
+    p = {"c1": _init_conv(ks[0], 1, 1, cin, mid), "n1": _init_gn(ks[1], mid),
+         "c2": _init_conv(ks[2], 3, 3, mid, mid), "n2": _init_gn(ks[3], mid),
+         "c3": _init_conv(ks[4], 1, 1, mid, cout), "n3": _init_gn(ks[5], cout)}
+    if stride != 1 or cin != cout:
+        p["proj"] = _init_conv(ks[6], 1, 1, cin, cout)
+    return p
+
+
+def _bottleneck(p, x, stride):
+    h = jax.nn.relu(_gn(p["n1"], _conv(p["c1"], x)))
+    h = jax.nn.relu(_gn(p["n2"], _conv(p["c2"], h, stride)))
+    h = _gn(p["n3"], _conv(p["c3"], h))
+    sc = _conv(p["proj"], x, stride) if "proj" in p else x
+    return jax.nn.relu(h + sc)
+
+
+_RESNETS = {
+    # name: (block kind, blocks per stage, widths)
+    "resnet18": ("basic", (2, 2, 2), (16, 32, 64)),
+    "resnet50": ("bottleneck", (2, 3, 4), (32, 64, 128)),
+    "resnet101": ("bottleneck", (3, 4, 10), (32, 64, 128)),
+}
+
+
+def _resnet_layout(name):
+    kind, reps, widths = _RESNETS[name]
+    layout = []
+    cin = widths[0]
+    for s, (rep, w) in enumerate(zip(reps, widths)):
+        for b in range(rep):
+            layout.append((cin, w, 2 if (b == 0 and s > 0) else 1))
+            cin = w
+    return kind, layout, widths[0], cin
+
+
+def _init_resnet(key, name, num_classes, in_ch):
+    kind, layout, w0, cout = _resnet_layout(name)
+    ks = jax.random.split(key, 3)
+    params = {"stem": _init_conv(ks[0], 3, 3, in_ch, w0),
+              "stem_n": _init_gn(ks[1], w0), "blocks": []}
+    bk = jax.random.split(ks[2], len(layout))
+    init = _init_basic_block if kind == "basic" else _init_bottleneck
+    for i, (cin, w, stride) in enumerate(layout):
+        params["blocks"].append(init(bk[i], cin, w, stride))
+    params["fc"] = _init_fc(jax.random.fold_in(key, 7), cout, num_classes)
+    return params
+
+
+def _resnet_apply(params, name, x):
+    kind, layout, _, _ = _resnet_layout(name)
+    h = jax.nn.relu(_gn(params["stem_n"], _conv(params["stem"], x)))
+    fn = _basic_block if kind == "basic" else _bottleneck
+    for blk, (_, _, stride) in zip(params["blocks"], layout):
+        h = fn(blk, h, stride)
+    h = jnp.mean(h, axis=(1, 2))
+    return _fc(params["fc"], h)
+
+
+# ---------------------------------------------------------------------------
+# VGG
+# ---------------------------------------------------------------------------
+
+def _init_vgg(key, num_classes, in_ch):
+    cfg = [(16, 2), (32, 2), (64, 3)]  # == _VGG_CFG
+    layers = []
+    k = key
+    cin = in_ch
+    for w, rep in cfg:
+        for _ in range(rep):
+            k, k1, k2 = jax.random.split(k, 3)
+            layers.append({"c": _init_conv(k1, 3, 3, cin, w), "n": _init_gn(k2, w)})
+            cin = w
+    k, k1, k2 = jax.random.split(k, 3)
+    return {"layers": layers,
+            "fc1": _init_fc(k1, cin * 2 * 2, 128),
+            "fc2": _init_fc(k2, 128, num_classes)}
+
+
+_VGG_CFG = [(16, 2), (32, 2), (64, 3)]
+
+
+def _vgg_apply(params, x):
+    h = x
+    i = 0
+    for w, rep in _VGG_CFG:
+        for _ in range(rep):
+            l = params["layers"][i]
+            h = jax.nn.relu(_gn(l["n"], _conv(l["c"], h)))
+            i += 1
+        h = jax.lax.reduce_window(h, -jnp.inf, jax.lax.max,
+                                  (1, 2, 2, 1), (1, 2, 2, 1), "VALID")
+    h = h.reshape(h.shape[0], -1)
+    h = jax.nn.relu(_fc(params["fc1"], h))
+    return _fc(params["fc2"], h)
+
+
+# ---------------------------------------------------------------------------
+# DenseNet
+# ---------------------------------------------------------------------------
+
+def _init_densenet(key, num_classes, in_ch, growth=8, blocks=(4, 4, 4)):
+    k = key
+    k, k1 = jax.random.split(k)
+    params = {"stem": _init_conv(k1, 3, 3, in_ch, 2 * growth), "dense": [],
+              "trans": []}
+    ch = 2 * growth
+    for bi, nl in enumerate(blocks):
+        layers = []
+        for _ in range(nl):
+            k, k1, k2 = jax.random.split(k, 3)
+            layers.append({"n": _init_gn(k1, ch), "c": _init_conv(k2, 3, 3, ch, growth)})
+            ch += growth
+        params["dense"].append(layers)
+        if bi < len(blocks) - 1:
+            k, k1, k2 = jax.random.split(k, 3)
+            out = ch // 2
+            params["trans"].append({"n": _init_gn(k1, ch), "c": _init_conv(k2, 1, 1, ch, out)})
+            ch = out
+    k, k1, k2 = jax.random.split(k, 3)
+    params["final_n"] = _init_gn(k1, ch)
+    params["fc"] = _init_fc(k2, ch, num_classes)
+    return params
+
+
+def _densenet_apply(params, x):
+    h = _conv(params["stem"], x)
+    for bi, layers in enumerate(params["dense"]):
+        for l in layers:
+            out = _conv(l["c"], jax.nn.relu(_gn(l["n"], h)))
+            h = jnp.concatenate([h, out], axis=-1)
+        if bi < len(params["trans"]):
+            t = params["trans"][bi]
+            h = _conv(t["c"], jax.nn.relu(_gn(t["n"], h)))
+            h = jax.lax.reduce_window(h, 0.0, jax.lax.add,
+                                      (1, 2, 2, 1), (1, 2, 2, 1), "VALID") / 4.0
+    h = jax.nn.relu(_gn(params["final_n"], h))
+    h = jnp.mean(h, axis=(1, 2))
+    return _fc(params["fc"], h)
+
+
+# ---------------------------------------------------------------------------
+# ViT
+# ---------------------------------------------------------------------------
+
+def _init_vit(key, num_classes, in_ch, d=96, layers=4, heads=4, patch=4):
+    k = key
+    k, k1, k2, k3 = jax.random.split(k, 4)
+    params = {"patch": _init_fc(k1, patch * patch * in_ch, d),
+              "pos": jax.random.normal(k2, (1 + (16 // patch) ** 2, d)) * 0.02,
+              "cls": jax.random.normal(k3, (d,)) * 0.02,
+              "blocks": []}
+    for _ in range(layers):
+        k, k1, k2, k3, k4 = jax.random.split(k, 5)
+        params["blocks"].append({
+            "qkv": _init_fc(k1, d, 3 * d), "proj": _init_fc(k2, d, d),
+            "up": _init_fc(k3, d, 4 * d), "down": _init_fc(k4, 4 * d, d),
+            "n1": {"scale": jnp.ones((d,)), "bias": jnp.zeros((d,))},
+            "n2": {"scale": jnp.ones((d,)), "bias": jnp.zeros((d,))}})
+    k, k1 = jax.random.split(k)
+    params["fc"] = _init_fc(k1, d, num_classes)
+    return params
+
+
+def _ln_p(p, x):
+    mu = jnp.mean(x, -1, keepdims=True)
+    var = jnp.var(x, -1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + 1e-6) * p["scale"] + p["bias"]
+
+
+_VIT_META = (96, 4, 4)  # (d, heads, patch)
+
+
+def _vit_apply(params, x):
+    d, heads, patch = _VIT_META
+    B, H, W, C = x.shape
+    t = x.reshape(B, H // patch, patch, W // patch, patch, C)
+    t = t.transpose(0, 1, 3, 2, 4, 5).reshape(B, -1, patch * patch * C)
+    t = _fc(params["patch"], t)
+    cls = jnp.broadcast_to(params["cls"], (B, 1, d))
+    t = jnp.concatenate([cls, t], axis=1) + params["pos"]
+    hd = d // heads
+    for blk in params["blocks"]:
+        h = _ln_p(blk["n1"], t)
+        qkv = _fc(blk["qkv"], h).reshape(B, -1, 3, heads, hd)
+        q, k_, v = qkv[:, :, 0], qkv[:, :, 1], qkv[:, :, 2]
+        a = jax.nn.softmax(jnp.einsum("bqhd,bkhd->bhqk", q, k_) * hd ** -0.5, -1)
+        o = jnp.einsum("bhqk,bkhd->bqhd", a, v).reshape(B, -1, d)
+        t = t + _fc(blk["proj"], o)
+        h = _ln_p(blk["n2"], t)
+        t = t + _fc(blk["down"], jax.nn.gelu(_fc(blk["up"], h)))
+    return _fc(params["fc"], t[:, 0])
+
+
+# ---------------------------------------------------------------------------
+# public API
+# ---------------------------------------------------------------------------
+
+CLASSIFIERS = ["resnet18", "vgg16", "resnet50", "resnet101", "densenet121",
+               "vit_b16"]
+
+
+def init_classifier(key, name: str, num_classes: int, in_ch: int = 3):
+    if name in _RESNETS:
+        return _init_resnet(key, name, num_classes, in_ch)
+    if name == "vgg16":
+        return _init_vgg(key, num_classes, in_ch)
+    if name == "densenet121":
+        return _init_densenet(key, num_classes, in_ch)
+    if name == "vit_b16":
+        return _init_vit(key, num_classes, in_ch)
+    raise ValueError(name)
+
+
+def classifier_apply(params, name: str, x):
+    if name in _RESNETS:
+        return _resnet_apply(params, name, x)
+    if name == "vgg16":
+        return _vgg_apply(params, x)
+    if name == "densenet121":
+        return _densenet_apply(params, x)
+    if name == "vit_b16":
+        return _vit_apply(params, x)
+    raise ValueError(name)
+
+
+def classifier_param_count(params) -> int:
+    import numpy as np
+    return sum(int(np.prod(l.shape)) for l in jax.tree.leaves(params)
+               if hasattr(l, "shape"))

@@ -1,0 +1,122 @@
+"""Basic neural-net layers (functional: init_* returns a params dict,
+*_apply consumes it).  Parameter key names are load-bearing: the sharding
+rules in ``repro.sharding.rules`` match on them.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.utils import lecun_init, normal_init, ones_init, zeros_init
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def init_rmsnorm(key, dim: int):
+    return {"scale": jnp.zeros((dim,), jnp.float32)}  # (1 + scale) convention
+
+
+def rmsnorm(params, x, eps: float = 1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    y = x * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + params["scale"].astype(jnp.float32))).astype(dt)
+
+
+def init_layernorm(key, dim: int):
+    return {"scale": jnp.ones((dim,), jnp.float32),
+            "bias": jnp.zeros((dim,), jnp.float32)}
+
+
+def layernorm(params, x, eps: float = 1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"] + params["bias"]).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# Dense
+# ---------------------------------------------------------------------------
+
+def init_dense(key, d_in: int, d_out: int, bias: bool = False, stddev: float | None = None):
+    kw, kb = jax.random.split(key)
+    if stddev is None:
+        w = lecun_init(kw, (d_in, d_out))
+    else:
+        w = normal_init(kw, (d_in, d_out), stddev=stddev)
+    p = {"w": w}
+    if bias:
+        p["b"] = zeros_init(kb, (d_out,))
+    return p
+
+
+def dense(params, x):
+    y = x @ params["w"].astype(x.dtype)
+    if "b" in params:
+        y = y + params["b"].astype(x.dtype)
+    return y
+
+
+# ---------------------------------------------------------------------------
+# Embedding
+# ---------------------------------------------------------------------------
+
+def init_embedding(key, vocab: int, dim: int):
+    return {"embedding": normal_init(key, (vocab, dim), stddev=0.02)}
+
+
+def embed(params, ids, dtype):
+    return params["embedding"].astype(dtype)[ids]
+
+
+def unembed(params, x):
+    """Tied read-out: x @ E^T."""
+    return x @ params["embedding"].astype(x.dtype).T
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float):
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (..., S, H, head_dim); positions: broadcastable to (..., S)."""
+    head_dim = x.shape[-1]
+    freqs = rope_freqs(head_dim, theta)                         # (hd/2,)
+    ang = positions[..., :, None, None].astype(jnp.float32) * freqs  # (...,S,1,hd/2)
+    sin, cos = jnp.sin(ang), jnp.cos(ang)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLP (gated or plain)
+# ---------------------------------------------------------------------------
+
+def init_mlp(key, d_model: int, d_ff: int, gated: bool):
+    ks = jax.random.split(key, 3)
+    p = {"w_up": lecun_init(ks[0], (d_model, d_ff)),
+         "w_down": lecun_init(ks[1], (d_ff, d_model), fan_in_axes=(0,))}
+    if gated:
+        p["w_gate"] = lecun_init(ks[2], (d_model, d_ff))
+    return p
+
+
+def mlp(params, x, act: str = "silu"):
+    actfn = jax.nn.silu if act == "silu" else (lambda v: jax.nn.gelu(v, approximate=True))
+    up = x @ params["w_up"].astype(x.dtype)
+    if "w_gate" in params:
+        up = actfn(x @ params["w_gate"].astype(x.dtype)) * up
+    else:
+        up = actfn(up)
+    return up @ params["w_down"].astype(x.dtype)

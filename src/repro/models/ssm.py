@@ -1,0 +1,146 @@
+"""Mamba-1 (S6) selective state-space block, TPU-native.
+
+The CUDA selective-scan kernel is replaced by a *chunked* formulation
+(DESIGN.md §4): an outer ``lax.scan`` over sequence chunks carries the
+(B, d_inner, N) state; within a chunk a ``lax.associative_scan`` runs the
+first-order recurrence in parallel.  The (B, L, d_inner, N) chunk tensor is
+the only large intermediate and shards over the model axis (d_inner).
+
+Decode keeps an O(1) recurrent state: (ssm state, conv window) — this is
+what makes ``long_500k`` native for mamba-bearing archs.
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import MambaConfig, ModelConfig
+from repro.utils import lecun_init, zeros_init
+
+
+class MambaState(NamedTuple):
+    h: jax.Array          # (B, d_inner, N) SSM state
+    conv: jax.Array       # (B, d_conv-1, d_inner) trailing conv window
+
+
+def _dims(cfg: ModelConfig):
+    mc = cfg.mamba or MambaConfig()
+    d_inner = mc.expand * cfg.d_model
+    dt_rank = mc.dt_rank or -(-cfg.d_model // 16)
+    return mc, d_inner, dt_rank
+
+
+def init_mamba(key, cfg: ModelConfig):
+    mc, din, dtr = _dims(cfg)
+    d, N = cfg.d_model, mc.d_state
+    ks = jax.random.split(key, 8)
+    # dt bias: inverse-softplus of dt ~ LogUniform(1e-3, 1e-1) (mamba init)
+    dt = jnp.exp(jax.random.uniform(ks[0], (din,)) *
+                 (math.log(0.1) - math.log(1e-3)) + math.log(1e-3))
+    dt_bias = dt + jnp.log1p(-jnp.exp(-dt))  # softplus^-1
+    A_log = jnp.log(jnp.broadcast_to(jnp.arange(1, N + 1, dtype=jnp.float32), (din, N)))
+    return {
+        "in_proj": {"w": lecun_init(ks[1], (d, 2 * din))},
+        "conv_w": lecun_init(ks[2], (mc.d_conv, din)),
+        "conv_b": zeros_init(ks[3], (din,)),
+        "x_proj": {"w": lecun_init(ks[4], (din, dtr + 2 * N))},
+        "dt_proj": {"w": lecun_init(ks[5], (dtr, din)), "b": dt_bias},
+        "A_log": A_log,
+        "D": jnp.ones((din,), jnp.float32),
+        "out_proj": {"w": lecun_init(ks[6], (din, d), fan_in_axes=(0,))},
+    }
+
+
+def _conv1d_causal(x, w, b):
+    """Depthwise causal conv.  x: (B,S,din); w: (K,din)."""
+    K = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + x.shape[1], :] * w[i].astype(x.dtype) for i in range(K))
+    return out + b.astype(x.dtype)
+
+
+def _ssm_inputs(params, cfg: ModelConfig, xc, dt_rank, N):
+    """xc: (B,S,din) post-conv activations -> (a, b, C) scan inputs."""
+    dbc = xc @ params["x_proj"]["w"].astype(xc.dtype)
+    dt, Bm, Cm = jnp.split(dbc, [dt_rank, dt_rank + N], axis=-1)
+    dt = dt @ params["dt_proj"]["w"].astype(xc.dtype) + params["dt_proj"]["b"].astype(xc.dtype)
+    dt = jax.nn.softplus(dt.astype(jnp.float32))                    # (B,S,din)
+    A = -jnp.exp(params["A_log"])                                   # (din,N)
+    a = jnp.exp(dt[..., None] * A)                                  # (B,S,din,N)
+    b = (dt * xc.astype(jnp.float32))[..., None] * Bm.astype(jnp.float32)[:, :, None, :]
+    return a, b, Cm
+
+
+def mamba_forward(params, cfg: ModelConfig, x, *, chunk: int = 128,
+                  return_state: bool = False):
+    """Full-sequence forward.  x: (B,S,d) -> (B,S,d) [, final MambaState]."""
+    mc, din, dtr = _dims(cfg)
+    N = mc.d_state
+    B, S, d = x.shape
+    xz = x @ params["in_proj"]["w"].astype(x.dtype)
+    xr, z = jnp.split(xz, 2, axis=-1)
+    xc = jax.nn.silu(_conv1d_causal(xr, params["conv_w"], params["conv_b"]))
+    a, b, Cm = _ssm_inputs(params, cfg, xc, dtr, N)
+
+    L = min(chunk, S)
+    assert S % L == 0, f"seq {S} not divisible by chunk {L}"
+    nc = S // L
+    a_c = a.reshape(B, nc, L, din, N).swapaxes(0, 1)   # (nc,B,L,din,N)
+    b_c = b.reshape(B, nc, L, din, N).swapaxes(0, 1)
+
+    def combine(lhs, rhs):
+        a1, b1 = lhs
+        a2, b2 = rhs
+        return a1 * a2, b1 * a2 + b2
+
+    def chunk_step(h, ab):
+        ac, bc = ab                                    # (B,L,din,N)
+        A_cum, B_cum = jax.lax.associative_scan(combine, (ac, bc), axis=1)
+        h_all = A_cum * h[:, None] + B_cum             # (B,L,din,N)
+        return h_all[:, -1], h_all
+
+    h0 = jnp.zeros((B, din, N), jnp.float32)
+    h_last, h_chunks = jax.lax.scan(chunk_step, h0, (a_c, b_c))
+    h_seq = h_chunks.swapaxes(0, 1).reshape(B, S, din, N)
+    y = jnp.einsum("bsdn,bsn->bsd", h_seq, Cm.astype(jnp.float32))
+    y = y + params["D"] * xc.astype(jnp.float32)
+    y = (y.astype(x.dtype)) * jax.nn.silu(z)
+    out = y @ params["out_proj"]["w"].astype(x.dtype)
+    if return_state:
+        conv_tail = _conv_tail(xr, mc.d_conv)
+        return out, MambaState(h_last, conv_tail)
+    return out
+
+
+def _conv_tail(xr, d_conv):
+    """Last d_conv-1 pre-conv inputs, for decode continuation."""
+    return xr[:, -(d_conv - 1):, :]
+
+
+def mamba_decode(params, cfg: ModelConfig, x, state: MambaState):
+    """Single-token step.  x: (B,1,d) -> (out (B,1,d), new state)."""
+    mc, din, dtr = _dims(cfg)
+    N = mc.d_state
+    B = x.shape[0]
+    xz = x @ params["in_proj"]["w"].astype(x.dtype)
+    xr, z = jnp.split(xz, 2, axis=-1)                  # (B,1,din)
+    win = jnp.concatenate([state.conv, xr], axis=1)    # (B,d_conv,din)
+    w = params["conv_w"].astype(x.dtype)
+    xc = jnp.einsum("bkd,kd->bd", win, w)[:, None, :] + params["conv_b"].astype(x.dtype)
+    xc = jax.nn.silu(xc)
+    a, b, Cm = _ssm_inputs(params, cfg, xc, dtr, N)    # (B,1,din,N)
+    h = a[:, 0] * state.h + b[:, 0]
+    y = jnp.einsum("bdn,bn->bd", h, Cm[:, 0].astype(jnp.float32))
+    y = y + params["D"] * xc[:, 0].astype(jnp.float32)
+    y = y.astype(x.dtype)[:, None, :] * jax.nn.silu(z)
+    out = y @ params["out_proj"]["w"].astype(x.dtype)
+    return out, MambaState(h, win[:, 1:])
+
+
+def init_mamba_state(cfg: ModelConfig, batch: int, dtype) -> MambaState:
+    mc, din, _ = _dims(cfg)
+    return MambaState(jnp.zeros((batch, din, mc.d_state), jnp.float32),
+                      jnp.zeros((batch, mc.d_conv - 1, din), dtype))

@@ -1,0 +1,370 @@
+"""Unified sequence model covering the whole assigned zoo.
+
+One parameterised stack supports: dense decoders (llama/qwen/granite/gemma2
+flavours), encoder-only (hubert), MoE FFNs (phi3.5/olmoe/jamba), Mamba and
+xLSTM mixer blocks, and VLM/audio frontends (stub embeddings per the task
+carve-out).
+
+The stack is grouped by the repeating ``layer_pattern`` period and scanned
+with ``lax.scan`` over groups (keeps HLO size O(period), not O(layers) —
+essential for 52–72-layer dry-run compiles).  Parameters of each group are
+stacked along a leading ``num_groups`` axis.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ATTN, ATTN_LOCAL, MAMBA, MLSTM, SLSTM, ModelConfig
+from repro.models import attention as attn_mod
+from repro.models import moe as moe_mod
+from repro.models import ssm as ssm_mod
+from repro.models import xlstm as xlstm_mod
+from repro.models.attention import KVCache
+from repro.models.layers import (dense, embed, init_dense, init_embedding,
+                                 init_mlp, init_rmsnorm, mlp, rmsnorm, unembed)
+from repro.models.moe import Parallel
+from repro.utils import softcap as _softcap
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+
+def _init_layer(key, cfg: ModelConfig, p: int):
+    """One layer at period position p (absolute layer ≡ p mod period)."""
+    kind = cfg.layer_kind(p)
+    ks = jax.random.split(key, 6)
+    layer: dict[str, Any] = {"norm1": init_rmsnorm(ks[0], cfg.d_model)}
+    if kind in (ATTN, ATTN_LOCAL):
+        layer["mixer"] = attn_mod.init_attention(ks[1], cfg)
+    elif kind == MAMBA:
+        layer["mixer"] = ssm_mod.init_mamba(ks[1], cfg)
+    elif kind == MLSTM:
+        layer["mixer"] = xlstm_mod.init_mlstm(ks[1], cfg)
+    elif kind == SLSTM:
+        layer["mixer"] = xlstm_mod.init_slstm(ks[1], cfg)
+    else:
+        raise ValueError(kind)
+    has_ffn = cfg.uses_moe(p) or (cfg.d_ff > 0 and kind not in (MLSTM, SLSTM))
+    if has_ffn:
+        layer["norm2"] = init_rmsnorm(ks[2], cfg.d_model)
+        if cfg.uses_moe(p):
+            layer["moe"] = moe_mod.init_moe(ks[3], cfg)
+        else:
+            layer["mlp"] = init_mlp(ks[3], cfg.d_model, cfg.d_ff, cfg.gated_mlp)
+    if cfg.post_norms:
+        layer["post_norm1"] = init_rmsnorm(ks[4], cfg.d_model)
+        if has_ffn:
+            layer["post_norm2"] = init_rmsnorm(ks[5], cfg.d_model)
+    return layer
+
+
+def init_lm(key, cfg: ModelConfig):
+    key, gkey = jax.random.split(key)
+    ks = jax.random.split(key, 5)
+    params: dict[str, Any] = {}
+    params["embed"] = init_embedding(ks[0], cfg.padded_vocab, cfg.d_model)
+    if cfg.frontend != "token":
+        params["frontend_proj"] = init_dense(ks[1], cfg.frontend_dim, cfg.d_model)
+        if cfg.frontend == "audio_frames":
+            params["mask_embed"] = jax.random.normal(ks[2], (cfg.d_model,)) * 0.02
+    params["final_norm"] = init_rmsnorm(ks[3], cfg.d_model)
+    if not cfg.tie_embeddings and not cfg.is_encoder:
+        params["lm_head"] = init_dense(ks[4], cfg.d_model, cfg.padded_vocab)
+    if cfg.is_encoder:
+        params["enc_head"] = init_dense(ks[4], cfg.d_model, cfg.padded_vocab)
+
+    def init_group(gkey):
+        lkeys = jax.random.split(gkey, cfg.period)
+        return {f"p{p}": _init_layer(lkeys[p], cfg, p) for p in range(cfg.period)}
+
+    params["groups"] = jax.vmap(init_group)(jax.random.split(gkey, cfg.num_groups))
+    return params
+
+
+# ---------------------------------------------------------------------------
+# forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+
+def _embed_inputs(params, cfg: ModelConfig, batch):
+    """Returns (x (B,S,d), positions (B,S), loss_mask (B,S) or None)."""
+    dt = cfg.act_dtype
+    if cfg.frontend == "token":
+        tokens = batch["tokens"]
+        x = embed(params["embed"], tokens, dt)
+        B, S = tokens.shape
+        pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+        mask = None
+    elif cfg.frontend == "vision_patches":
+        tokens = batch["tokens"]
+        patches = batch["patches"].astype(dt)
+        xt = embed(params["embed"], tokens, dt)
+        xp = dense(params["frontend_proj"], patches)
+        x = jnp.concatenate([xp, xt], axis=1)
+        B, S = x.shape[:2]
+        pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+        mask = jnp.concatenate(
+            [jnp.zeros(xp.shape[:2], bool), jnp.ones(xt.shape[:2], bool)], axis=1)
+    elif cfg.frontend == "audio_frames":
+        frames = batch["frames"].astype(dt)
+        x = dense(params["frontend_proj"], frames)
+        m = batch["mask"]                                    # True = masked out
+        x = jnp.where(m[..., None], params["mask_embed"].astype(dt), x)
+        B, S = x.shape[:2]
+        pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+        mask = m
+    else:
+        raise ValueError(cfg.frontend)
+    if cfg.scale_embed:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, dt)
+    return x, pos, mask
+
+
+def _apply_layer(layer, cfg: ModelConfig, p: int, x, pos, par: Parallel,
+                 mode: str, cache=None, decode_pos=None):
+    """mode: train | prefill | decode.  Returns (x, aux, new_cache)."""
+    kind = cfg.layer_kind(p)
+    aux = jnp.zeros((), jnp.float32)
+    h = rmsnorm(layer["norm1"], x, cfg.norm_eps)
+    new_cache = None
+    if kind in (ATTN, ATTN_LOCAL):
+        if mode == "decode":
+            h, new_cache = attn_mod.attention_decode(layer["mixer"], cfg, h,
+                                                     cache, decode_pos, kind=kind)
+        else:
+            h, kv = attn_mod.attention(layer["mixer"], cfg, h, pos, kind=kind,
+                                       use_pallas=par.use_pallas,
+                                       impl=par.attn_impl, par=par)
+            if mode == "prefill":
+                new_cache = KVCache(*kv)
+    elif kind == MAMBA:
+        if mode == "decode":
+            h, new_cache = ssm_mod.mamba_decode(layer["mixer"], cfg, h, cache)
+        elif mode == "prefill":
+            h, new_cache = ssm_mod.mamba_forward(layer["mixer"], cfg, h,
+                                                 return_state=True)
+        else:
+            h = ssm_mod.mamba_forward(layer["mixer"], cfg, h)
+    elif kind == MLSTM:
+        if mode == "decode":
+            h, new_cache = xlstm_mod.mlstm_decode(layer["mixer"], cfg, h, cache)
+        elif mode == "prefill":
+            h, new_cache = xlstm_mod.mlstm_forward(layer["mixer"], cfg, h,
+                                                   return_state=True)
+        else:
+            h = xlstm_mod.mlstm_forward(layer["mixer"], cfg, h)
+    elif kind == SLSTM:
+        if mode == "decode":
+            h, new_cache = xlstm_mod.slstm_decode(layer["mixer"], cfg, h, cache)
+        elif mode == "prefill":
+            h, new_cache = xlstm_mod.slstm_forward(layer["mixer"], cfg, h,
+                                                   return_state=True)
+        else:
+            h = xlstm_mod.slstm_forward(layer["mixer"], cfg, h)
+    if cfg.post_norms:
+        h = rmsnorm(layer["post_norm1"], h, cfg.norm_eps)
+    x = x + h
+    if "moe" in layer or "mlp" in layer:
+        h = rmsnorm(layer["norm2"], x, cfg.norm_eps)
+        if "moe" in layer:
+            h, aux = moe_mod.moe_apply(layer["moe"], cfg, h, par)
+        else:
+            h = mlp(layer["mlp"], h, cfg.mlp_act)
+        if cfg.post_norms:
+            h = rmsnorm(layer["post_norm2"], h, cfg.norm_eps)
+        x = x + h
+    return x, aux, new_cache
+
+
+def _readout(params, cfg: ModelConfig, x, par: Parallel = Parallel()):
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    if cfg.is_encoder:
+        logits = dense(params["enc_head"], x)
+    elif cfg.tie_embeddings:
+        logits = unembed(params["embed"], x)
+    else:
+        logits = dense(params["lm_head"], x)
+    if cfg.final_softcap:
+        logits = _softcap(logits.astype(jnp.float32), cfg.final_softcap)
+    if par.logits_spec is not None:
+        logits = jax.lax.with_sharding_constraint(logits, par.logits_spec)
+    return logits
+
+
+def forward(params, cfg: ModelConfig, batch, par: Parallel = Parallel(),
+            *, mode: str = "train"):
+    """Full-sequence pass.
+
+    Returns (logits, aux_loss) for mode="train";
+    (logits, aux_loss, caches) for mode="prefill" (caches stacked per group).
+    """
+    x, pos, _ = _embed_inputs(params, cfg, batch)
+
+    def group_fn(carry, gparams):
+        x, aux = carry
+        new_caches = {}
+        for p in range(cfg.period):
+            x, aux_p, c = _apply_layer(gparams[f"p{p}"], cfg, p, x, pos, par, mode)
+            aux = aux + aux_p
+            if mode == "prefill":
+                new_caches[f"p{p}"] = c
+        if par.resid_spec is not None:
+            x = jax.lax.with_sharding_constraint(x, par.resid_spec)
+        return (x, aux), (new_caches if mode == "prefill" else None)
+
+    if cfg.remat == "full":
+        group_fn = jax.checkpoint(group_fn, prevent_cse=False)
+    elif cfg.remat == "dots":
+        group_fn = jax.checkpoint(
+            group_fn, prevent_cse=False,
+            policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+
+    (x, aux), caches = jax.lax.scan(group_fn, (x, jnp.zeros((), jnp.float32)),
+                                    params["groups"])
+    if mode == "prefill" and par.prefill_last_only:
+        # serving: only the last position's logits are needed to start
+        # decode — skips a (B,S,V) readout (+ its vocab-parallel collective)
+        logits = _readout(params, cfg, x[:, -1:, :], par)
+        return logits, aux, caches
+    logits = _readout(params, cfg, x, par)
+    if mode == "prefill":
+        return logits, aux, caches
+    return logits, aux
+
+
+# ---------------------------------------------------------------------------
+# loss
+# ---------------------------------------------------------------------------
+
+
+def loss_fn(params, cfg: ModelConfig, batch, par: Parallel = Parallel()):
+    """Causal-LM / masked-prediction loss.  Returns (loss, metrics)."""
+    logits, aux = forward(params, cfg, batch, par, mode="train")
+    logits = logits.astype(jnp.float32)
+    if cfg.is_encoder:
+        labels = batch["labels"]
+        m = batch["mask"]
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        nll = -jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+        denom = jnp.maximum(jnp.sum(m), 1)
+        ce = jnp.sum(nll * m) / denom
+    elif cfg.frontend == "vision_patches":
+        tokens = batch["tokens"]
+        P = batch["patches"].shape[1]
+        text_logits = logits[:, P:, :]
+        logp = jax.nn.log_softmax(text_logits[:, :-1], axis=-1)
+        nll = -jnp.take_along_axis(logp, tokens[:, 1:, None], axis=-1)[..., 0]
+        ce = jnp.mean(nll)
+    else:
+        tokens = batch["tokens"]
+        logp = jax.nn.log_softmax(logits[:, :-1], axis=-1)
+        nll = -jnp.take_along_axis(logp, tokens[:, 1:, None], axis=-1)[..., 0]
+        ce = jnp.mean(nll)
+    aux_w = cfg.moe.router_aux_weight if cfg.moe else 0.0
+    loss = ce + aux_w * aux / max(cfg.num_layers, 1)
+    return loss, {"ce": ce, "aux": aux}
+
+
+# ---------------------------------------------------------------------------
+# decode
+# ---------------------------------------------------------------------------
+
+
+def init_caches(cfg: ModelConfig, batch: int, max_len: int, dtype=None):
+    """Stacked (num_groups-leading) cache pytree for all layers."""
+    dtype = dtype or cfg.act_dtype
+
+    def one(p):
+        kind = cfg.layer_kind(p)
+        if kind in (ATTN, ATTN_LOCAL):
+            return attn_mod.init_kv_cache(cfg, batch, max_len, dtype)
+        if kind == MAMBA:
+            return ssm_mod.init_mamba_state(cfg, batch, dtype)
+        if kind == MLSTM:
+            return xlstm_mod.init_mlstm_state(cfg, batch, dtype)
+        if kind == SLSTM:
+            return xlstm_mod.init_slstm_state(cfg, batch, dtype)
+        raise ValueError(kind)
+
+    single = {f"p{p}": one(p) for p in range(cfg.period)}
+    return jax.tree.map(
+        lambda a: jnp.broadcast_to(a, (cfg.num_groups,) + a.shape).copy(), single)
+
+
+def decode_step(params, cfg: ModelConfig, tokens, caches, pos,
+                par: Parallel = Parallel()):
+    """One decode step.  tokens: (B,1) int32; pos: scalar int32 (current
+    write position).  Returns (logits (B,1,V), new caches).
+
+    The stacked caches ride the scan CARRY and are updated in place:
+    attention layers DUS one token at [g, :, pos]; recurrent layers
+    (mamba/xlstm) update their (small) per-group state slot.  This keeps
+    per-step HBM cache traffic at O(read) + O(token), not O(cache) —
+    see EXPERIMENTS.md §Perf (qwen3-32b × decode_32k iteration)."""
+    dt = cfg.act_dtype
+    x = embed(params["embed"], tokens, dt)
+    if cfg.scale_embed:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, dt)
+
+    if par.decode_cache != "carry":
+        def group_fn_ys(x, scanned):
+            gparams, gcache = scanned
+            new_caches = {}
+            for p in range(cfg.period):
+                x, _, c = _apply_layer(gparams[f"p{p}"], cfg, p, x, None, par,
+                                       "decode", cache=gcache[f"p{p}"],
+                                       decode_pos=pos)
+                new_caches[f"p{p}"] = c
+            return x, new_caches
+
+        x, new_caches = jax.lax.scan(group_fn_ys, x, (params["groups"], caches))
+        logits = _readout(params, cfg, x, par)
+        return logits, new_caches
+
+    def group_fn(carry, scanned):
+        x, caches = carry
+        gparams, g = scanned
+        for p in range(cfg.period):
+            kind = cfg.layer_kind(p)
+            layer = gparams[f"p{p}"]
+            if kind in (ATTN, ATTN_LOCAL):
+                h = rmsnorm(layer["norm1"], x, cfg.norm_eps)
+                h, new_kv = attn_mod.attention_decode_stacked(
+                    layer["mixer"], cfg, h, caches[f"p{p}"], g, pos, kind=kind)
+                if cfg.post_norms:
+                    h = rmsnorm(layer["post_norm1"], h, cfg.norm_eps)
+                x = x + h
+                caches = dict(caches, **{f"p{p}": new_kv})
+                if "moe" in layer or "mlp" in layer:
+                    h = rmsnorm(layer["norm2"], x, cfg.norm_eps)
+                    if "moe" in layer:
+                        h, _ = moe_mod.moe_apply(layer["moe"], cfg, h, par)
+                    else:
+                        h = mlp(layer["mlp"], h, cfg.mlp_act)
+                    if cfg.post_norms:
+                        h = rmsnorm(layer["post_norm2"], h, cfg.norm_eps)
+                    x = x + h
+            else:
+                gcache = jax.tree.map(
+                    lambda c: jax.lax.dynamic_index_in_dim(c, g, 0,
+                                                           keepdims=False),
+                    caches[f"p{p}"])
+                x, _, new_c = _apply_layer(layer, cfg, p, x, None, par,
+                                           "decode", cache=gcache,
+                                           decode_pos=pos)
+                stacked = jax.tree.map(
+                    lambda allc, n: jax.lax.dynamic_update_index_in_dim(
+                        allc, n.astype(allc.dtype), g, 0),
+                    caches[f"p{p}"], new_c)
+                caches = dict(caches, **{f"p{p}": stacked})
+        return (x, caches), None
+
+    G = cfg.num_groups
+    (x, new_caches), _ = jax.lax.scan(
+        group_fn, (x, caches), (params["groups"], jnp.arange(G)))
+    logits = _readout(params, cfg, x, par)
+    return logits, new_caches

@@ -1,0 +1,285 @@
+"""xLSTM blocks (arXiv:2405.04517): mLSTM (matrix memory) and sLSTM
+(scalar memory), both with exponential gating and max-stabilisers.
+
+mLSTM is computed *chunkwise-parallel* (linear-attention style): intra-chunk
+quadratic matmuls feed the MXU, inter-chunk state is carried by an outer
+``lax.scan``.  The chunkwise form is algebraically identical to the paper's
+recurrence (the running stabiliser ``m_t = max_s (lf_t - lf_s + i_s, lf_t +
+m_0)`` telescopes), verified against the step-by-step recurrence in tests.
+
+sLSTM has a true hidden-state recurrence (gates see h_{t-1}), so it runs as
+a sequential ``lax.scan`` — O(1) state makes 500k-context decode native.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, XLSTMConfig
+from repro.models.layers import init_rmsnorm, rmsnorm
+from repro.utils import lecun_init, zeros_init
+
+NEG = -1e30
+
+
+class MLSTMState(NamedTuple):
+    C: jax.Array   # (B, H, hd, hd) matrix memory
+    n: jax.Array   # (B, H, hd) normaliser
+    m: jax.Array   # (B, H) stabiliser
+    conv: jax.Array  # (B, K-1, din) conv window
+
+
+class SLSTMState(NamedTuple):
+    h: jax.Array   # (B, d)
+    c: jax.Array   # (B, d)
+    n: jax.Array   # (B, d)
+    m: jax.Array   # (B, d)
+
+
+def _xc(cfg: ModelConfig) -> XLSTMConfig:
+    return cfg.xlstm or XLSTMConfig()
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+def init_mlstm(key, cfg: ModelConfig):
+    xc = _xc(cfg)
+    d, H = cfg.d_model, cfg.num_heads
+    din = int(xc.proj_factor * d)
+    ks = jax.random.split(key, 10)
+    return {
+        "in_proj": {"w": lecun_init(ks[0], (d, 2 * din))},
+        "conv_w": lecun_init(ks[1], (xc.conv_kernel, din)),
+        "conv_b": zeros_init(ks[2], (din,)),
+        "wq": {"w": lecun_init(ks[3], (din, din))},
+        "wk": {"w": lecun_init(ks[4], (din, din))},
+        "wv": {"w": lecun_init(ks[5], (din, din))},
+        "w_igate": {"w": lecun_init(ks[6], (din, H)), "b": zeros_init(ks[6], (H,))},
+        "w_fgate": {"w": lecun_init(ks[7], (din, H)),
+                    "b": jnp.full((H,), 3.0, jnp.float32)},  # open forget gates
+        "head_norm": init_rmsnorm(ks[8], din),
+        "out_proj": {"w": lecun_init(ks[9], (din, d), fan_in_axes=(0,))},
+    }
+
+
+def _conv_silu(x, w, b):
+    K = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + x.shape[1], :] * w[i].astype(x.dtype) for i in range(K))
+    return jax.nn.silu(out + b.astype(x.dtype))
+
+
+def _mlstm_chunk(q, k, v, ig, lf, state):
+    """One chunk of the stabilised chunkwise mLSTM.
+
+    q,k,v: (B,H,L,hd) (k pre-scaled by hd^-0.5); ig/lf: (B,H,L) input-gate
+    logits and log-sigmoid forget logits; state: (C0 (B,H,hd,hd), n0, m0).
+    Returns (h (B,H,L,hd), new state tuple).
+    """
+    C0, n0, m0 = state
+    B, H, L, hd = q.shape
+    lfc = jnp.cumsum(lf, axis=-1)                                # (B,H,L)
+    # intra-chunk log weights a[t,s] = lfc_t - lfc_s + ig_s, s <= t
+    A = lfc[..., :, None] - lfc[..., None, :] + ig[..., None, :]
+    tri = jnp.tril(jnp.ones((L, L), bool))
+    A = jnp.where(tri, A, NEG)
+    b = lfc + m0[..., None]                                      # inter log weight
+    m_t = jnp.maximum(jnp.max(A, axis=-1), b)                    # (B,H,L)
+    D = jnp.exp(A - m_t[..., None])                              # (B,H,L,L)
+    ib = jnp.exp(b - m_t)                                        # (B,H,L)
+    S_qk = jnp.einsum("bhtd,bhsd->bhts", q, k)
+    num = jnp.einsum("bhts,bhsd->bhtd", S_qk * D, v)
+    num = num + ib[..., None] * jnp.einsum("bhtd,bhdv->bhtv", q, C0)
+    n_t = jnp.einsum("bhts,bhsd->bhtd", D, k) + ib[..., None] * n0[..., None, :]
+    denom = jnp.maximum(jnp.abs(jnp.einsum("bhtd,bhtd->bht", n_t, q)),
+                        jnp.exp(-m_t))
+    h = num / denom[..., None]
+    # ---- chunk-end state ----
+    lf_end = lfc[..., -1]
+    w_log = lf_end[..., None] - lfc + ig                         # (B,H,L)
+    m_new = jnp.maximum(lf_end + m0, jnp.max(w_log, axis=-1))
+    w = jnp.exp(w_log - m_new[..., None])
+    carry_scale = jnp.exp(lf_end + m0 - m_new)
+    C_new = carry_scale[..., None, None] * C0 + jnp.einsum("bhs,bhsd,bhsv->bhdv", w, k, v)
+    n_new = carry_scale[..., None] * n0 + jnp.einsum("bhs,bhsd->bhd", w, k)
+    return h, (C_new, n_new, m_new)
+
+
+def mlstm_forward(params, cfg: ModelConfig, x, *, chunk: int = 256,
+                  return_state: bool = False):
+    xc = _xc(cfg)
+    H = cfg.num_heads
+    B, S, d = x.shape
+    din = int(xc.proj_factor * d)
+    hd = din // H
+    xm, z = jnp.split(x @ params["in_proj"]["w"].astype(x.dtype), 2, axis=-1)
+    xconv = _conv_silu(xm, params["conv_w"], params["conv_b"])
+
+    def heads(t):  # (B,S,din) -> (B,H,S,hd) float32
+        return t.reshape(B, S, H, hd).transpose(0, 2, 1, 3).astype(jnp.float32)
+
+    q = heads(xconv @ params["wq"]["w"].astype(x.dtype))
+    k = heads(xconv @ params["wk"]["w"].astype(x.dtype)) * (hd ** -0.5)
+    v = heads(xm @ params["wv"]["w"].astype(x.dtype))
+    ig = (xm @ params["w_igate"]["w"].astype(x.dtype) + params["w_igate"]["b"].astype(x.dtype))
+    fg = (xm @ params["w_fgate"]["w"].astype(x.dtype) + params["w_fgate"]["b"].astype(x.dtype))
+    ig = ig.transpose(0, 2, 1).astype(jnp.float32)               # (B,H,S)
+    lf = jax.nn.log_sigmoid(fg.transpose(0, 2, 1).astype(jnp.float32))
+
+    L = min(chunk, S)
+    assert S % L == 0
+    nc = S // L
+
+    def to_chunks(t, trailing):
+        return t.reshape(B, H, nc, L, *trailing).transpose(2, 0, 1, 3, *range(4, 4 + len(trailing)))
+
+    qc, kc, vc = (to_chunks(t, (hd,)) for t in (q, k, v))
+    igc, lfc = (to_chunks(t, ()) for t in (ig, lf))
+
+    def step(state, inp):
+        qi, ki, vi, igi, lfi = inp
+        h, new_state = _mlstm_chunk(qi, ki, vi, igi, lfi, state)
+        return new_state, h
+
+    C0 = jnp.zeros((B, H, hd, hd), jnp.float32)
+    n0 = jnp.zeros((B, H, hd), jnp.float32)
+    m0 = jnp.full((B, H), NEG, jnp.float32)
+    state, h_chunks = jax.lax.scan(step, (C0, n0, m0), (qc, kc, vc, igc, lfc))
+    h = h_chunks.transpose(1, 2, 0, 3, 4).reshape(B, H, S, hd)
+    h = h.transpose(0, 2, 1, 3).reshape(B, S, din).astype(x.dtype)
+    h = rmsnorm(params["head_norm"], h, cfg.norm_eps)
+    out = (h * jax.nn.silu(z)) @ params["out_proj"]["w"].astype(x.dtype)
+    if return_state:
+        conv_tail = xm[:, -(xc.conv_kernel - 1):, :]
+        return out, MLSTMState(state[0], state[1], state[2], conv_tail)
+    return out
+
+
+def mlstm_decode(params, cfg: ModelConfig, x, state: MLSTMState):
+    """x: (B,1,d) single-token step."""
+    xc = _xc(cfg)
+    H = cfg.num_heads
+    B, _, d = x.shape
+    din = int(xc.proj_factor * d)
+    hd = din // H
+    xm, z = jnp.split(x @ params["in_proj"]["w"].astype(x.dtype), 2, axis=-1)
+    win = jnp.concatenate([state.conv, xm], axis=1)              # (B,K,din)
+    w = params["conv_w"].astype(x.dtype)
+    xconv = jax.nn.silu(jnp.einsum("bkd,kd->bd", win, w) + params["conv_b"].astype(x.dtype))
+
+    def heads(t):
+        return t.reshape(B, H, hd).astype(jnp.float32)
+
+    q = heads(xconv @ params["wq"]["w"].astype(x.dtype))
+    k = heads(xconv @ params["wk"]["w"].astype(x.dtype)) * (hd ** -0.5)
+    v = heads(xm[:, 0] @ params["wv"]["w"].astype(x.dtype))
+    ig = (xm[:, 0] @ params["w_igate"]["w"].astype(x.dtype) + params["w_igate"]["b"].astype(x.dtype)).astype(jnp.float32)
+    lf = jax.nn.log_sigmoid((xm[:, 0] @ params["w_fgate"]["w"].astype(x.dtype) + params["w_fgate"]["b"].astype(x.dtype)).astype(jnp.float32))
+    m_new = jnp.maximum(lf + state.m, ig)
+    fs = jnp.exp(lf + state.m - m_new)
+    is_ = jnp.exp(ig - m_new)
+    C = fs[..., None, None] * state.C + is_[..., None, None] * jnp.einsum("bhd,bhv->bhdv", k, v)
+    n = fs[..., None] * state.n + is_[..., None] * k
+    num = jnp.einsum("bhd,bhdv->bhv", q, C)
+    denom = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", n, q)), jnp.exp(-m_new))
+    h = (num / denom[..., None]).reshape(B, din).astype(x.dtype)
+    h = rmsnorm(params["head_norm"], h, cfg.norm_eps)
+    out = (h[:, None, :] * jax.nn.silu(z)) @ params["out_proj"]["w"].astype(x.dtype)
+    return out, MLSTMState(C, n, m_new, win[:, 1:])
+
+
+def init_mlstm_state(cfg: ModelConfig, batch: int, dtype) -> MLSTMState:
+    xc = _xc(cfg)
+    H = cfg.num_heads
+    din = int(xc.proj_factor * cfg.d_model)
+    hd = din // H
+    return MLSTMState(
+        jnp.zeros((batch, H, hd, hd), jnp.float32),
+        jnp.zeros((batch, H, hd), jnp.float32),
+        jnp.full((batch, H), NEG, jnp.float32),
+        jnp.zeros((batch, xc.conv_kernel - 1, din), dtype))
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+def init_slstm(key, cfg: ModelConfig):
+    xc = _xc(cfg)
+    d, H = cfg.d_model, cfg.num_heads
+    hd = d // H
+    dff = int(xc.slstm_proj_factor * d)
+    ks = jax.random.split(key, 7)
+    return {
+        # input weights for gates z,i,f,o stacked: (d, 4d)
+        "w_x": {"w": lecun_init(ks[0], (d, 4 * d))},
+        # block-diagonal recurrent weights per head: (H, hd, 4*hd)
+        "w_r": lecun_init(ks[1], (H, hd, 4 * hd)),
+        "b": jnp.concatenate([jnp.zeros((2 * d,)), jnp.full((d,), 3.0),
+                              jnp.zeros((d,))]).astype(jnp.float32),
+        "head_norm": init_rmsnorm(ks[2], d),
+        "up_proj": {"w": lecun_init(ks[3], (d, 2 * dff))},
+        "down_proj": {"w": lecun_init(ks[4], (dff, d), fan_in_axes=(0,))},
+    }
+
+
+def _slstm_cell(params, cfg: ModelConfig, xg, state: SLSTMState):
+    """One time step.  xg: (B, 4d) pre-computed input contribution."""
+    H = cfg.num_heads
+    d = cfg.d_model
+    hd = d // H
+    B = xg.shape[0]
+    h_heads = state.h.reshape(B, H, hd)
+    rec = jnp.einsum("bhd,hde->bhe", h_heads, params["w_r"]).reshape(B, 4 * d)
+    g = (xg + rec + params["b"]).astype(jnp.float32)
+    zt, it, ft, ot = jnp.split(g, 4, axis=-1)
+    z = jnp.tanh(zt)
+    o = jax.nn.sigmoid(ot)
+    lf = jax.nn.log_sigmoid(ft)
+    m_new = jnp.maximum(lf + state.m, it)
+    fs = jnp.exp(lf + state.m - m_new)
+    is_ = jnp.exp(it - m_new)
+    c = fs * state.c + is_ * z
+    n = fs * state.n + is_
+    h = o * c / jnp.maximum(n, 1e-6)
+    return SLSTMState(h, c, n, m_new)
+
+
+def slstm_forward(params, cfg: ModelConfig, x, *, return_state: bool = False):
+    B, S, d = x.shape
+    xg = x @ params["w_x"]["w"].astype(x.dtype)                  # (B,S,4d)
+
+    def step(state, xg_t):
+        new = _slstm_cell(params, cfg, xg_t, state)
+        return new, new.h
+
+    state0 = init_slstm_state(cfg, B, x.dtype)
+    state, hs = jax.lax.scan(step, state0, xg.swapaxes(0, 1))
+    h = hs.swapaxes(0, 1).astype(x.dtype)                        # (B,S,d)
+    h = rmsnorm(params["head_norm"], h, cfg.norm_eps)
+    up, gate = jnp.split(h @ params["up_proj"]["w"].astype(x.dtype), 2, axis=-1)
+    out = (up * jax.nn.gelu(gate, approximate=True)) @ params["down_proj"]["w"].astype(x.dtype)
+    if return_state:
+        return out, state
+    return out
+
+
+def slstm_decode(params, cfg: ModelConfig, x, state: SLSTMState):
+    B = x.shape[0]
+    xg = (x[:, 0] @ params["w_x"]["w"].astype(x.dtype))
+    new = _slstm_cell(params, cfg, xg, state)
+    h = new.h.astype(x.dtype)[:, None, :]
+    h = rmsnorm(params["head_norm"], h, cfg.norm_eps)
+    up, gate = jnp.split(h @ params["up_proj"]["w"].astype(x.dtype), 2, axis=-1)
+    out = (up * jax.nn.gelu(gate, approximate=True)) @ params["down_proj"]["w"].astype(x.dtype)
+    return out, new
+
+
+def init_slstm_state(cfg: ModelConfig, batch: int, dtype) -> SLSTMState:
+    d = cfg.d_model
+    z = jnp.zeros((batch, d), jnp.float32)
+    return SLSTMState(z, z, z, jnp.full((batch, d), NEG, jnp.float32))

@@ -1,0 +1,3 @@
+from repro.optim.optimizers import (adamw, apply_updates, clip_by_global_norm,
+                                    cosine_schedule, init_adamw, init_sgdm,
+                                    sgdm)

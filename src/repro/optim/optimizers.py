@@ -1,0 +1,83 @@
+"""Optimizers (pure-JAX, no optax): AdamW, SGD+momentum, schedules.
+
+Optimizer state mirrors the parameter pytree, so the sharding rules that
+partition a parameter partition its moments identically (ZeRO-style).
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    mu: any
+    nu: any
+
+
+class SGDMState(NamedTuple):
+    step: jax.Array
+    momentum: any
+
+
+def init_adamw(params) -> AdamWState:
+    z = lambda: jax.tree.map(jnp.zeros_like, params)
+    return AdamWState(jnp.zeros((), jnp.int32), z(), z())
+
+
+def adamw(grads, state: AdamWState, params, *, lr, b1=0.9, b2=0.95,
+          eps=1e-8, weight_decay=0.0):
+    """Returns (updates, new_state).  ``lr`` may be a scalar or callable."""
+    step = state.step + 1
+    if callable(lr):
+        lr = lr(step)
+    mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g, state.mu, grads)
+    nu = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * jnp.square(g), state.nu, grads)
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+    def upd(m, v, p):
+        mhat = m / bc1
+        vhat = v / bc2
+        return -lr * (mhat / (jnp.sqrt(vhat) + eps) + weight_decay * p)
+    updates = jax.tree.map(upd, mu, nu, params)
+    return updates, AdamWState(step, mu, nu)
+
+
+def init_sgdm(params) -> SGDMState:
+    return SGDMState(jnp.zeros((), jnp.int32),
+                     jax.tree.map(jnp.zeros_like, params))
+
+
+def sgdm(grads, state: SGDMState, params, *, lr, momentum=0.9,
+         weight_decay=0.0):
+    step = state.step + 1
+    if callable(lr):
+        lr = lr(step)
+    mom = jax.tree.map(lambda m, g, p: momentum * m + g + weight_decay * p,
+                       state.momentum, grads, params)
+    updates = jax.tree.map(lambda m: -lr * m, mom)
+    return updates, SGDMState(step, mom)
+
+
+def apply_updates(params, updates):
+    return jax.tree.map(lambda p, u: (p + u.astype(p.dtype)), params, updates)
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    gn = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                      for g in jax.tree.leaves(grads)))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-9))
+    return jax.tree.map(lambda g: g * scale.astype(g.dtype), grads), gn
+
+
+def cosine_schedule(base_lr: float, warmup: int, total: int, min_frac: float = 0.1):
+    def lr(step):
+        step = step.astype(jnp.float32) if hasattr(step, "astype") else float(step)
+        warm = base_lr * step / max(warmup, 1)
+        prog = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = base_lr * (min_frac + (1 - min_frac) * 0.5 * (1 + jnp.cos(math.pi * prog)))
+        return jnp.where(step < warmup, warm, cos)
+    return lr

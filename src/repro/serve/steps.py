@@ -1,0 +1,33 @@
+"""Serving steps: prefill (batch context ingest) and decode (one token
+against the KV cache / recurrent state)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.moe import Parallel
+from repro.models.transformer import decode_step, forward
+
+
+def make_prefill_step(cfg: ModelConfig, par: Parallel = Parallel()):
+    """prefill_step(params, batch) -> (last_logits, caches)."""
+
+    def prefill_step(params, batch):
+        logits, _, caches = forward(params, cfg, batch, par, mode="prefill")
+        return logits[:, -1:, :], caches
+
+    return prefill_step
+
+
+def make_serve_step(cfg: ModelConfig, par: Parallel = Parallel(), *,
+                    greedy: bool = True):
+    """serve_step(params, tokens (B,1), caches, pos) ->
+    (next_token (B,1), logits, caches)."""
+
+    def serve_step(params, tokens, caches, pos):
+        logits, caches = decode_step(params, cfg, tokens, caches, pos, par)
+        nxt = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)[:, None]
+        return nxt, logits, caches
+
+    return serve_step

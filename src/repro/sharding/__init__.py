@@ -1,0 +1,2 @@
+from repro.sharding.rules import (MeshAxes, batch_specs, cache_specs,
+                                  param_specs, to_shardings)

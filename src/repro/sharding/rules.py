@@ -1,0 +1,212 @@
+"""Partition rules: parameter/optimizer/cache/batch PartitionSpecs.
+
+Layout (DESIGN.md §6):
+* ``model`` axis — tensor parallel: attention heads, FFN hidden, experts,
+  vocab.
+* ``data`` axes (("pod","data") or ("data",)) — batch parallel; parameters
+  are *additionally* sharded over the data axes on their non-model dim
+  (FSDP/ZeRO-style), which is what lets 20B–398B × Adam fit per chip.
+* Norm scales and other small vectors are replicated.
+
+Rules match on parameter path suffixes produced by the model's naming
+convention; stacked scan groups contribute a leading ``num_groups`` dim
+which is never sharded.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import InputShape, ModelConfig
+from repro.utils import tree_map_with_path
+
+
+@dataclass(frozen=True)
+class MeshAxes:
+    data: tuple            # ("pod", "data") or ("data",)
+    model: str             # "model"
+
+    @property
+    def all_data(self):
+        return self.data if len(self.data) > 1 else self.data[0]
+
+
+# (path-suffix, spec-builder) rules; first match wins.  Specs are for the
+# *unstacked* param; a leading None is prepended for scan-group stacking.
+def _rules(ax: MeshAxes):
+    D, M = ax.all_data, ax.model
+    return [
+        ("embed/embedding", P(M, D)),
+        ("lm_head/w", P(D, M)),
+        ("enc_head/w", P(D, M)),
+        ("frontend_proj/w", P(None, M)),
+        ("mask_embed", P()),
+        # attention + mlstm projections
+        ("wq/w", P(D, M)), ("wk/w", P(D, M)), ("wv/w", P(D, M)),
+        ("wq/b", P(M)), ("wk/b", P(M)), ("wv/b", P(M)),
+        ("wo/w", P(M, D)),
+        # mlp
+        ("w_up/w", P(D, M)), ("w_gate/w", P(D, M)), ("w_down/w", P(M, D)),
+        ("mlp/w_up", P(D, M)), ("mlp/w_gate", P(D, M)), ("mlp/w_down", P(M, D)),
+        # moe
+        ("w_router", P(D, None)),
+        ("experts_up", P(M, D, None)),
+        ("experts_gate", P(M, D, None)),
+        ("experts_down", P(M, None, D)),
+        # mamba
+        ("in_proj/w", P(D, M)),
+        ("conv_w", P(None, M)), ("conv_b", P(M)),
+        ("x_proj/w", P(M, None)),
+        ("dt_proj/w", P(None, M)), ("dt_proj/b", P(M)),
+        ("A_log", P(M, None)), ("D", P(M)),
+        ("out_proj/w", P(M, D)),
+        # xlstm
+        ("w_igate/w", P(D, None)), ("w_igate/b", P()),
+        ("w_fgate/w", P(D, None)), ("w_fgate/b", P()),
+        ("w_x/w", P(D, M)), ("w_r", P()),
+        ("up_proj/w", P(D, M)), ("down_proj/w", P(M, D)),
+        # norms / scalars (must come after the specific rules)
+        ("scale", P()), ("bias", P()), ("/b", P()),
+    ]
+
+
+def _serve2d_rules(ax: MeshAxes):
+    """Serving layout (§Perf): weights sharded on their OUTPUT dim over the
+    *combined* (data × model) device set — decode then all-gathers
+    activation-sized tensors per step instead of parameter-sized FSDP
+    gathers.  MoE expert slabs keep the train layout (the shard_map EP path
+    pins experts to the model axis)."""
+    D, M = ax.all_data, ax.model
+    DM = (tuple(ax.data) + (M,)) if isinstance(D, tuple) else (D, M)
+    return [
+        ("embed/embedding", P(DM, None)),
+        ("lm_head/w", P(None, DM)),
+        ("enc_head/w", P(None, DM)),
+        ("wq/w", P(None, DM)), ("wk/w", P(None, DM)), ("wv/w", P(None, DM)),
+        ("wq/b", P(DM)), ("wk/b", P(DM)), ("wv/b", P(DM)),
+        ("wo/w", P(DM, None)),
+        ("mlp/w_up", P(None, DM)), ("mlp/w_gate", P(None, DM)),
+        ("mlp/w_down", P(DM, None)),
+        ("in_proj/w", P(None, DM)),
+        ("conv_w", P(None, DM)), ("conv_b", P(DM)),
+        ("x_proj/w", P(DM, None)),
+        ("dt_proj/w", P(None, DM)), ("dt_proj/b", P(DM)),
+        ("A_log", P(DM, None)), ("D", P(DM)),
+        ("out_proj/w", P(DM, None)),
+        ("w_x/w", P(None, DM)),
+        ("up_proj/w", P(None, DM)), ("down_proj/w", P(DM, None)),
+    ]
+
+
+def _shard_count(entry, ax: MeshAxes) -> int:
+    if entry is None:
+        return 1
+    sizes = {"model": 16, "data": 16, "pod": 2}
+    names = entry if isinstance(entry, tuple) else (entry,)
+    return int(np.prod([sizes.get(n, 1) for n in names]))
+
+
+def _spec_for(path: str, shape, ax: MeshAxes, mode: str = "train"):
+    ndim = len(shape)
+    stacked = path.startswith("groups/")
+    base_ndim = ndim - 1 if stacked else ndim
+    base_shape = shape[1:] if stacked else shape
+
+    def resolve(rules):
+        for suffix, spec in rules:
+            if path.endswith(suffix):
+                s = tuple(spec)
+                if len(s) < base_ndim:
+                    s = s + (None,) * (base_ndim - len(s))
+                s = s[:base_ndim]
+                return s
+        return None
+
+    spec = None
+    if mode == "serve2d":
+        s = resolve(_serve2d_rules(ax))
+        if s is not None and all(
+                dim % _shard_count(e, ax) == 0
+                for dim, e in zip(base_shape, s)):
+            spec = s
+    if spec is None:
+        spec = resolve(_rules(ax)) or ()
+    if mode == "serve1d":
+        # serving: drop the FSDP (data-axis) factors — weights live sharded
+        # over `model` only, so decode never all-gathers parameters.
+        def strip(e):
+            if e is None:
+                return None
+            names = e if isinstance(e, tuple) else (e,)
+            kept = tuple(n for n in names if n == ax.model)
+            return kept[0] if len(kept) == 1 else (kept or None)
+        spec = tuple(strip(e) for e in spec)
+    if stacked:
+        spec = (None,) + tuple(spec)
+    return P(*spec)
+
+
+def param_specs(params, ax: MeshAxes, mode: str = "train"):
+    """PartitionSpec pytree mirroring ``params`` (works on SDS trees).
+
+    mode="train": TP over model axis + FSDP over data axes.
+    mode="serve2d": output-dim sharding over all devices (decode layout)."""
+    return tree_map_with_path(
+        lambda p, leaf: _spec_for(p, leaf.shape, ax, mode), params)
+
+
+def batch_specs(cfg: ModelConfig, shape: InputShape, ax: MeshAxes, batch_sharded: bool):
+    """Specs for the input batch pytree of a train/prefill step."""
+    bdim = ax.all_data if batch_sharded else None
+    if cfg.frontend == "token":
+        return {"tokens": P(bdim, None)}
+    if cfg.frontend == "vision_patches":
+        return {"patches": P(bdim, None, None), "tokens": P(bdim, None)}
+    if cfg.frontend == "audio_frames":
+        return {"frames": P(bdim, None, None), "mask": P(bdim, None),
+                "labels": P(bdim, None)}
+    raise ValueError(cfg.frontend)
+
+
+def cache_specs(cfg: ModelConfig, shape: InputShape, ax: MeshAxes,
+                batch_sharded: bool, caches_sds):
+    """Specs for the decode cache pytree (stacked leading group dim).
+
+    * batch shardable (decode_32k): batch → data axes, KV seq → model.
+    * batch=1 (long_500k): KV seq → (data, model) — context parallel;
+      recurrent-state channel dims → model.
+    """
+    from repro.models.attention import KVCache
+    from repro.models.ssm import MambaState
+    from repro.models.xlstm import MLSTMState, SLSTMState
+
+    D, M = ax.all_data, ax.model
+    bdim = D if batch_sharded else None
+    seq_dims = M if batch_sharded else (D, M) if isinstance(D, str) else (*ax.data, M)
+
+    def spec_tree(cache):
+        if isinstance(cache, KVCache):
+            s = P(None, bdim, seq_dims, None, None)
+            return KVCache(s, s)
+        if isinstance(cache, MambaState):
+            return MambaState(P(None, bdim, M, None), P(None, bdim, None, M))
+        if isinstance(cache, MLSTMState):
+            return MLSTMState(P(None, bdim, None, None, None),
+                              P(None, bdim, None, None), P(None, bdim, None),
+                              P(None, bdim, None, M))
+        if isinstance(cache, SLSTMState):
+            s = P(None, bdim, None)
+            return SLSTMState(s, s, s, s)
+        raise TypeError(type(cache))
+
+    return {k: spec_tree(v) for k, v in caches_sds.items()}
+
+
+def to_shardings(spec_tree, mesh):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P))

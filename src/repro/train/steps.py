@@ -1,0 +1,41 @@
+"""Train-step factory for the LM zoo (used by the launcher and dry-run)."""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.moe import Parallel
+from repro.models.transformer import init_lm, loss_fn
+from repro.optim import adamw, apply_updates, clip_by_global_norm, init_adamw
+from repro.optim.optimizers import AdamWState
+
+
+class TrainState(NamedTuple):
+    params: dict
+    opt: AdamWState
+
+
+def init_train_state(key, cfg: ModelConfig) -> TrainState:
+    params = init_lm(key, cfg)
+    return TrainState(params, init_adamw(params))
+
+
+def make_train_step(cfg: ModelConfig, par: Parallel = Parallel(), *,
+                    lr=3e-4, weight_decay: float = 0.1,
+                    clip_norm: float = 1.0):
+    """Returns train_step(state, batch) -> (state, metrics)."""
+
+    def train_step(state: TrainState, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            lambda p: loss_fn(p, cfg, batch, par), has_aux=True)(state.params)
+        grads, gnorm = clip_by_global_norm(grads, clip_norm)
+        updates, opt = adamw(grads, state.opt, state.params, lr=lr,
+                             weight_decay=weight_decay)
+        params = apply_updates(state.params, updates)
+        metrics = dict(metrics, loss=loss, grad_norm=gnorm)
+        return TrainState(params, opt), metrics
+
+    return train_step

@@ -1,0 +1,91 @@
+"""Data-generator and frozen-encoder invariants (property-based)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.configs.oscar import DataConfig
+from repro.data.federated import make_federated_data
+from repro.encoders.foundation import FrozenFM, category_encodings
+
+
+@pytest.fixture(scope="module")
+def data():
+    return make_federated_data(DataConfig(num_categories=5,
+                                          train_per_cat_dom=8,
+                                          test_per_cat_dom=4))
+
+
+def test_feature_skew_partition(data):
+    """Paper §V-b: every client owns exactly one domain, all categories."""
+    R = data.client_images.shape[0]
+    for r in range(R):
+        assert set(np.unique(data.client_domains[r])) == {r}
+        assert set(np.unique(data.client_labels[r])) == set(range(5))
+
+
+def test_images_in_range(data):
+    assert data.client_images.min() >= -1.0
+    assert data.client_images.max() <= 1.0
+    assert data.client_images.dtype == np.float32
+
+
+def test_determinism():
+    dc = DataConfig(num_categories=3, train_per_cat_dom=4, test_per_cat_dom=2)
+    a = make_federated_data(dc)
+    b = make_federated_data(dc)
+    assert np.array_equal(a.client_images, b.client_images)
+    assert np.array_equal(a.test_labels, b.test_labels)
+
+
+def test_encoder_deterministic_and_normalised(data):
+    fm = FrozenFM()
+    z1 = np.asarray(fm(data.test_images[:16]))
+    z2 = np.asarray(fm(data.test_images[:16]))
+    assert np.array_equal(z1, z2)
+    assert z1.shape == (16, 512)
+    assert np.allclose(np.linalg.norm(z1, axis=-1), 1.0, atol=1e-4)
+
+
+def test_encoder_category_structure(data):
+    """Same-category encodings are closer than cross-category on average —
+    the geometric property OSCAR's Eq. 7 mean-pooling relies on."""
+    fm = FrozenFM()
+    x = data.test_images
+    y = data.test_labels
+    z = np.asarray(fm(x))
+    sims = z @ z.T
+    same = sims[y[:, None] == y[None, :]].mean()
+    diff = sims[y[:, None] != y[None, :]].mean()
+    assert same > diff + 0.05
+
+
+def test_category_encodings_unit_norm_and_present(data):
+    fm = FrozenFM()
+    m, present = category_encodings(fm, data.client_images[0],
+                                    jnp.asarray(data.client_labels[0]), 5)
+    assert bool(jnp.all(present))
+    norms = jnp.linalg.norm(m, axis=-1)
+    assert bool(jnp.all(jnp.abs(norms - 1.0) < 1e-4))
+
+
+def test_absent_category_is_zero(data):
+    fm = FrozenFM()
+    # restrict client 0 to labels != 0
+    mask = data.client_labels[0] != 0
+    m, present = category_encodings(fm, data.client_images[0][mask],
+                                    jnp.asarray(data.client_labels[0][mask]), 5)
+    assert not bool(present[0])
+    assert float(jnp.linalg.norm(m[0])) == 0.0
+
+
+@given(seed=st.integers(0, 10_000))
+@settings(max_examples=10, deadline=None)
+def test_encoder_norm_invariant_any_input(seed):
+    rng = np.random.default_rng(seed)
+    fm = FrozenFM()
+    x = rng.uniform(-1, 1, size=(3, 16, 16, 3)).astype(np.float32)
+    z = np.asarray(fm(x))
+    assert np.all(np.isfinite(z))
+    assert np.allclose(np.linalg.norm(z, axis=-1), 1.0, atol=1e-4)

@@ -1,0 +1,46 @@
+"""Integration test: the multi-pod dry-run pipeline end to end, as a
+subprocess (it must own the 512-device XLA flag before jax init)."""
+import json
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+ROOT = Path(__file__).resolve().parents[1]
+
+
+@pytest.mark.parametrize("arch,shape", [("xlstm-125m", "decode_32k")])
+def test_dryrun_subprocess_single_pair(tmp_path, arch, shape):
+    out = tmp_path / "dr.json"
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", "--arch", arch,
+         "--shape", shape, "--out", str(out)],
+        cwd=ROOT, capture_output=True, text=True, timeout=540,
+        env={"PYTHONPATH": str(ROOT / "src"), "PATH": "/usr/bin:/bin",
+             "HOME": "/root"})
+    assert proc.returncode == 0, proc.stderr[-2000:]
+    data = json.loads(out.read_text())
+    (key, res), = data.items()
+    assert res["status"] == "ok", res
+    assert res["n_devices"] == 256
+    assert res["flops_per_device"] > 0
+    assert res["bytes_per_device"] > 0
+    assert res["roofline"]["t_compute"] > 0
+    assert res["bottleneck"] in ("compute", "memory", "collective")
+    # decode of an SSM arch: KV-free recurrent state, tiny compute
+    assert res["roofline"]["t_compute"] < 1e-3
+
+
+def test_dryrun_records_documented_skip(tmp_path):
+    out = tmp_path / "dr.json"
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", "--arch",
+         "hubert-xlarge", "--shape", "decode_32k", "--out", str(out)],
+        cwd=ROOT, capture_output=True, text=True, timeout=300,
+        env={"PYTHONPATH": str(ROOT / "src"), "PATH": "/usr/bin:/bin",
+             "HOME": "/root"})
+    assert proc.returncode == 0, proc.stderr[-2000:]
+    (key, res), = json.loads(out.read_text()).items()
+    assert res["status"] == "skip"
+    assert "encoder-only" in res["note"]

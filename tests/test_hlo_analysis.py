@@ -1,0 +1,60 @@
+"""The roofline extractor must be trip-count aware and match hand counts
+on known programs (this is what the whole §Roofline rests on)."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.launch import hlo_analysis as hlo
+
+
+def _compile(f, *sds):
+    return jax.jit(f).lower(*sds).compile().as_text()
+
+
+def test_scan_trip_count_multiplies_flops():
+    def f(x, w):
+        def body(c, _):
+            return jnp.tanh(c @ w), None
+        y, _ = jax.lax.scan(body, x, None, length=8)
+        return y
+
+    sds = jax.ShapeDtypeStruct((256, 256), jnp.float32)
+    text = _compile(f, sds, sds)
+    cost = hlo.analyze(text, 1)
+    expected = 8 * 2 * 256 ** 3
+    assert abs(cost.flops - expected) / expected < 0.02
+
+
+def test_grad_flops_counted():
+    def g(x, w1, w2):
+        return jnp.mean(jax.nn.relu(x @ w1) @ w2)
+
+    B, d, h = 128, 512, 1024
+    text = _compile(jax.grad(g, argnums=(1, 2)),
+                    jax.ShapeDtypeStruct((B, d), jnp.float32),
+                    jax.ShapeDtypeStruct((d, h), jnp.float32),
+                    jax.ShapeDtypeStruct((h, d), jnp.float32))
+    cost = hlo.analyze(text, 1)
+    expected = 4 * 2 * B * d * h     # fwd 2 matmuls + dw1 + dw2
+    assert abs(cost.flops - expected) / expected < 0.05
+
+
+def test_collective_wire_factors():
+    line_ar = ('%all-reduce.1 = f32[1024]{0} all-reduce(%x), '
+               'replica_groups=[16,16]<=[256]')
+    stats_text = "ENTRY %main (p: f32[1024]) -> f32[1024] {\n " + line_ar + "\n}"
+    cost = hlo.analyze(stats_text, 256)
+    # 2*(n-1)/n * 4096 bytes with n=16
+    assert abs(cost.collective_bytes - 2 * 15 / 16 * 4096) < 1
+
+
+def test_dus_counts_slice_not_buffer():
+    def f(buf, x):
+        return jax.lax.dynamic_update_slice_in_dim(buf, x, 0, axis=0)
+
+    big = jax.ShapeDtypeStruct((4096, 256), jnp.float32)
+    small = jax.ShapeDtypeStruct((1, 256), jnp.float32)
+    cost = hlo.analyze(_compile(f, big, small), 1)
+    # traffic should be O(slice + copy of buffer at entry), not O(2 buffers
+    # per update); allow the one-time entry copy
+    assert cost.bytes < 3 * 4096 * 256 * 4
