@@ -17,8 +17,8 @@ from pathlib import Path
 
 sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
 
-ALL = ("kernels", "table4", "roofline", "table1", "table2", "table3",
-       "fig1", "guidance", "dropout")
+ALL = ("kernels", "synthesis", "table4", "roofline", "table1", "table2",
+       "table3", "fig1", "guidance", "dropout")
 
 
 def main():
@@ -37,6 +37,9 @@ def main():
     if "kernels" in which:
         from benchmarks import kernels_bench
         kernels_bench.run()
+    if "synthesis" in which:
+        from benchmarks import synthesis_throughput
+        synthesis_throughput.run(args.preset)
     if "table4" in which:
         from benchmarks import table4_communication
         table4_communication.run(args.preset)

@@ -1,0 +1,117 @@
+"""SynthesisEngine throughput: batched wave path vs the seed-era
+per-method chunk loops, on the same D_syn workload.
+
+Workload shape mirrors the OSCAR server (paper §IV): R clients × C
+categories, k samples per (client, category) encoding.  Three runs:
+
+* ``seed_loop``   — the pre-refactor path: concatenate all conditioning
+  rows, then fixed-stride chunks (512) with a ragged tail, each shape
+  compiling its own reverse trajectory;
+* ``engine_cold`` — SynthesisEngine wave packing: near-uniform waves →
+  ONE compiled trajectory for the whole workload;
+* ``engine_warm`` — the same requests resubmitted (how the benchmark
+  tables re-synthesise per sweep point): served from the engine cache.
+
+Writes ``results/BENCH_synthesis.json`` via the shared harness.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import print_table, save_result
+from repro.configs.oscar import DiffusionConfig
+from repro.diffusion.dit import init_dit
+from repro.diffusion.sampler import sample_cfg
+from repro.diffusion.schedule import make_schedule
+from repro.serve.synthesis import SynthesisEngine
+
+SEED_CHUNK = 512          # the pre-refactor chunk stride (core/oscar.py)
+
+
+def _workload(preset: str):
+    if preset == "quick":
+        return dict(R=3, C=4, k=10, steps=8,
+                    dc=DiffusionConfig(d_model=64, num_layers=2, num_heads=2))
+    return dict(R=6, C=10, k=10, steps=20,
+                dc=DiffusionConfig(d_model=128, num_layers=4, num_heads=4))
+
+
+def _seed_loop(params, dc, sched, conds, key, *, steps):
+    """Verbatim shape of the pre-refactor core/oscar.py::synthesize loop."""
+    outs = []
+    for i in range(0, len(conds), SEED_CHUNK):
+        key, kc = jax.random.split(key)
+        x = sample_cfg(params, dc, sched, jnp.asarray(conds[i:i + SEED_CHUNK]),
+                       kc, image_size=16, num_steps=steps)
+        outs.append(np.asarray(x))
+    return np.concatenate(outs)
+
+
+def run(preset: str = "paper"):
+    w = _workload(preset)
+    dc, steps = w["dc"], w["steps"]
+    R, C, k = w["R"], w["C"], w["k"]
+    key = jax.random.PRNGKey(0)
+    # throughput only — a random-init DM denoises just as expensively
+    params = init_dit(key, dc, 16, 3)
+    sched = make_schedule(dc.train_timesteps, dc.schedule)
+    enc = np.random.default_rng(0).normal(size=(R, C, dc.cond_dim))
+    enc = (enc / np.linalg.norm(enc, axis=-1, keepdims=True)).astype(np.float32)
+    conds = np.concatenate([np.repeat(enc[r, c][None], k, axis=0)
+                            for r in range(R) for c in range(C)])
+    n = len(conds)
+    print(f"  workload: {R} clients x {C} categories x {k} samples "
+          f"= {n} images, {steps} steps")
+
+    t0 = time.time()
+    seed_out = _seed_loop(params, dc, sched, conds, key, steps=steps)
+    t_seed = time.time() - t0
+
+    eng = SynthesisEngine(params, dc, sched, image_size=16)
+
+    def submit_all():
+        return [eng.submit(enc[r, c], c, k, num_steps=steps)
+                for r in range(R) for c in range(C)]
+
+    t0 = time.time()
+    rids = submit_all()
+    out = eng.run(key)
+    t_cold = time.time() - t0
+    assert sum(out[rid].shape[0] for rid in rids) == n == len(seed_out)
+
+    rids2 = submit_all()
+    t0 = time.time()
+    out2 = eng.run(jax.random.PRNGKey(1))
+    t_warm = time.time() - t0
+    assert all(np.array_equal(out2[b], out[a])
+               for a, b in zip(rids, rids2))
+
+    rows = [
+        {"path": "seed_loop", "wall_s": t_seed, "img_per_s": n / t_seed},
+        {"path": "engine_cold", "wall_s": t_cold, "img_per_s": n / t_cold},
+        {"path": "engine_warm", "wall_s": t_warm,
+         "img_per_s": n / max(t_warm, 1e-9)},
+    ]
+    print_table("Synthesis throughput — engine waves vs seed chunk loops",
+                rows, ["path", "wall_s", "img_per_s"])
+    print(f"  engine stats: {eng.stats}")
+    res = {"preset": preset, "images": n, "steps": steps,
+           "seed_loop_s": t_seed, "engine_cold_s": t_cold,
+           "engine_warm_s": t_warm,
+           "speedup_cold": t_seed / t_cold,
+           "speedup_warm": t_seed / max(t_warm, 1e-9),
+           "engine_stats": dict(eng.stats)}
+    save_result("BENCH_synthesis", res)
+    return res
+
+
+def main():
+    run()
+
+
+if __name__ == "__main__":
+    main()

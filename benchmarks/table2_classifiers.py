@@ -17,7 +17,8 @@ def run(preset: str = "paper", samples_per_category: int = 10):
     key = jax.random.PRNGKey(42)
     syn_x, syn_y = synthesize(key, exp.dm_params, exp.ocfg.diffusion,
                               exp.sched, enc, present, samples_per_category,
-                              image_size=exp.ocfg.data.image_size)
+                              image_size=exp.ocfg.data.image_size,
+                              engine=exp.engine)
     rows, raw = [], {}
     for name in CLASSIFIERS:
         gp = fit_global(jax.random.fold_in(key, hash(name) % 1000), name,

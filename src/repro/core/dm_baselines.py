@@ -21,15 +21,16 @@ import numpy as np
 from repro.configs.oscar import OscarConfig
 from repro.core.classifier_train import (evaluate_per_domain, fit_global,
                                          train_classifier)
-from repro.diffusion.sampler import sample_cfg, sample_classifier_guided
 from repro.encoders.foundation import FrozenFM, category_encodings
 from repro.models.classifiers import (classifier_apply, classifier_param_count,
                                       init_classifier)
+from repro.serve.synthesis import SynthesisEngine
 
 
 def run_fedcado(key, ocfg: OscarConfig, data, dm_params, sched, *,
                 classifier: str | None = None, samples_per_category=None,
-                local_steps: int = 200, chunk: int = 256):
+                local_steps: int = 200,
+                engine: SynthesisEngine | None = None):
     classifier = classifier or ocfg.classifier
     k_samples = samples_per_category or ocfg.samples_per_category
     R = data.client_images.shape[0]
@@ -48,28 +49,33 @@ def run_fedcado(key, ocfg: OscarConfig, data, dm_params, sched, *,
         client_params.append(p)
     upload = classifier_param_count(client_params[0])
 
-    # --- server side: classifier-guided generation (Eq. 4) per client ---
-    syn_x, syn_y = [], []
-    for r in range(R):
-        pr = client_params[r]
+    # --- server side: classifier-guided generation (Eq. 4) via engine ---
+    # One request per (client, category); the engine packs each client's
+    # requests (same uploaded classifier → same wave group) into uniform
+    # waves, so every client shares one compiled trajectory shape.
+    eng = engine or SynthesisEngine(dm_params, ocfg.diffusion, sched,
+                                    image_size=ocfg.data.image_size,
+                                    channels=ocfg.data.channels)
 
+    def make_logprob(pr):
         def logprob(x, labels):
             logits = classifier_apply(pr, classifier, x)
             logp = jax.nn.log_softmax(logits, axis=-1)
             return jnp.take_along_axis(logp, labels[:, None], axis=-1)[:, 0]
+        return logprob
 
-        cats = np.unique(np.asarray(data.client_labels[r]))
-        labels = np.repeat(cats.astype(np.int32), k_samples)
-        for i in range(0, len(labels), chunk):
-            key, kc = jax.random.split(key)
-            lb = jnp.asarray(labels[i:i + chunk])
-            x = sample_classifier_guided(
-                dm_params, ocfg.diffusion, sched, logprob, lb, kc,
-                image_size=ocfg.data.image_size, channels=ocfg.data.channels)
-            syn_x.append(np.asarray(x))
-            syn_y.append(np.asarray(lb))
-    syn_x = np.concatenate(syn_x)
-    syn_y = np.concatenate(syn_y)
+    rid_cat = []
+    for r in range(R):
+        logprob = make_logprob(client_params[r])
+        for c in np.unique(np.asarray(data.client_labels[r])):
+            rid = eng.submit_classifier_guided(logprob, int(c), k_samples,
+                                               group=("fedcado", r))
+            rid_cat.append((rid, int(c)))
+    key, kgen = jax.random.split(key)
+    out = eng.run(kgen)
+    syn_x = np.concatenate([out[rid] for rid, _ in rid_cat])
+    syn_y = np.concatenate([np.full((k_samples,), c, np.int32)
+                            for _, c in rid_cat])
 
     key, kclf = jax.random.split(key)
     gp = fit_global(kclf, classifier, C, syn_x, syn_y,
@@ -80,7 +86,8 @@ def run_fedcado(key, ocfg: OscarConfig, data, dm_params, sched, *,
 
 def run_feddisc(key, ocfg: OscarConfig, data, dm_params, sched, fm: FrozenFM,
                 *, classifier: str | None = None, samples_per_category=None,
-                n_prototypes: int = 4, chunk: int = 512):
+                n_prototypes: int = 4,
+                engine: SynthesisEngine | None = None):
     classifier = classifier or ocfg.classifier
     k_samples = samples_per_category or ocfg.samples_per_category
     R = data.client_images.shape[0]
@@ -104,9 +111,15 @@ def run_feddisc(key, ocfg: OscarConfig, data, dm_params, sched, fm: FrozenFM,
     # mean + std + n_prototypes exemplar features per category
     upload = (2 + n_prototypes) * C * D
 
-    # --- server side: resample encodings, generate with the CF-DM ---
-    conds, labels = [], []
+    # --- server side: resample encodings, generate with the CF-DM.
+    # Every resampled encoding is its own per-sample request: count=1 per
+    # row keeps each row a distinct conditioning (the engine batches all
+    # of them — across clients and categories — into uniform waves).
+    eng = engine or SynthesisEngine(dm_params, ocfg.diffusion, sched,
+                                    image_size=ocfg.data.image_size,
+                                    channels=ocfg.data.channels)
     rng = np.random.default_rng(0)
+    rids, labels = [], []
     for r in range(R):
         for c in range(C):
             if not present[r, c]:
@@ -114,22 +127,23 @@ def run_feddisc(key, ocfg: OscarConfig, data, dm_params, sched, fm: FrozenFM,
             eps = rng.normal(size=(k_samples, D)).astype(np.float32)
             smp = means[r, c] + 0.5 * stds[r, c] * eps
             smp /= np.linalg.norm(smp, axis=-1, keepdims=True) + 1e-6
-            conds.append(smp)
+            rids.extend(eng.submit(row, int(c), 1) for row in smp)
             labels.append(np.full((k_samples,), c, np.int32))
-    conds = np.concatenate(conds)
-    labels = np.concatenate(labels)
-    outs = []
-    for i in range(0, len(conds), chunk):
-        key, kc = jax.random.split(key)
-        x = sample_cfg(dm_params, ocfg.diffusion, sched,
-                       jnp.asarray(conds[i:i + chunk]), kc,
-                       image_size=ocfg.data.image_size,
-                       channels=ocfg.data.channels)
-        outs.append(np.asarray(x))
-    syn_x = np.concatenate(outs)
+    labels = (np.concatenate(labels) if labels
+              else np.zeros((0,), np.int32))
+    key, kgen = jax.random.split(key)
+    out = eng.run(kgen)
+    syn_x = (np.concatenate([out[rid] for rid in rids]) if rids
+             else np.zeros((0, ocfg.data.image_size, ocfg.data.image_size,
+                            ocfg.data.channels), np.float32))
 
     key, kclf = jax.random.split(key)
-    gp = fit_global(kclf, classifier, C, syn_x, labels,
-                    steps=ocfg.classifier_steps, batch=ocfg.classifier_batch)
+    if len(syn_x) == 0:
+        # all-absent present mask: no D_syn — broadcast the untrained init
+        gp = init_classifier(kclf, classifier, C)
+    else:
+        gp = fit_global(kclf, classifier, C, syn_x, labels,
+                        steps=ocfg.classifier_steps,
+                        batch=ocfg.classifier_batch)
     metrics = evaluate_per_domain(gp, classifier, data)
     return gp, metrics, upload, (syn_x, labels)

@@ -95,6 +95,16 @@ class Experiment:
                 print(f"[exp] DM pre-trained in {time.time()-t0:.1f}s "
                       f"(cached as {tag})", flush=True)
 
+        # One SynthesisEngine shared by every DM-assisted method: waves are
+        # compiled once per shape across methods, and repeated submissions
+        # of the same (encoding, guidance, steps) — e.g. a samples-per-
+        # category sweep — are served/topped-up from the engine cache.
+        from repro.serve.synthesis import SynthesisEngine
+        self.engine = SynthesisEngine(self.dm_params, self.ocfg.diffusion,
+                                      self.sched,
+                                      image_size=self.ocfg.data.image_size,
+                                      channels=self.ocfg.data.channels)
+
     def _clf_params(self, name):
         from repro.models.classifiers import (classifier_param_count,
                                               init_classifier)
@@ -119,16 +129,19 @@ class Experiment:
             _, metrics, upload, _ = run_fedcado(
                 key, self.ocfg, self.data, self.dm_params, self.sched,
                 classifier=classifier,
-                samples_per_category=samples_per_category)
+                samples_per_category=samples_per_category,
+                engine=self.engine)
         elif method == "feddisc":
             _, metrics, upload, _ = run_feddisc(
                 key, self.ocfg, self.data, self.dm_params, self.sched,
                 self.fm, classifier=classifier,
-                samples_per_category=samples_per_category)
+                samples_per_category=samples_per_category,
+                engine=self.engine)
         elif method == "oscar":
             res = run_oscar(key, self.ocfg, self.data, self.dm_params,
                             self.sched, self.fm, classifier=classifier,
-                            samples_per_category=samples_per_category, **kw)
+                            samples_per_category=samples_per_category,
+                            engine=kw.pop("engine", self.engine), **kw)
             metrics, upload = res.metrics, res.upload_per_client
         else:
             raise ValueError(method)

@@ -20,7 +20,8 @@ import numpy as np
 from repro.configs.oscar import OscarConfig
 from repro.core.classifier_train import evaluate_per_domain, fit_global
 from repro.encoders.foundation import FrozenFM, category_encodings
-from repro.diffusion.sampler import sample_cfg
+from repro.models.classifiers import init_classifier
+from repro.serve.synthesis import SynthesisEngine
 
 
 @dataclass
@@ -49,36 +50,47 @@ def client_encodings(fm: FrozenFM, data):
 
 def synthesize(key, dm_params, dc, sched, encodings, present, k_samples: int,
                *, image_size: int, channels: int = 3, guidance=None,
-               use_pallas: bool = False, chunk: int = 512):
+               use_pallas: bool = False, engine: SynthesisEngine | None = None,
+               wave_size: int = 128):
     """Step (3): server-side D_syn generation.  Returns (images, labels).
 
-    Synthesis is embarrassingly parallel over (client × category × sample)
-    — one batched CFG sampler call per chunk (DESIGN.md §4)."""
+    Synthesis is embarrassingly parallel over (client × category × sample);
+    every (client, category) encoding becomes one SynthesisEngine request
+    and the engine batches them into uniform CFG waves (DESIGN.md §4).
+    An all-absent ``present`` mask degenerates to empty arrays."""
     R, C, dim = encodings.shape
-    conds, labels = [], []
+    eng = engine
+    if eng is not None and use_pallas and not eng.use_pallas:
+        eng = None      # explicit Pallas request overrides a non-Pallas
+                        # shared engine (dedicated engine, separate cache)
+    if eng is None:
+        eng = SynthesisEngine(dm_params, dc, sched, image_size=image_size,
+                              channels=channels, use_pallas=use_pallas,
+                              wave_size=wave_size)
+    rids, cats = [], []
     for r in range(R):
         for c in range(C):
             if not present[r, c]:
                 continue
-            conds.append(np.repeat(encodings[r, c][None], k_samples, axis=0))
-            labels.append(np.full((k_samples,), c, np.int32))
-    conds = np.concatenate(conds)
-    labels = np.concatenate(labels)
-    outs = []
-    for i in range(0, len(conds), chunk):
-        key, kc = jax.random.split(key)
-        x = sample_cfg(dm_params, dc, sched, jnp.asarray(conds[i:i + chunk]),
-                       kc, image_size=image_size, channels=channels,
-                       guidance=guidance, use_pallas=use_pallas)
-        outs.append(np.asarray(x))
-    return np.concatenate(outs), labels
+            rids.append(eng.submit(encodings[r, c], c, k_samples,
+                                   guidance=guidance))
+            cats.append(c)
+    if not rids:
+        return (np.zeros((0, image_size, image_size, channels), np.float32),
+                np.zeros((0,), np.int32))
+    out = eng.run(key)
+    images = np.concatenate([out[rid] for rid in rids])
+    labels = np.concatenate([np.full((k_samples,), c, np.int32)
+                             for c in cats])
+    return images, labels
 
 
 def run_oscar(key, ocfg: OscarConfig, data, dm_params, sched, fm: FrozenFM,
               *, classifier: str | None = None, samples_per_category=None,
               classifier_steps: int | None = None,
               guidance: float | None = None,
-              use_pallas: bool = False) -> OscarResult:
+              use_pallas: bool = False,
+              engine: SynthesisEngine | None = None) -> OscarResult:
     classifier = classifier or ocfg.classifier
     k_samples = samples_per_category or ocfg.samples_per_category
     kenc, ksyn, kclf = jax.random.split(key, 3)
@@ -88,10 +100,16 @@ def run_oscar(key, ocfg: OscarConfig, data, dm_params, sched, fm: FrozenFM,
                               present, k_samples,
                               image_size=ocfg.data.image_size,
                               channels=ocfg.data.channels,
-                              guidance=guidance, use_pallas=use_pallas)
-    gp = fit_global(kclf, classifier, data.num_categories, syn_x, syn_y,
-                    steps=classifier_steps or ocfg.classifier_steps,
-                    batch=ocfg.classifier_batch)
+                              guidance=guidance, use_pallas=use_pallas,
+                              engine=engine)
+    if len(syn_x) == 0:
+        # degenerate round: no (client, category) present anywhere — no
+        # D_syn, so the broadcast model is the untrained init
+        gp = init_classifier(kclf, classifier, data.num_categories)
+    else:
+        gp = fit_global(kclf, classifier, data.num_categories, syn_x, syn_y,
+                        steps=classifier_steps or ocfg.classifier_steps,
+                        batch=ocfg.classifier_batch)
     metrics = evaluate_per_domain(gp, classifier, data)
     upload = data.num_categories * ocfg.encoding_dim   # C × 512 (Table IV)
     return OscarResult(metrics, upload, syn_x, syn_y, enc, gp)

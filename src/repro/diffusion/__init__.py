@@ -1,4 +1,8 @@
 from repro.diffusion.schedule import NoiseSchedule, make_schedule
 from repro.diffusion.dit import dit_apply, init_dit
 from repro.diffusion.ddpm import diffusion_loss, make_dm_train_step, pretrain_dm
-from repro.diffusion.sampler import sample_cfg, sample_classifier_guided
+from repro.diffusion.guidance import (ClassifierFree, ClassifierGuided,
+                                      GuidanceStrategy, Unconditional,
+                                      reverse_sample)
+from repro.diffusion.sampler import (sample_cfg, sample_classifier_guided,
+                                     sample_uncond)

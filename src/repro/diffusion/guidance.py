@@ -1,0 +1,171 @@
+"""Guidance strategies + the single reverse-process core.
+
+Every sampler in the repo (classifier-free — paper Eq. 8/9, classifier-
+guided — Eq. 4 / FedCADO, and unconditional) is the SAME ancestral/DDIM
+loop differing only in how the per-step score ε̂ is produced.  That
+difference is factored into a ``GuidanceStrategy``; ``reverse_sample`` owns
+the respacing, the scan loop, the per-step noise draw, and the fused
+guidance-combine + ancestral update (Pallas ``kernels/cfg_fuse`` when
+enabled).
+
+A strategy answers two questions per step:
+
+* ``eps(params, dc, x, t, ab_t, aux) -> (eps_c, eps_u, s)`` — the pair of
+  score evaluations fed to the fused update ``(1+s)·ε_c − s·ε_u``.  A
+  strategy whose guidance is already folded into a single ε̂ (classifier-
+  guided, unconditional) returns ``eps_u=None`` and the core applies the
+  plain ancestral step — bit-identical to the historical samplers.
+* ``prepare(params, dc) -> aux`` — per-trajectory precompute hoisted out
+  of the scan (e.g. the stacked cond/uncond conditioning batch).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.oscar import DiffusionConfig
+from repro.diffusion.dit import dit_apply
+from repro.diffusion.schedule import NoiseSchedule
+
+
+def respaced_ts(T: int, num_steps: int):
+    return jnp.linspace(T - 1, 0, num_steps).round().astype(jnp.int32)
+
+
+def ancestral_coeffs(sched: NoiseSchedule, ts):
+    """Per-step (ᾱ_t, ᾱ_prev) for the respaced trajectory."""
+    ab_t = sched.alpha_bar[ts]
+    ab_prev = jnp.concatenate([sched.alpha_bar[ts[1:]], jnp.ones((1,))])
+    return ab_t, ab_prev
+
+
+def _cfg_update(x, eps_c, eps_u, s, ab_t, ab_prev, noise, eta, use_pallas):
+    if use_pallas:
+        from repro.kernels.cfg_fuse import ops as cfg_ops
+        return cfg_ops.cfg_update(x, eps_c, eps_u, s, ab_t, ab_prev, noise, eta)
+    from repro.kernels.cfg_fuse import ref as cfg_ref
+    return cfg_ref.cfg_update(x, eps_c, eps_u, s, ab_t, ab_prev, noise, eta)
+
+
+class GuidanceStrategy:
+    """How one reverse step turns x_t into the guided score pair."""
+
+    def batch(self) -> int:
+        raise NotImplementedError
+
+    def prepare(self, params, dc: DiffusionConfig):
+        return None
+
+    def eps(self, params, dc: DiffusionConfig, x, t, ab_t, aux):
+        raise NotImplementedError
+
+
+@dataclass(frozen=True)
+class ClassifierFree(GuidanceStrategy):
+    """Paper Eq. 8: ε̂ = (1+s)·ε_θ(x,t,ȳ) − s·ε_θ(x,t,Ø), both score
+    evaluations batched into ONE denoiser call (cond/uncond stacked on
+    batch — DESIGN.md §4)."""
+    y: Any                      # (B, cond_dim) encodings ȳ
+    scale: float
+
+    def batch(self) -> int:
+        return self.y.shape[0]
+
+    def prepare(self, params, dc):
+        B = self.y.shape[0]
+        null = jnp.broadcast_to(params["null_y"], (B, dc.cond_dim))
+        return jnp.concatenate([self.y, null], axis=0)
+
+    def eps(self, params, dc, x, t, ab_t, y2):
+        B = x.shape[0]
+        x2 = jnp.concatenate([x, x], axis=0)
+        t2 = jnp.full((2 * B,), t, jnp.int32)
+        eps2 = dit_apply(params, dc, x2, t2, y2)
+        return eps2[:B], eps2[B:], self.scale
+
+
+@dataclass(frozen=True)
+class ClassifierGuided(GuidanceStrategy):
+    """Paper Eq. 4 (FedCADO): unconditional score steered by the gradient
+    of a client classifier's log p(y|x)."""
+    logprob_fn: Callable        # (x, labels) -> (B,) log p(y|x)
+    labels: Any                 # (B,) int32
+    scale: float
+
+    def batch(self) -> int:
+        return self.labels.shape[0]
+
+    def eps(self, params, dc, x, t, ab_t, aux):
+        B = x.shape[0]
+        tb = jnp.full((B,), t, jnp.int32)
+        eps_u = dit_apply(params, dc, x, tb, None)      # unconditional score
+        sigma_t = jnp.sqrt(1.0 - ab_t)
+
+        # classifier gradient taken at the x̂₀ prediction; the ∂x̂₀/∂x_t
+        # chain factor 1/√ᾱ_t diverges at early steps (ᾱ→0) and destroys
+        # samples, so the standard stabilisation is ∇_{x̂₀} directly with
+        # per-sample normalisation (gradient direction, ε-scale magnitude).
+        x0 = jnp.clip((x - jnp.sqrt(1 - ab_t) * eps_u) / jnp.sqrt(ab_t), -1, 1)
+        labels = self.labels
+        grad = jax.grad(lambda z: jnp.sum(self.logprob_fn(z, labels)))(x0)
+        gnorm = jnp.sqrt(jnp.sum(grad ** 2, axis=(1, 2, 3), keepdims=True))
+        grad = grad / jnp.maximum(gnorm, 1e-6)
+        enorm = jnp.sqrt(jnp.mean(eps_u ** 2, axis=(1, 2, 3), keepdims=True))
+        eps_hat = eps_u - self.scale * sigma_t * grad * enorm  # Eq. 4 (stab.)
+        return eps_hat, None, 0.0
+
+
+@dataclass(frozen=True)
+class Unconditional(GuidanceStrategy):
+    """Plain p(x) sampling through the null embedding Ø — the degenerate
+    guidance point (FedDISC-style generation without a steering signal)."""
+    num: int
+
+    def batch(self) -> int:
+        return self.num
+
+    def eps(self, params, dc, x, t, ab_t, aux):
+        B = x.shape[0]
+        tb = jnp.full((B,), t, jnp.int32)
+        return dit_apply(params, dc, x, tb, None), None, 0.0
+
+
+def reverse_sample(params, dc: DiffusionConfig, sched: NoiseSchedule,
+                   strategy: GuidanceStrategy, key, *,
+                   image_size: int | None = None, channels: int = 3,
+                   num_steps: int | None = None, eta: float = 1.0,
+                   use_pallas: bool = False):
+    """The one ancestral/DDIM loop (paper Eq. 9) shared by every strategy.
+
+    x_T ~ N(0,I); for t in the respaced schedule the strategy produces the
+    guided score pair and the fused update advances x_t → x_{t−1}.
+    """
+    B = strategy.batch()
+    H = image_size or 16
+    num_steps = num_steps or dc.sample_timesteps
+    ts = respaced_ts(sched.T, num_steps)
+    ab_t, ab_prev = ancestral_coeffs(sched, ts)
+
+    key, k0 = jax.random.split(key)
+    x = jax.random.normal(k0, (B, H, H, channels))
+    aux = strategy.prepare(params, dc)
+
+    def step(carry, inp):
+        x, key = carry
+        t, abt, abp = inp
+        key, kn = jax.random.split(key)
+        eps_c, eps_u, s = strategy.eps(params, dc, x, t, abt, aux)
+        noise = jax.random.normal(kn, x.shape) * (t > 0)
+        if eps_u is None:
+            from repro.kernels.cfg_fuse import ref as cfg_ref
+            x = cfg_ref.ancestral_step(x, eps_c, abt, abp, noise, eta)
+        else:
+            x = _cfg_update(x, eps_c, eps_u, s, abt, abp, noise, eta,
+                            use_pallas)
+        return (x, key), None
+
+    (x, _), _ = jax.lax.scan(step, (x, key), (ts, ab_t, ab_prev))
+    return jnp.clip(x, -1.0, 1.0)

@@ -1,44 +1,29 @@
-"""Reverse-process samplers.
+"""Public samplers — thin wrappers over the strategy-parameterised core.
 
 ``sample_cfg`` — classifier-FREE guidance (paper Eq. 8/9): OSCAR's server
-uses the uploaded category encodings ȳ_c directly as conditioning; the two
-score evaluations are batched into ONE denoiser call (cond/uncond stacked
-on batch — DESIGN.md §4) and the guidance-combine + ancestral update is a
-fused elementwise op (Pallas kernel ``kernels/cfg_fuse`` when enabled).
+uses the uploaded category encodings ȳ_c directly as conditioning.
 
 ``sample_classifier_guided`` — classifier guidance (Eq. 4), the mechanism
 behind the FedCADO baseline: requires a trained classifier per client and
 a gradient through it at every step.
+
+``sample_uncond`` — unguided p(x) sampling through the null embedding.
+
+All three build a ``GuidanceStrategy`` and defer to
+``guidance.reverse_sample`` — one scan loop, one respacing, one fused
+Pallas update for the whole repo.
 """
 from __future__ import annotations
 
 from functools import partial
 
 import jax
-import jax.numpy as jnp
 
 from repro.configs.oscar import DiffusionConfig
-from repro.diffusion.dit import dit_apply
+from repro.diffusion.guidance import (ClassifierFree, ClassifierGuided,
+                                      Unconditional, reverse_sample)
+from repro.diffusion.guidance import respaced_ts as _respaced_ts  # noqa: F401
 from repro.diffusion.schedule import NoiseSchedule
-
-
-def _respaced_ts(T: int, num_steps: int):
-    return jnp.linspace(T - 1, 0, num_steps).round().astype(jnp.int32)
-
-
-def _ancestral_coeffs(sched: NoiseSchedule, ts):
-    """Per-step (ᾱ_t, ᾱ_prev) for the respaced trajectory."""
-    ab_t = sched.alpha_bar[ts]
-    ab_prev = jnp.concatenate([sched.alpha_bar[ts[1:]], jnp.ones((1,))])
-    return ab_t, ab_prev
-
-
-def _cfg_update(x, eps_c, eps_u, s, ab_t, ab_prev, noise, eta, use_pallas):
-    if use_pallas:
-        from repro.kernels.cfg_fuse import ops as cfg_ops
-        return cfg_ops.cfg_update(x, eps_c, eps_u, s, ab_t, ab_prev, noise, eta)
-    from repro.kernels.cfg_fuse import ref as cfg_ref
-    return cfg_ref.cfg_update(x, eps_c, eps_u, s, ab_t, ab_prev, noise, eta)
 
 
 @partial(jax.jit, static_argnames=("dc", "num_steps", "use_pallas", "eta",
@@ -47,39 +32,11 @@ def sample_cfg(params, dc: DiffusionConfig, sched: NoiseSchedule, y, key, *,
                image_size: int | None = None, channels: int = 3,
                num_steps: int | None = None, guidance: float | None = None,
                eta: float = 1.0, use_pallas: bool = False):
-    """Generate images conditioned on encodings ``y`` (B, cond_dim).
-
-    x_T ~ N(0,I); for t in respaced schedule:
-        ε̂ = (1+s)·ε_θ(x_t,t,ȳ) − s·ε_θ(x_t,t,Ø)          (Eq. 8)
-        x_{t-1} = ancestral/DDIM step with noise σ_t·N(0,I)  (Eq. 9)
-    """
-    B = y.shape[0]
-    H = image_size or 16
+    """Generate images conditioned on encodings ``y`` (B, cond_dim)."""
     s = dc.guidance_scale if guidance is None else guidance
-    num_steps = num_steps or dc.sample_timesteps
-    ts = _respaced_ts(sched.T, num_steps)
-    ab_t, ab_prev = _ancestral_coeffs(sched, ts)
-
-    key, k0 = jax.random.split(key)
-    x = jax.random.normal(k0, (B, H, H, channels))
-    null = jnp.broadcast_to(params["null_y"], (B, dc.cond_dim))
-    y2 = jnp.concatenate([y, null], axis=0)
-
-    def step(carry, inp):
-        x, key = carry
-        t, abt, abp = inp
-        key, kn = jax.random.split(key)
-        # one batched denoiser call for the two score evaluations
-        x2 = jnp.concatenate([x, x], axis=0)
-        t2 = jnp.full((2 * B,), t, jnp.int32)
-        eps2 = dit_apply(params, dc, x2, t2, y2)
-        eps_c, eps_u = eps2[:B], eps2[B:]
-        noise = jax.random.normal(kn, x.shape) * (t > 0)
-        x = _cfg_update(x, eps_c, eps_u, s, abt, abp, noise, eta, use_pallas)
-        return (x, key), None
-
-    (x, _), _ = jax.lax.scan(step, (x, key), (ts, ab_t, ab_prev))
-    return jnp.clip(x, -1.0, 1.0)
+    return reverse_sample(params, dc, sched, ClassifierFree(y=y, scale=s),
+                          key, image_size=image_size, channels=channels,
+                          num_steps=num_steps, eta=eta, use_pallas=use_pallas)
 
 
 def sample_classifier_guided(params, dc: DiffusionConfig, sched: NoiseSchedule,
@@ -91,39 +48,23 @@ def sample_classifier_guided(params, dc: DiffusionConfig, sched: NoiseSchedule,
 
     ``clf_logprob_fn(x, labels) -> (B,)`` log p(y|x); gradients are taken
     through the classifier at the x₀-prediction (standard stabilisation).
+    Unjitted at top level (the classifier closure is not hashable); the
+    inner scan still traces once.
     """
-    B = labels.shape[0]
-    H = image_size or 16
     s = dc.guidance_scale if guidance is None else guidance
-    num_steps = num_steps or dc.sample_timesteps
-    ts = _respaced_ts(sched.T, num_steps)
-    ab_t, ab_prev = _ancestral_coeffs(sched, ts)
+    strat = ClassifierGuided(logprob_fn=clf_logprob_fn, labels=labels, scale=s)
+    return reverse_sample(params, dc, sched, strat, key,
+                          image_size=image_size, channels=channels,
+                          num_steps=num_steps, eta=eta)
 
-    key, k0 = jax.random.split(key)
-    x = jax.random.normal(k0, (B, H, H, channels))
 
-    def step(carry, inp):
-        x, key = carry
-        t, abt, abp = inp
-        key, kn = jax.random.split(key)
-        tb = jnp.full((B,), t, jnp.int32)
-        eps_u = dit_apply(params, dc, x, tb, None)      # unconditional score
-        sigma_t = jnp.sqrt(1.0 - abt)
-
-        # classifier gradient taken at the x̂₀ prediction; the ∂x̂₀/∂x_t
-        # chain factor 1/√ᾱ_t diverges at early steps (ᾱ→0) and destroys
-        # samples, so the standard stabilisation is ∇_{x̂₀} directly with
-        # per-sample normalisation (gradient direction, ε-scale magnitude).
-        x0 = jnp.clip((x - jnp.sqrt(1 - abt) * eps_u) / jnp.sqrt(abt), -1, 1)
-        grad = jax.grad(lambda z: jnp.sum(clf_logprob_fn(z, labels)))(x0)
-        gnorm = jnp.sqrt(jnp.sum(grad ** 2, axis=(1, 2, 3), keepdims=True))
-        grad = grad / jnp.maximum(gnorm, 1e-6)
-        enorm = jnp.sqrt(jnp.mean(eps_u ** 2, axis=(1, 2, 3), keepdims=True))
-        eps_hat = eps_u - s * sigma_t * grad * enorm     # Eq. 4 (stabilised)
-        noise = jax.random.normal(kn, x.shape) * (t > 0)
-        from repro.kernels.cfg_fuse import ref as cfg_ref
-        x = cfg_ref.ancestral_step(x, eps_hat, abt, abp, noise, eta)
-        return (x, key), None
-
-    (x, _), _ = jax.lax.scan(step, (x, key), (ts, ab_t, ab_prev))
-    return jnp.clip(x, -1.0, 1.0)
+@partial(jax.jit, static_argnames=("dc", "num", "num_steps", "eta",
+                                   "image_size", "channels"))
+def sample_uncond(params, dc: DiffusionConfig, sched: NoiseSchedule,
+                  num: int, key, *, image_size: int | None = None,
+                  channels: int = 3, num_steps: int | None = None,
+                  eta: float = 1.0):
+    """Unconditional sampling: ``num`` draws from the DM's p(x)."""
+    return reverse_sample(params, dc, sched, Unconditional(num=num), key,
+                          image_size=image_size, channels=channels,
+                          num_steps=num_steps, eta=eta)

@@ -202,9 +202,17 @@ def moe_ep(params, cfg: ModelConfig, x, par: Parallel, batch_sharded: bool = Tru
     # reduce_scatter+all_gather leaves values replicated over `model` but
     # the VMA checker cannot infer that statically — disable the check for
     # that combine mode only.
-    fn = jax.shard_map(body, mesh=par.mesh, axis_names=all_axes,
-                       in_specs=tuple(specs), out_specs=(x_spec, P()),
-                       check_vma=(par.moe_combine != "reduce_scatter"))
+    check = par.moe_combine != "reduce_scatter"
+    if hasattr(jax, "shard_map"):
+        fn = jax.shard_map(body, mesh=par.mesh, axis_names=all_axes,
+                           in_specs=tuple(specs), out_specs=(x_spec, P()),
+                           check_vma=check)
+    else:
+        # jax < 0.5: experimental API; all mesh axes are manual (== the
+        # all_axes set above) and the VMA checker is called check_rep
+        from jax.experimental.shard_map import shard_map
+        fn = shard_map(body, mesh=par.mesh, in_specs=tuple(specs),
+                       out_specs=(x_spec, P()), check_rep=check)
     return fn(*args)
 
 

@@ -1,1 +1,2 @@
 from repro.serve.steps import make_prefill_step, make_serve_step
+from repro.serve.synthesis import SynthesisEngine, SynthesisRequest

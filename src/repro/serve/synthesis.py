@@ -1,0 +1,275 @@
+"""Batched D_syn synthesis engine: wave-scheduled diffusion sampling.
+
+The OSCAR server's hot path is generating D_syn from uploaded category
+encodings (paper §IV, Eq. 8/9).  ``SynthesisEngine`` is the serving
+substrate for that path, mirroring ``ServeEngine``'s wave scheduler for
+the LM runtime:
+
+* requests — (encoding, category, count) triples, or classifier-guided /
+  unconditional variants — are expanded into per-sample conditioning rows
+  and packed into NEAR-UNIFORM WAVES: for a group of N rows the engine
+  picks one wave size ``w = ceil(N / ceil(N/wave_size) / g) * g`` so every
+  wave of the group shares ONE compiled reverse trajectory (the seed-era
+  per-method chunk loops compiled a fresh executable for every ragged tail
+  shape) and padding is bounded by one granule per wave;
+* wave batches are optionally sharded over the data axes of a mesh
+  (``sharding/rules.py`` + ``launch/mesh.py``) — the granule is rounded up
+  so every wave divides the data-parallel device count;
+* per-encoding outputs are cached keyed by (encoding-hash, guidance,
+  steps): resubmitting an encoding serves from cache and a larger count
+  only generates the top-up rows (how benchmark sweeps over
+  samples-per-category reuse earlier synthesis).
+
+Waves are grouped by (mode, guidance, steps[, classifier identity]) —
+classifier-guided requests batch per uploaded classifier, classifier-free
+requests batch across every client and category in the queue.
+"""
+from __future__ import annotations
+
+import hashlib
+from dataclasses import dataclass
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.oscar import DiffusionConfig
+from repro.diffusion.sampler import (sample_cfg, sample_classifier_guided,
+                                     sample_uncond)
+from repro.diffusion.schedule import NoiseSchedule
+
+
+def _encoding_hash(encoding: np.ndarray) -> str:
+    return hashlib.sha1(np.ascontiguousarray(encoding, np.float32)
+                        .tobytes()).hexdigest()
+
+
+@dataclass
+class SynthesisRequest:
+    rid: int
+    mode: str                      # "cfg" | "clf" | "uncond"
+    count: int
+    category: int
+    guidance: float
+    num_steps: int
+    cond: Optional[np.ndarray] = None      # (cond_dim,) for mode="cfg"
+    logprob_fn: Optional[Callable] = None  # for mode="clf"
+    group: Any = None                      # wave-affinity key for mode="clf"
+    cache_key: Optional[tuple] = None
+
+
+class SynthesisEngine:
+    """Wave-based batched diffusion synthesis over a frozen DM."""
+
+    def __init__(self, dm_params, dc: DiffusionConfig, sched: NoiseSchedule,
+                 *, image_size: int, channels: int = 3, wave_size: int = 128,
+                 eta: float = 1.0, use_pallas: bool = False, mesh=None,
+                 cache: bool = True, granule: int = 8):
+        self.dm_params, self.dc, self.sched = dm_params, dc, sched
+        self.image_size, self.channels = image_size, channels
+        self.eta, self.use_pallas = eta, use_pallas
+        self.mesh = mesh
+        self._data_sharding = None
+        if mesh is not None:
+            from repro.launch.mesh import mesh_axes
+            ax = mesh_axes(mesh)
+            data_names = ax.data
+            dsize = int(np.prod([mesh.shape[n] for n in data_names]))
+            granule = -(-granule // dsize) * dsize      # waves divide data axes
+            self._data_sharding = NamedSharding(mesh, P(ax.all_data, None))
+        self.granule = granule
+        self.wave_size = max(-(-wave_size // granule) * granule, granule)
+        self.cache_enabled = cache
+        self._cache: dict[tuple, np.ndarray] = {}
+        self._queue: list[SynthesisRequest] = []
+        self._next_rid = 0
+        self.stats = {"requests": 0, "waves": 0, "generated": 0,
+                      "padded": 0, "cache_hits": 0}
+
+    # -- submission -------------------------------------------------------
+    def submit(self, encoding, category: int, count: int, *,
+               guidance: float | None = None,
+               num_steps: int | None = None) -> int:
+        """Classifier-free request: ``count`` samples conditioned on one
+        uploaded category encoding (paper Eq. 8/9)."""
+        enc = np.ascontiguousarray(encoding, np.float32)
+        g, steps = self._resolve(guidance, num_steps)
+        ck = (_encoding_hash(enc), g, steps) if self.cache_enabled else None
+        return self._push(SynthesisRequest(
+            rid=-1, mode="cfg", count=int(count), category=int(category),
+            guidance=g, num_steps=steps, cond=enc, cache_key=ck))
+
+    def submit_classifier_guided(self, logprob_fn, category: int, count: int,
+                                 *, guidance: float | None = None,
+                                 num_steps: int | None = None,
+                                 group: Any = None) -> int:
+        """Classifier-guided request (Eq. 4 / FedCADO).  ``group`` is the
+        wave-affinity key — requests sharing it (one uploaded classifier)
+        batch into the same waves.  Not cached: a Python closure has no
+        stable identity to key on."""
+        g, steps = self._resolve(guidance, num_steps)
+        # default group: unique per request — id(fn) is unstable under GC
+        # and a collision would sample with the wrong classifier
+        return self._push(SynthesisRequest(
+            rid=-1, mode="clf", count=int(count), category=int(category),
+            guidance=g, num_steps=steps, logprob_fn=logprob_fn,
+            group=group if group is not None else ("anon", self._next_rid)))
+
+    def submit_unconditional(self, count: int, *, category: int = -1,
+                             num_steps: int | None = None) -> int:
+        """Unguided p(x) draws through the null embedding."""
+        _, steps = self._resolve(0.0, num_steps)
+        return self._push(SynthesisRequest(
+            rid=-1, mode="uncond", count=int(count), category=int(category),
+            guidance=0.0, num_steps=steps))
+
+    # -- draining ---------------------------------------------------------
+    def run(self, key) -> dict[int, np.ndarray]:
+        """Drain the queue.  Returns rid -> (count, H, W, C) images.
+
+        Deterministic in ``key`` and the queue contents: wave ``i`` of the
+        drain samples with ``fold_in(key, i)``.  Cached rows are returned
+        as generated by the run that produced them.
+        """
+        results: dict[int, np.ndarray] = {}
+        pending: list[SynthesisRequest] = []
+        for r in self._queue:                      # serve from cache first
+            served = self._from_cache(r)
+            if served is not None:
+                results[r.rid] = served
+            else:
+                pending.append(r)
+        self._queue = []
+
+        wave_i = 0
+        for gkey in sorted({self._group_key(r) for r in pending}):
+            grp = [r for r in pending if self._group_key(r) == gkey]
+            wave_i = self._run_group(grp, key, wave_i, results)
+        return results
+
+    # -- internals --------------------------------------------------------
+    def _resolve(self, guidance, num_steps):
+        g = self.dc.guidance_scale if guidance is None else float(guidance)
+        return g, int(num_steps or self.dc.sample_timesteps)
+
+    def _push(self, req: SynthesisRequest) -> int:
+        req.rid = self._next_rid
+        self._next_rid += 1
+        self._queue.append(req)
+        self.stats["requests"] += 1
+        return req.rid
+
+    def _group_key(self, r: SynthesisRequest):
+        clf = ("clf", repr(r.group)) if r.mode == "clf" else ("", "")
+        return (r.mode, r.guidance, r.num_steps) + clf
+
+    def _from_cache(self, r: SynthesisRequest):
+        if r.cache_key is None:
+            return None
+        have = self._cache.get(r.cache_key)
+        if have is not None and len(have) >= r.count:
+            self.stats["cache_hits"] += r.count
+            return have[:r.count].copy()
+        return None
+
+    def _plan_waves(self, n: int) -> tuple[int, int]:
+        """(num_waves, wave_rows): near-uniform waves, one compiled shape
+        per group, padding < one granule per wave."""
+        nw = -(-n // self.wave_size)
+        per_wave = -(-n // nw)
+        rows = -(-per_wave // self.granule) * self.granule
+        return nw, rows
+
+    def _shard(self, arr):
+        if self._data_sharding is None:
+            return arr
+        return jax.device_put(arr, self._data_sharding)
+
+    def _sample_wave(self, grp_head: SynthesisRequest, cond_rows, key):
+        H, C = self.image_size, self.channels
+        if grp_head.mode == "cfg":
+            return sample_cfg(self.dm_params, self.dc, self.sched,
+                              self._shard(jnp.asarray(cond_rows)), key,
+                              image_size=H, channels=C,
+                              num_steps=grp_head.num_steps,
+                              guidance=grp_head.guidance, eta=self.eta,
+                              use_pallas=self.use_pallas)
+        if grp_head.mode == "clf":
+            return sample_classifier_guided(
+                self.dm_params, self.dc, self.sched, grp_head.logprob_fn,
+                self._shard(jnp.asarray(cond_rows, jnp.int32)), key,
+                image_size=H, channels=C, num_steps=grp_head.num_steps,
+                guidance=grp_head.guidance, eta=self.eta)
+        return sample_uncond(self.dm_params, self.dc, self.sched,
+                             len(cond_rows), key, image_size=H, channels=C,
+                             num_steps=grp_head.num_steps, eta=self.eta)
+
+    def _run_group(self, grp: list[SynthesisRequest], key, wave_i: int,
+                   results: dict) -> int:
+        head = grp[0]
+        # top-up: only generate rows the cache doesn't already hold.
+        # ``planned`` counts rows already scheduled THIS drain, so several
+        # requests sharing a cache key generate their union once (they are
+        # served the same rows — the cache's cross-drain semantics).
+        fresh = []
+        planned: dict[tuple, int] = {}
+        for r in grp:
+            have = 0
+            if r.cache_key is not None:
+                have = (len(self._cache.get(r.cache_key, ()))
+                        + planned.get(r.cache_key, 0))
+            f = max(r.count - have, 0)
+            if r.cache_key is not None and f:
+                planned[r.cache_key] = planned.get(r.cache_key, 0) + f
+            fresh.append(f)
+            self.stats["cache_hits"] += r.count - f
+        n = sum(fresh)
+        if head.mode == "cfg":
+            rows = np.concatenate([
+                np.repeat(r.cond[None], f, axis=0)
+                for r, f in zip(grp, fresh) if f] or
+                [np.zeros((0, self.dc.cond_dim), np.float32)])
+        elif head.mode == "clf":
+            rows = np.concatenate([
+                np.full((f,), r.category, np.int32)
+                for r, f in zip(grp, fresh) if f] or
+                [np.zeros((0,), np.int32)])
+        else:
+            rows = np.zeros((n,), np.int32)       # placeholder row ids
+
+        outs = np.zeros((0, self.image_size, self.image_size, self.channels),
+                        np.float32)
+        if n:
+            nw, wrows = self._plan_waves(n)
+            total = nw * wrows
+            if total > n:                          # pad by repeating tail row
+                rows = np.concatenate([rows, np.repeat(rows[-1:],
+                                                       total - n, axis=0)])
+            self.stats["padded"] += total - n
+            self.stats["generated"] += total
+            wave_out = []
+            for w in range(nw):
+                kw = jax.random.fold_in(key, wave_i)
+                wave_i += 1
+                x = self._sample_wave(head, rows[w * wrows:(w + 1) * wrows],
+                                      kw)
+                wave_out.append(np.asarray(x))
+                self.stats["waves"] += 1
+            outs = np.concatenate(wave_out)[:n]
+
+        # scatter rows back to requests (+ cache append)
+        off = 0
+        for r, f in zip(grp, fresh):
+            new = outs[off:off + f]
+            off += f
+            if r.cache_key is not None:
+                have = self._cache.get(r.cache_key)
+                self._cache[r.cache_key] = (new if have is None
+                                            else np.concatenate([have, new]))
+                results[r.rid] = self._cache[r.cache_key][:r.count].copy()
+            else:
+                results[r.rid] = new
+        return wave_i

@@ -1,0 +1,58 @@
+"""Minimal stand-in for the hypothesis API used by this suite.
+
+When hypothesis isn't installed, ``@given`` tests still run — each one
+sweeps a small deterministic set of examples (strategy endpoints +
+midpoint) instead of randomised draws.  Only the strategy surface this
+repo's tests use is provided: integers, floats, sampled_from.
+"""
+from __future__ import annotations
+
+import inspect
+
+
+class _Strategy:
+    def __init__(self, examples):
+        self.examples = list(dict.fromkeys(examples))
+
+
+class _Strategies:
+    @staticmethod
+    def integers(min_value, max_value):
+        return _Strategy([min_value, (min_value + max_value) // 2, max_value])
+
+    @staticmethod
+    def floats(min_value, max_value):
+        return _Strategy([min_value, (min_value + max_value) / 2.0, max_value])
+
+    @staticmethod
+    def sampled_from(elements):
+        return _Strategy(list(elements))
+
+
+st = _Strategies()
+
+
+def given(**strategies):
+    def deco(fn):
+        sig = inspect.signature(fn)
+        keep = [p for name, p in sig.parameters.items()
+                if name not in strategies]
+
+        def wrapper(**kwargs):
+            n = max(len(s.examples) for s in strategies.values())
+            for i in range(n):
+                vals = {k: s.examples[i % len(s.examples)]
+                        for k, s in strategies.items()}
+                fn(**kwargs, **vals)
+
+        wrapper.__name__ = fn.__name__
+        wrapper.__doc__ = fn.__doc__
+        # hide the strategy-bound params so pytest doesn't treat them as
+        # fixtures; the remaining params stay fixture-injectable
+        wrapper.__signature__ = sig.replace(parameters=keep)
+        return wrapper
+    return deco
+
+
+def settings(**_kwargs):
+    return lambda fn: fn

@@ -2,8 +2,11 @@
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ImportError:            # pragma: no cover - CI installs it
+    from _hypothesis_fallback import given, settings, st
 
 from repro.configs.oscar import DataConfig
 from repro.data.federated import make_federated_data

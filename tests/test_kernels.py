@@ -86,3 +86,44 @@ def test_cfg_guidance_zero_is_conditional(rng_key):
     a = cfg_ref.cfg_update(x, ec, eu, 0.0, 0.5, 0.7, z)
     b = cfg_ref.ancestral_step(x, ec, 0.5, 0.7, z)
     assert jnp.allclose(a, b)
+
+
+@pytest.mark.parametrize("rows", [8, 248, 304, 520])
+def test_cfg_fuse_partial_blocks(rng_key, rows):
+    """Row counts around/above BLOCK_ROWS=256, incl. non-divisible grids —
+    the (rows, 128) layout exercises partial trailing blocks directly."""
+    ks = jax.random.split(rng_key, 4)
+    shape = (rows, 128)
+    x, ec, eu, z = (jax.random.normal(k, shape) for k in ks)
+    out = cfg_ops.cfg_update(x, ec, eu, 3.0, 0.3, 0.6, z)
+    ref = cfg_ref.cfg_update(x, ec, eu, 3.0, 0.3, 0.6, z)
+    assert out.shape == shape
+    assert jnp.max(jnp.abs(out - ref)) < 1e-5
+
+
+def test_cfg_fuse_ragged_flatten(rng_key):
+    """A shape whose flat size divides neither 128 lanes nor the 8-row
+    sublane alignment — ops.py must pad and exactly un-pad."""
+    ks = jax.random.split(rng_key, 4)
+    shape = (5, 97, 13)
+    x, ec, eu, z = (jax.random.normal(k, shape) for k in ks)
+    out = cfg_ops.cfg_update(x, ec, eu, 1.5, 0.2, 0.4, z)
+    ref = cfg_ref.cfg_update(x, ec, eu, 1.5, 0.2, 0.4, z)
+    assert out.shape == shape
+    assert jnp.max(jnp.abs(out - ref)) < 1e-5
+
+
+@pytest.mark.parametrize("shape", [(4, 16, 16, 3), (300, 128)])
+def test_cfg_fuse_bf16(rng_key, shape):
+    """bf16 inputs: kernel accumulates in f32 and rounds once on store, so
+    it must stay within one bf16 ulp of the f32 oracle."""
+    ks = jax.random.split(rng_key, 4)
+    x, ec, eu, z = (jax.random.normal(k, shape, jnp.bfloat16) for k in ks)
+    out = cfg_ops.cfg_update(x, ec, eu, 7.5, 0.31, 0.52, z)
+    assert out.dtype == jnp.bfloat16
+    ref = cfg_ref.cfg_update(x.astype(jnp.float32), ec.astype(jnp.float32),
+                             eu.astype(jnp.float32), 7.5, 0.31, 0.52,
+                             z.astype(jnp.float32))
+    # bound: one bf16 ulp of the f32 result (outputs reach ~±30 at s=7.5)
+    err = jnp.abs(out.astype(jnp.float32) - ref)
+    assert bool(jnp.all(err <= 2.0 ** -8 * jnp.maximum(jnp.abs(ref), 1.0)))

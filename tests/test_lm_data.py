@@ -1,8 +1,11 @@
 """LM data-pipeline substrate tests."""
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ImportError:            # pragma: no cover - CI installs it
+    from _hypothesis_fallback import given, settings, st
 
 from repro.data.lm import (copy_task_corpus, make_lm_dataset, markov_corpus,
                            pack_sequences)

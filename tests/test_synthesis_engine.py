@@ -1,0 +1,183 @@
+"""SynthesisEngine behaviour: wave packing, caching/top-up, grouping,
+mesh-aware placement, and the degenerate all-absent OSCAR round."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.oscar import DiffusionConfig
+from repro.diffusion.dit import init_dit
+from repro.diffusion.sampler import sample_cfg
+from repro.diffusion.schedule import make_schedule
+from repro.serve.synthesis import SynthesisEngine
+
+DC = DiffusionConfig(d_model=32, num_layers=1, num_heads=2,
+                     sample_timesteps=3, train_timesteps=16)
+H = 8
+
+
+@pytest.fixture(scope="module")
+def dm():
+    key = jax.random.PRNGKey(0)
+    params = init_dit(key, DC, H, 3)
+    # adaLN-zero init gates the conditioning pathway off; perturb every
+    # leaf so guidance scale actually changes the output distribution
+    leaves, treedef = jax.tree.flatten(params)
+    keys = jax.random.split(jax.random.PRNGKey(1), len(leaves))
+    params = jax.tree.unflatten(treedef, [
+        a + 0.05 * jax.random.normal(k, a.shape, a.dtype)
+        for a, k in zip(leaves, keys)])
+    sched = make_schedule(DC.train_timesteps, DC.schedule)
+    return params, sched
+
+
+def _engine(dm, **kw):
+    params, sched = dm
+    kw.setdefault("image_size", H)
+    kw.setdefault("wave_size", 8)
+    return SynthesisEngine(params, DC, sched, **kw)
+
+
+def _enc(seed):
+    e = np.random.default_rng(seed).normal(size=(DC.cond_dim,))
+    return (e / np.linalg.norm(e)).astype(np.float32)
+
+
+def test_requests_packed_into_uniform_waves(dm):
+    eng = _engine(dm)
+    rids = [eng.submit(_enc(i), i % 3, c) for i, c in enumerate((3, 5, 2, 6))]
+    out = eng.run(jax.random.PRNGKey(1))
+    for rid, c in zip(rids, (3, 5, 2, 6)):
+        assert out[rid].shape == (c, H, H, 3)
+        assert np.abs(out[rid]).max() <= 1.0
+    # 16 rows at wave_size 8 → two uniform 8-row waves, zero padding
+    assert eng.stats["waves"] == 2
+    assert eng.stats["generated"] == 16
+    assert eng.stats["padded"] == 0
+
+
+def test_tail_wave_padded_to_granule(dm):
+    eng = _engine(dm)
+    eng.submit(_enc(0), 0, 5)
+    eng.run(jax.random.PRNGKey(1))
+    assert eng.stats["generated"] == 8 and eng.stats["padded"] == 3
+
+
+def test_single_full_wave_matches_direct_sampler(dm):
+    """One exactly-full wave is one sample_cfg call with fold_in(key, 0)."""
+    params, sched = dm
+    eng = _engine(dm)
+    enc = _enc(3)
+    rid = eng.submit(enc, 1, 8)
+    key = jax.random.PRNGKey(2)
+    out = eng.run(key)[rid]
+    direct = sample_cfg(params, DC, sched,
+                        jnp.asarray(np.repeat(enc[None], 8, axis=0)),
+                        jax.random.fold_in(key, 0), image_size=H,
+                        guidance=DC.guidance_scale)
+    assert np.array_equal(out, np.asarray(direct))
+
+
+def test_cache_hit_and_topup(dm):
+    eng = _engine(dm)
+    enc = _enc(4)
+    rid = eng.submit(enc, 0, 4)
+    first = eng.run(jax.random.PRNGKey(3))[rid]
+    assert eng.stats["cache_hits"] == 0
+    # exact resubmission: served from cache, no new waves
+    waves = eng.stats["waves"]
+    rid = eng.submit(enc, 0, 4)
+    again = eng.run(jax.random.PRNGKey(99))[rid]
+    assert np.array_equal(first, again)
+    assert eng.stats["cache_hits"] == 4 and eng.stats["waves"] == waves
+    # larger count: cached prefix + generated top-up rows only
+    rid = eng.submit(enc, 0, 7)
+    more = eng.run(jax.random.PRNGKey(5))[rid]
+    assert more.shape[0] == 7
+    assert np.array_equal(more[:4], first)
+    assert eng.stats["cache_hits"] == 8
+
+
+def test_same_key_requests_in_one_drain_generate_once(dm):
+    """Two requests with one cache key in the same drain share rows —
+    the union is generated once, not twice."""
+    eng = _engine(dm)
+    enc = _enc(11)
+    ra = eng.submit(enc, 0, 3)
+    rb = eng.submit(enc, 0, 5)
+    out = eng.run(jax.random.PRNGKey(0))
+    assert eng.stats["generated"] == 8          # union (5) + granule pad
+    assert eng.stats["cache_hits"] == 3         # ra's rows shared with rb
+    assert np.array_equal(out[ra], out[rb][:3])
+    assert out[rb].shape[0] == 5
+
+
+def test_guidance_and_steps_key_the_cache(dm):
+    eng = _engine(dm)
+    enc = _enc(5)
+    ra = eng.submit(enc, 0, 2, guidance=0.0)
+    a = eng.run(jax.random.PRNGKey(6))[ra]
+    rb = eng.submit(enc, 0, 2, guidance=4.0)
+    b = eng.run(jax.random.PRNGKey(6))[rb]
+    assert eng.stats["cache_hits"] == 0        # different guidance → no hit
+    assert not np.array_equal(a, b)
+
+
+def test_classifier_guided_groups_do_not_mix(dm):
+    eng = _engine(dm)
+
+    def lp_a(x, labels):
+        return -jnp.sum(x ** 2, axis=(1, 2, 3))
+
+    def lp_b(x, labels):
+        return -jnp.sum((x - 0.5) ** 2, axis=(1, 2, 3))
+
+    ra = eng.submit_classifier_guided(lp_a, 0, 4, group="client0")
+    rb = eng.submit_classifier_guided(lp_b, 1, 4, group="client1")
+    out = eng.run(jax.random.PRNGKey(7))
+    assert out[ra].shape == out[rb].shape == (4, H, H, 3)
+    assert eng.stats["waves"] == 2             # one wave per classifier group
+    assert not np.array_equal(out[ra], out[rb])
+
+
+def test_unconditional_requests(dm):
+    eng = _engine(dm)
+    rid = eng.submit_unconditional(5)
+    out = eng.run(jax.random.PRNGKey(8))
+    assert out[rid].shape == (5, H, H, 3)
+
+
+def test_mesh_aware_wave_batches(dm):
+    from repro.launch.mesh import make_host_mesh
+    mesh = make_host_mesh(jax.device_count(), 1)
+    eng = _engine(dm, mesh=mesh)
+    rid = eng.submit(_enc(6), 0, 8)
+    out = eng.run(jax.random.PRNGKey(9))
+    assert out[rid].shape == (8, H, H, 3)
+    # wave granule divides the data axis → every wave shards evenly
+    dsize = mesh.shape["data"]
+    assert eng.granule % dsize == 0 and eng.wave_size % dsize == 0
+
+
+def test_oscar_synthesize_empty_present(dm):
+    from repro.core.oscar import synthesize
+    params, sched = dm
+    enc = np.zeros((2, 3, DC.cond_dim), np.float32)
+    present = np.zeros((2, 3), bool)
+    sx, sy = synthesize(jax.random.PRNGKey(0), params, DC, sched, enc,
+                        present, 4, image_size=H)
+    assert sx.shape == (0, H, H, 3) and sx.dtype == np.float32
+    assert sy.shape == (0,) and sy.dtype == np.int32
+
+
+def test_oscar_synthesize_routes_through_engine(dm):
+    from repro.core.oscar import synthesize
+    params, sched = dm
+    eng = _engine(dm)
+    enc = np.stack([np.stack([_enc(10 + c) for c in range(3)])])  # (1,3,D)
+    present = np.ones((1, 3), bool)
+    sx, sy = synthesize(jax.random.PRNGKey(0), params, DC, sched, enc,
+                        present, 2, image_size=H, engine=eng)
+    assert sx.shape == (6, H, H, 3)
+    assert list(sy) == [0, 0, 1, 1, 2, 2]
+    assert eng.stats["requests"] == 3
