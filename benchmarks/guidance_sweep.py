@@ -21,7 +21,7 @@ def run(preset: str = "paper", scales=SCALES, samples: int = 10):
         sx, sy = synthesize(key, exp.dm_params, exp.ocfg.diffusion, exp.sched,
                             enc, present, samples,
                             image_size=exp.ocfg.data.image_size, guidance=s,
-                            engine=exp.engine)
+                            service=exp.service)
         gp = fit_global(jax.random.fold_in(key, int(s * 10)),
                         exp.ocfg.classifier, exp.data.num_categories, sx, sy,
                         steps=exp.ocfg.classifier_steps)

@@ -1,21 +1,29 @@
-"""SynthesisEngine throughput: batched wave path vs the seed-era
-per-method chunk loops, on the same D_syn workload.
+"""Synthesis serving throughput: SynthesisEngine waves + the
+SynthesisService streaming/persistence layers vs the seed-era per-method
+chunk loops, on the same D_syn workload.
 
 Workload shape mirrors the OSCAR server (paper §IV): R clients × C
-categories, k samples per (client, category) encoding.  Three runs:
+categories, k samples per (client, category) encoding.  Five runs:
 
-* ``seed_loop``   — the pre-refactor path: concatenate all conditioning
+* ``seed_loop``    — the pre-refactor path: concatenate all conditioning
   rows, then fixed-stride chunks (512) with a ragged tail, each shape
   compiling its own reverse trajectory;
-* ``engine_cold`` — SynthesisEngine wave packing: near-uniform waves →
+* ``engine_cold``  — SynthesisEngine wave packing: near-uniform waves →
   ONE compiled trajectory for the whole workload;
-* ``engine_warm`` — the same requests resubmitted (how the benchmark
-  tables re-synthesise per sweep point): served from the engine cache.
+* ``engine_warm``  — the same requests resubmitted (how the benchmark
+  tables re-synthesise per sweep point): served from the engine cache;
+* ``streaming``    — half the requests arrive mid-drain through a
+  SynthesisService poll; open waves absorb them (compare padded rows
+  against ``two_snapshots``, the same trace drained snapshot-style);
+* ``store_warm``   — a COLD process (fresh engine, fresh store handle)
+  against the warm on-disk D_syn store: zero sampler calls.
 
 Writes ``results/BENCH_synthesis.json`` via the shared harness.
 """
 from __future__ import annotations
 
+import argparse
+import tempfile
 import time
 
 import jax
@@ -27,12 +35,15 @@ from repro.configs.oscar import DiffusionConfig
 from repro.diffusion.dit import init_dit
 from repro.diffusion.sampler import sample_cfg
 from repro.diffusion.schedule import make_schedule
-from repro.serve.synthesis import SynthesisEngine
+from repro.serve import SynthesisEngine, SynthesisService, SynthesisStore
 
 SEED_CHUNK = 512          # the pre-refactor chunk stride (core/oscar.py)
 
 
 def _workload(preset: str):
+    if preset == "smoke":          # CI regression canary: seconds-scale
+        return dict(R=2, C=2, k=4, steps=4,
+                    dc=DiffusionConfig(d_model=32, num_layers=1, num_heads=2))
     if preset == "quick":
         return dict(R=3, C=4, k=10, steps=8,
                     dc=DiffusionConfig(d_model=64, num_layers=2, num_heads=2))
@@ -49,6 +60,74 @@ def _seed_loop(params, dc, sched, conds, key, *, steps):
                        kc, image_size=16, num_steps=steps)
         outs.append(np.asarray(x))
     return np.concatenate(outs)
+
+
+def _bench_streaming(params, dc, sched, enc, *, steps, k):
+    """Half the clients' uploads queued up front, the rest arriving
+    mid-drain — one client (C requests) per poll, the serving-time
+    analogue of a straggler upload landing while waves are in flight."""
+    R, C = enc.shape[:2]
+    upfront = [(r, c) for r in range(R // 2) for c in range(C)]
+    late_clients = [[(r, c) for c in range(C)] for r in range(R // 2, R)]
+
+    def fresh_service():
+        eng = SynthesisEngine(params, dc, sched, image_size=16, cache=False)
+        return SynthesisService(eng, key=0)
+
+    # snapshot baseline: the late arrivals become a second drain
+    snap = fresh_service()
+    for r, c in upfront:
+        snap.submit(enc[r, c], c, k, num_steps=steps)
+    t0 = time.time()
+    snap.drain()
+    for client in late_clients:
+        for r, c in client:
+            snap.submit(enc[r, c], c, k, num_steps=steps)
+    snap.drain()
+    t_snap = time.time() - t0
+
+    strm = fresh_service()
+    for r, c in upfront:
+        strm.submit(enc[r, c], c, k, num_steps=steps)
+    trace = list(late_clients)
+
+    def poll():
+        if not trace:
+            return False
+        for r, c in trace.pop(0):
+            strm.submit(enc[r, c], c, k, num_steps=steps)
+        return True
+
+    t0 = time.time()
+    strm.drain(poll=poll)
+    t_strm = time.time() - t0
+    return {"two_snapshots_s": t_snap, "streaming_s": t_strm,
+            "two_snapshots_padded": snap.stats["padded"],
+            "streaming_padded": strm.stats["padded"],
+            "streamed_requests": strm.stats["streamed"]}
+
+
+def _bench_store(params, dc, sched, enc, *, steps, k, store_dir):
+    """Warm an on-disk store, then serve the workload from a cold process
+    (fresh engine + fresh store handle): zero sampler calls."""
+    R, C = enc.shape[:2]
+
+    def run_cold():
+        eng = SynthesisEngine(params, dc, sched, image_size=16)
+        svc = SynthesisService(eng, key=1, store=SynthesisStore(store_dir))
+        futs = [svc.submit(enc[r, c], c, k, num_steps=steps)
+                for r in range(R) for c in range(C)]
+        t0 = time.time()
+        outs = svc.gather(futs)
+        return time.time() - t0, outs, svc.stats
+
+    t_cold, outs1, _ = run_cold()                 # generates + spills
+    t_warm, outs2, stats = run_cold()             # fresh process, warm disk
+    assert stats["generated"] == 0, "warm store must skip the sampler"
+    assert all(np.array_equal(a, b) for a, b in zip(outs1, outs2))
+    return {"store_cold_s": t_cold, "store_warm_s": t_warm,
+            "store_warm_generated": stats["generated"],
+            "store_hits": stats["store_hits"]}
 
 
 def run(preset: str = "paper"):
@@ -90,27 +169,46 @@ def run(preset: str = "paper"):
     assert all(np.array_equal(out2[b], out[a])
                for a, b in zip(rids, rids2))
 
+    streaming = _bench_streaming(params, dc, sched, enc, steps=steps, k=k)
+    with tempfile.TemporaryDirectory(prefix="dsyn_store_") as store_dir:
+        store = _bench_store(params, dc, sched, enc, steps=steps, k=k,
+                             store_dir=store_dir)
+
     rows = [
         {"path": "seed_loop", "wall_s": t_seed, "img_per_s": n / t_seed},
         {"path": "engine_cold", "wall_s": t_cold, "img_per_s": n / t_cold},
         {"path": "engine_warm", "wall_s": t_warm,
          "img_per_s": n / max(t_warm, 1e-9)},
+        {"path": "streaming", "wall_s": streaming["streaming_s"],
+         "img_per_s": n / max(streaming["streaming_s"], 1e-9)},
+        {"path": "store_warm", "wall_s": store["store_warm_s"],
+         "img_per_s": n / max(store["store_warm_s"], 1e-9)},
     ]
     print_table("Synthesis throughput — engine waves vs seed chunk loops",
                 rows, ["path", "wall_s", "img_per_s"])
+    print(f"  streaming: padded {streaming['streaming_padded']} rows vs "
+          f"{streaming['two_snapshots_padded']} snapshot-drained, "
+          f"{streaming['streamed_requests']} requests admitted mid-drain")
+    print(f"  store: warm rerun generated {store['store_warm_generated']} "
+          f"rows ({store['store_hits']} served from disk)")
     print(f"  engine stats: {eng.stats}")
     res = {"preset": preset, "images": n, "steps": steps,
            "seed_loop_s": t_seed, "engine_cold_s": t_cold,
            "engine_warm_s": t_warm,
            "speedup_cold": t_seed / t_cold,
            "speedup_warm": t_seed / max(t_warm, 1e-9),
-           "engine_stats": dict(eng.stats)}
+           "engine_stats": dict(eng.stats),
+           **streaming, **store}
     save_result("BENCH_synthesis", res)
     return res
 
 
 def main():
-    run()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--preset", default="paper",
+                    choices=("smoke", "quick", "paper"))
+    args = ap.parse_args()
+    run(args.preset)
 
 
 if __name__ == "__main__":

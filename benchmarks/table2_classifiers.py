@@ -18,7 +18,7 @@ def run(preset: str = "paper", samples_per_category: int = 10):
     syn_x, syn_y = synthesize(key, exp.dm_params, exp.ocfg.diffusion,
                               exp.sched, enc, present, samples_per_category,
                               image_size=exp.ocfg.data.image_size,
-                              engine=exp.engine)
+                              service=exp.service)
     rows, raw = [], {}
     for name in CLASSIFIERS:
         gp = fit_global(jax.random.fold_in(key, hash(name) % 1000), name,

@@ -21,7 +21,7 @@ def run(preset: str = "paper", counts=COUNTS):
     syn_x, syn_y = synthesize(key, exp.dm_params, exp.ocfg.diffusion,
                               exp.sched, enc, present, kmax,
                               image_size=exp.ocfg.data.image_size,
-                              engine=exp.engine)
+                              service=exp.service)
     per_slot = kmax  # images are grouped per (client,category) slot
     import numpy as np
     n_slots = len(syn_x) // per_slot

@@ -3,6 +3,12 @@
 Flat keys are the ``tree_paths`` path strings, so checkpoints are stable
 across refactors that keep parameter names, and are inspectable with
 plain numpy.  Used for the frozen DM cache and trained global models.
+
+Dtypes round-trip faithfully: extension dtypes numpy's npz format cannot
+represent (bfloat16, float8 — they pickle to opaque void records) are
+stored as raw bit patterns in a same-width unsigned integer array and
+re-viewed on load; every leaf's dtype is recorded in the JSON manifest
+and validated against the npz contents when restoring.
 """
 from __future__ import annotations
 
@@ -14,21 +20,44 @@ import numpy as np
 
 from repro.utils import tree_paths
 
+# numpy's own format handles these; anything else (ml_dtypes extension
+# types) goes through the raw-bits path
+_NATIVE_KINDS = frozenset("biufc")
+
+
+def _to_native(a: np.ndarray) -> np.ndarray:
+    if a.dtype.kind in _NATIVE_KINDS:
+        return a
+    return a.view(np.dtype(f"u{a.dtype.itemsize}"))
+
 
 def save_pytree(tree, path: str | Path, meta: dict | None = None):
     path = Path(path)
     path.parent.mkdir(parents=True, exist_ok=True)
     flat = tree_paths(tree)
-    arrays = {p: np.asarray(l) for p, l in flat}
+    arrays, dtypes = {}, {}
+    for p, l in flat:
+        a = np.asarray(l)
+        dtypes[p] = str(a.dtype)
+        arrays[p] = _to_native(a)
     np.savez(path.with_suffix(".npz"), **arrays)
-    manifest = {"keys": [p for p, _ in flat], "meta": meta or {}}
+    manifest = {"keys": [p for p, _ in flat], "dtypes": dtypes,
+                "meta": meta or {}}
     path.with_suffix(".json").write_text(json.dumps(manifest, indent=1))
 
 
 def load_pytree(template, path: str | Path):
-    """Restore into the structure of ``template`` (values replaced)."""
+    """Restore into the structure of ``template`` (values replaced).
+
+    Leaves come back with their SAVED dtype (recorded in the manifest),
+    not the template's — a bf16 checkpoint restores as bf16 even into an
+    f32 template.  Pre-dtype-manifest checkpoints restore with whatever
+    dtype the npz holds, as before.
+    """
     path = Path(path)
     data = np.load(path.with_suffix(".npz"))
+    manifest = json.loads(path.with_suffix(".json").read_text())
+    dtypes = manifest.get("dtypes", {})
     flat = tree_paths(template)
     leaves = []
     for p, leaf in flat:
@@ -37,6 +66,17 @@ def load_pytree(template, path: str | Path):
         arr = data[p]
         if tuple(arr.shape) != tuple(leaf.shape):
             raise ValueError(f"{p}: shape {arr.shape} != {leaf.shape}")
+        if p in dtypes:
+            want = jax.numpy.dtype(dtypes[p])
+            if arr.dtype.kind in _NATIVE_KINDS and arr.dtype == want:
+                pass                              # stored directly
+            elif (want.kind not in _NATIVE_KINDS
+                  and arr.dtype == np.dtype(f"u{want.itemsize}")):
+                arr = arr.view(want)              # raw-bits extension dtype
+            else:
+                raise ValueError(
+                    f"{p}: npz dtype {arr.dtype} inconsistent with manifest "
+                    f"dtype {dtypes[p]}")
         leaves.append(jax.numpy.asarray(arr))
     treedef = jax.tree.structure(template)
     return jax.tree.unflatten(treedef, leaves)

@@ -24,13 +24,29 @@ from repro.core.classifier_train import (evaluate_per_domain, fit_global,
 from repro.encoders.foundation import FrozenFM, category_encodings
 from repro.models.classifiers import (classifier_apply, classifier_param_count,
                                       init_classifier)
+from repro.serve.service import SynthesisService
 from repro.serve.synthesis import SynthesisEngine
+
+
+def _service(service, engine, ocfg, dm_params, sched):
+    """Every baseline's D_syn generation routes through a service.  An
+    explicitly-passed engine beats a shared service (same precedence as
+    ``oscar.synthesize``); otherwise the shared service, else a fresh
+    engine."""
+    if engine is not None:
+        return SynthesisService(engine)
+    if service is not None:
+        return service
+    return SynthesisService(SynthesisEngine(
+        dm_params, ocfg.diffusion, sched, image_size=ocfg.data.image_size,
+        channels=ocfg.data.channels))
 
 
 def run_fedcado(key, ocfg: OscarConfig, data, dm_params, sched, *,
                 classifier: str | None = None, samples_per_category=None,
                 local_steps: int = 200,
-                engine: SynthesisEngine | None = None):
+                engine: SynthesisEngine | None = None,
+                service: SynthesisService | None = None):
     classifier = classifier or ocfg.classifier
     k_samples = samples_per_category or ocfg.samples_per_category
     R = data.client_images.shape[0]
@@ -49,13 +65,11 @@ def run_fedcado(key, ocfg: OscarConfig, data, dm_params, sched, *,
         client_params.append(p)
     upload = classifier_param_count(client_params[0])
 
-    # --- server side: classifier-guided generation (Eq. 4) via engine ---
+    # --- server side: classifier-guided generation (Eq. 4) via service ---
     # One request per (client, category); the engine packs each client's
     # requests (same uploaded classifier → same wave group) into uniform
     # waves, so every client shares one compiled trajectory shape.
-    eng = engine or SynthesisEngine(dm_params, ocfg.diffusion, sched,
-                                    image_size=ocfg.data.image_size,
-                                    channels=ocfg.data.channels)
+    svc = _service(service, engine, ocfg, dm_params, sched)
 
     def make_logprob(pr):
         def logprob(x, labels):
@@ -64,18 +78,17 @@ def run_fedcado(key, ocfg: OscarConfig, data, dm_params, sched, *,
             return jnp.take_along_axis(logp, labels[:, None], axis=-1)[:, 0]
         return logprob
 
-    rid_cat = []
+    fut_cat = []
     for r in range(R):
         logprob = make_logprob(client_params[r])
         for c in np.unique(np.asarray(data.client_labels[r])):
-            rid = eng.submit_classifier_guided(logprob, int(c), k_samples,
+            fut = svc.submit_classifier_guided(logprob, int(c), k_samples,
                                                group=("fedcado", r))
-            rid_cat.append((rid, int(c)))
+            fut_cat.append((fut, int(c)))
     key, kgen = jax.random.split(key)
-    out = eng.run(kgen)
-    syn_x = np.concatenate([out[rid] for rid, _ in rid_cat])
+    syn_x = np.concatenate(svc.gather([f for f, _ in fut_cat], kgen))
     syn_y = np.concatenate([np.full((k_samples,), c, np.int32)
-                            for _, c in rid_cat])
+                            for _, c in fut_cat])
 
     key, kclf = jax.random.split(key)
     gp = fit_global(kclf, classifier, C, syn_x, syn_y,
@@ -87,7 +100,8 @@ def run_fedcado(key, ocfg: OscarConfig, data, dm_params, sched, *,
 def run_feddisc(key, ocfg: OscarConfig, data, dm_params, sched, fm: FrozenFM,
                 *, classifier: str | None = None, samples_per_category=None,
                 n_prototypes: int = 4,
-                engine: SynthesisEngine | None = None):
+                engine: SynthesisEngine | None = None,
+                service: SynthesisService | None = None):
     classifier = classifier or ocfg.classifier
     k_samples = samples_per_category or ocfg.samples_per_category
     R = data.client_images.shape[0]
@@ -112,14 +126,13 @@ def run_feddisc(key, ocfg: OscarConfig, data, dm_params, sched, fm: FrozenFM,
     upload = (2 + n_prototypes) * C * D
 
     # --- server side: resample encodings, generate with the CF-DM.
-    # Every resampled encoding is its own per-sample request: count=1 per
-    # row keeps each row a distinct conditioning (the engine batches all
-    # of them — across clients and categories — into uniform waves).
-    eng = engine or SynthesisEngine(dm_params, ocfg.diffusion, sched,
-                                    image_size=ocfg.data.image_size,
-                                    channels=ocfg.data.channels)
+    # Each (client, category)'s resampled statistics go up as ONE 2-D
+    # request — k_samples DISTINCT conditioning rows, a single cache/
+    # store entry (the engine batches across clients and categories into
+    # uniform waves either way).
+    svc = _service(service, engine, ocfg, dm_params, sched)
     rng = np.random.default_rng(0)
-    rids, labels = [], []
+    futs, labels = [], []
     for r in range(R):
         for c in range(C):
             if not present[r, c]:
@@ -127,13 +140,12 @@ def run_feddisc(key, ocfg: OscarConfig, data, dm_params, sched, fm: FrozenFM,
             eps = rng.normal(size=(k_samples, D)).astype(np.float32)
             smp = means[r, c] + 0.5 * stds[r, c] * eps
             smp /= np.linalg.norm(smp, axis=-1, keepdims=True) + 1e-6
-            rids.extend(eng.submit(row, int(c), 1) for row in smp)
+            futs.append(svc.submit(smp, int(c)))
             labels.append(np.full((k_samples,), c, np.int32))
     labels = (np.concatenate(labels) if labels
               else np.zeros((0,), np.int32))
     key, kgen = jax.random.split(key)
-    out = eng.run(kgen)
-    syn_x = (np.concatenate([out[rid] for rid in rids]) if rids
+    syn_x = (np.concatenate(svc.gather(futs, kgen)) if futs
              else np.zeros((0, ocfg.data.image_size, ocfg.data.image_size,
                             ocfg.data.channels), np.float32))
 

@@ -21,6 +21,7 @@ from repro.configs.oscar import OscarConfig
 from repro.core.classifier_train import evaluate_per_domain, fit_global
 from repro.encoders.foundation import FrozenFM, category_encodings
 from repro.models.classifiers import init_classifier
+from repro.serve.service import SynthesisService
 from repro.serve.synthesis import SynthesisEngine
 
 
@@ -51,35 +52,43 @@ def client_encodings(fm: FrozenFM, data):
 def synthesize(key, dm_params, dc, sched, encodings, present, k_samples: int,
                *, image_size: int, channels: int = 3, guidance=None,
                use_pallas: bool = False, engine: SynthesisEngine | None = None,
-               wave_size: int = 128):
+               service: SynthesisService | None = None, wave_size: int = 128):
     """Step (3): server-side D_syn generation.  Returns (images, labels).
 
     Synthesis is embarrassingly parallel over (client × category × sample);
-    every (client, category) encoding becomes one SynthesisEngine request
+    every (client, category) encoding becomes one SynthesisService request
     and the engine batches them into uniform CFG waves (DESIGN.md §4).
-    An all-absent ``present`` mask degenerates to empty arrays."""
+    A shared ``service`` (e.g. ``Experiment.service``) additionally serves
+    repeats from its persistent D_syn store.  An all-absent ``present``
+    mask degenerates to empty arrays."""
     R, C, dim = encodings.shape
-    eng = engine
+    svc, eng = service, engine
+    if eng is not None:
+        svc = None        # an explicitly-passed engine beats a shared
+                          # service (callers pass one to isolate caches)
+    elif svc is not None:
+        eng = svc.engine
     if eng is not None and use_pallas and not eng.use_pallas:
-        eng = None      # explicit Pallas request overrides a non-Pallas
-                        # shared engine (dedicated engine, separate cache)
+        svc = eng = None  # explicit Pallas request overrides a non-Pallas
+                          # shared engine (dedicated engine, separate cache)
     if eng is None:
         eng = SynthesisEngine(dm_params, dc, sched, image_size=image_size,
                               channels=channels, use_pallas=use_pallas,
                               wave_size=wave_size)
-    rids, cats = [], []
+    if svc is None:
+        svc = SynthesisService(eng)
+    futs, cats = [], []
     for r in range(R):
         for c in range(C):
             if not present[r, c]:
                 continue
-            rids.append(eng.submit(encodings[r, c], c, k_samples,
+            futs.append(svc.submit(encodings[r, c], c, k_samples,
                                    guidance=guidance))
             cats.append(c)
-    if not rids:
+    if not futs:
         return (np.zeros((0, image_size, image_size, channels), np.float32),
                 np.zeros((0,), np.int32))
-    out = eng.run(key)
-    images = np.concatenate([out[rid] for rid in rids])
+    images = np.concatenate(svc.gather(futs, key))
     labels = np.concatenate([np.full((k_samples,), c, np.int32)
                              for c in cats])
     return images, labels
@@ -90,7 +99,8 @@ def run_oscar(key, ocfg: OscarConfig, data, dm_params, sched, fm: FrozenFM,
               classifier_steps: int | None = None,
               guidance: float | None = None,
               use_pallas: bool = False,
-              engine: SynthesisEngine | None = None) -> OscarResult:
+              engine: SynthesisEngine | None = None,
+              service: SynthesisService | None = None) -> OscarResult:
     classifier = classifier or ocfg.classifier
     k_samples = samples_per_category or ocfg.samples_per_category
     kenc, ksyn, kclf = jax.random.split(key, 3)
@@ -101,7 +111,7 @@ def run_oscar(key, ocfg: OscarConfig, data, dm_params, sched, fm: FrozenFM,
                               image_size=ocfg.data.image_size,
                               channels=ocfg.data.channels,
                               guidance=guidance, use_pallas=use_pallas,
-                              engine=engine)
+                              engine=engine, service=service)
     if len(syn_x) == 0:
         # degenerate round: no (client, category) present anywhere — no
         # D_syn, so the broadcast model is the untrained init

@@ -1,0 +1,164 @@
+"""SynthesisService — the streaming front door to the SynthesisEngine.
+
+Where ``SynthesisEngine`` is the wave scheduler (pack → sample → scatter),
+the service is the request-lifecycle layer the OSCAR server and the
+DM-assisted baselines actually talk to:
+
+* ``submit*`` returns a ``SynthesisFuture`` immediately; ``result()``
+  drains on demand, so callers no longer choreograph submit/run phases;
+* drains are STREAMING: a ``poll`` callback (or another thread calling
+  ``submit`` mid-drain) feeds late-arriving requests into the engine's
+  live group queues, where they fill partially-empty open waves instead
+  of padding — see ``SynthesisEngine.run``.  Thread submissions are
+  folded in at each wave boundary while waves remain in flight; only a
+  ``poll`` can keep a drain alive waiting for arrivals;
+* a persistent ``SynthesisStore`` can be attached so the
+  (encoding-hash, guidance, steps) cache survives the process: a cold
+  process against a warm store answers the whole workload with zero
+  sampler calls and bit-identical D_syn;
+* drain keys are a deterministic stream: drain ``i`` uses
+  ``fold_in(base_key, i)``, so a service constructed with the same seed
+  and fed the same arrival trace reproduces its outputs exactly.
+
+Thread-safety: ``submit`` may be called from any thread (including while
+a drain is running — that is the streaming path); ``drain`` itself is
+serialized on an internal lock.  A ``poll`` callback runs on the
+draining thread and may submit freely.
+"""
+from __future__ import annotations
+
+import threading
+import weakref
+from typing import Any, Callable, Optional
+
+import jax
+import numpy as np
+
+from repro.serve.store import SynthesisStore
+from repro.serve.synthesis import SynthesisEngine
+
+
+class SynthesisFuture:
+    """Handle for one submitted request.  ``result()`` drains the queue
+    if needed.  Rows are delivered straight onto the future (the service
+    only holds a weak reference), so a long-lived service accumulates
+    nothing: discard the future and its images are collectable."""
+
+    def __init__(self, service: "SynthesisService", rid: int):
+        self._service = service
+        self._value: Optional[np.ndarray] = None
+        self.rid = rid
+
+    def done(self) -> bool:
+        return self._value is not None
+
+    def result(self) -> np.ndarray:
+        if self._value is None:
+            self._service.drain()
+        if self._value is None:
+            raise RuntimeError(
+                f"request {self.rid} was not served by the drain — "
+                "was the service's engine drained directly?")
+        return self._value
+
+    def __repr__(self):
+        state = "done" if self.done() else "pending"
+        return f"SynthesisFuture(rid={self.rid}, {state})"
+
+
+class SynthesisService:
+    """Futures + streaming drains + persistent store over one engine."""
+
+    def __init__(self, engine: SynthesisEngine, *,
+                 key: jax.Array | int | None = None,
+                 store: SynthesisStore | str | None = None):
+        if store is not None and not isinstance(store, SynthesisStore):
+            store = SynthesisStore(store)
+        if store is not None:
+            engine.store = store
+        self.engine = engine
+        self.store = engine.store
+        if key is None:
+            key = jax.random.PRNGKey(0)
+        elif isinstance(key, int):
+            key = jax.random.PRNGKey(key)
+        self._base_key = key
+        self._drain_i = 0
+        # rid -> future, weakly: a discarded future (callers consuming
+        # drain()'s return map instead) costs no retained images
+        self._futures: "weakref.WeakValueDictionary[int, SynthesisFuture]" \
+            = weakref.WeakValueDictionary()
+        self._drain_lock = threading.Lock()    # one drain at a time
+        self._submit_lock = threading.Lock()   # rid assignment atomicity
+
+    # -- submission (any thread) ------------------------------------------
+    def _register(self, rid: int) -> SynthesisFuture:
+        fut = SynthesisFuture(self, rid)
+        self._futures[rid] = fut
+        return fut
+
+    def _deliver(self, rid: int, rows: np.ndarray):
+        fut = self._futures.get(rid)
+        if fut is not None:
+            fut._value = rows
+
+    def submit(self, encoding, category: int, count: int | None = None, *,
+               guidance: float | None = None,
+               num_steps: int | None = None) -> SynthesisFuture:
+        with self._submit_lock:
+            rid = self.engine.submit(encoding, category, count,
+                                     guidance=guidance, num_steps=num_steps)
+            return self._register(rid)
+
+    def submit_classifier_guided(self, logprob_fn, category: int, count: int,
+                                 *, guidance: float | None = None,
+                                 num_steps: int | None = None,
+                                 group: Any = None) -> SynthesisFuture:
+        with self._submit_lock:
+            rid = self.engine.submit_classifier_guided(
+                logprob_fn, category, count, guidance=guidance,
+                num_steps=num_steps, group=group)
+            return self._register(rid)
+
+    def submit_unconditional(self, count: int, *, category: int = -1,
+                             num_steps: int | None = None) -> SynthesisFuture:
+        with self._submit_lock:
+            rid = self.engine.submit_unconditional(count, category=category,
+                                                   num_steps=num_steps)
+            return self._register(rid)
+
+    # -- draining ---------------------------------------------------------
+    def drain(self, key=None, *, poll: Callable[[], bool] | None = None,
+              stream: bool | None = None) -> dict[int, np.ndarray]:
+        """Drain queued requests, resolving their futures.
+
+        ``key`` defaults to the next key in the service's deterministic
+        drain-key stream.  ``poll`` is forwarded to the engine: it is
+        invoked before each wave is packed and may submit new requests —
+        compatible ones join the open wave (return falsy once the arrival
+        trace is exhausted, or the drain never concludes).
+        """
+        with self._drain_lock:
+            if key is None:
+                key = jax.random.fold_in(self._base_key, self._drain_i)
+            self._drain_i += 1
+            # futures resolve as each wave retires (the per-drain
+            # on_result hook), so requests served before a mid-drain
+            # failure stay resolved even though run() raises; the return
+            # value is the full drain's rid -> rows map
+            return self.engine.run(key, poll=poll, stream=stream,
+                                   on_result=self._deliver)
+
+    def gather(self, futures: list[SynthesisFuture],
+               key=None) -> list[np.ndarray]:
+        """Results for ``futures`` in order, draining (once) if needed."""
+        if any(not f.done() for f in futures):
+            self.drain(key)
+        return [f.result() for f in futures]
+
+    @property
+    def stats(self) -> dict:
+        s = dict(self.engine.stats)
+        s["drains"] = self._drain_i
+        s["store_entries"] = len(self.store) if self.store is not None else 0
+        return s

@@ -1,0 +1,169 @@
+"""Persistent content-addressed D_syn store.
+
+Spills the SynthesisEngine's (encoding-hash, guidance, steps) output
+cache to disk so repeated ``run_oscar`` / ``run_feddisc`` / benchmark
+invocations skip synthesis entirely ACROSS PROCESSES — a cold process
+pointed at a warm store serves the whole workload with zero sampler
+calls and bit-identical rows.
+
+Layout mirrors ``checkpoint/io.py`` (plain npz + JSON manifest,
+inspectable with numpy alone)::
+
+    <root>/manifest.json            {"version": 1, "entries": {slug: {...}}}
+    <root>/shards/<slug>.npz        {"rows": (count, H, W, C)}
+
+The slug is the CONTENT ADDRESS: sha1 over the cache key — itself the
+sha1 of the uploaded encoding bytes plus the guidance scale and step
+count — so two stores built from the same uploads share shard names and
+a shard can never be served to the wrong request.  Every manifest entry
+records count/shape/dtype and is validated against the shard on load;
+``put`` buffers in memory and ``flush`` (called by the engine at the end
+of every drain) writes dirty shards and rewrites the manifest via a
+temp-file rename.
+
+The store does NOT key on the diffusion model's parameters — callers
+serving multiple DMs must use one store root per model (see
+``core/experiment.py``, which keys the store directory by the DM cache
+tag).
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+from pathlib import Path
+from typing import Optional
+
+import numpy as np
+
+_VERSION = 1
+
+
+def _slug(cache_key: tuple) -> str:
+    enc_hash, guidance, steps = cache_key
+    # repr() is round-trip exact — two distinct guidance floats can never
+    # share a slug (get() additionally validates the recorded key)
+    raw = f"{enc_hash}|g={float(guidance)!r}|s={int(steps)}"
+    return hashlib.sha1(raw.encode()).hexdigest()[:16]
+
+
+class SynthesisStore:
+    """On-disk companion to the engine's in-memory output cache."""
+
+    def __init__(self, root: str | Path):
+        self.root = Path(root)
+        self._shards = self.root / "shards"
+        self._rows: dict[str, np.ndarray] = {}      # loaded / pending shards
+        self._dirty: set[str] = set()
+        self._manifest: dict = {"version": _VERSION, "entries": {}}
+        mpath = self.root / "manifest.json"
+        if mpath.exists():
+            self._manifest = json.loads(mpath.read_text())
+            if self._manifest.get("version") != _VERSION:
+                raise ValueError(
+                    f"store {self.root}: unsupported manifest version "
+                    f"{self._manifest.get('version')!r}")
+
+    # -- reads ------------------------------------------------------------
+    def get(self, cache_key: tuple) -> Optional[np.ndarray]:
+        """All rows stored under ``cache_key``, or None.  Lazy: the shard
+        is read (and validated against its manifest entry) on first use.
+
+        A shard SHORTER than its manifest entry — a lost race between
+        concurrent same-key flushes — is treated as a miss, not an error:
+        the caller re-synthesizes and the next flush heals the entry
+        ('costs a re-synthesis, never a wrong result').  A shard LONGER
+        than its entry (crash between shard and manifest renames) serves
+        the recorded prefix; shards are append-only so the prefix is
+        exact.  Structural mismatches (row shape/dtype, recorded key)
+        raise — that is corruption, not a race."""
+        s = _slug(cache_key)
+        if s in self._rows:
+            return self._rows[s]
+        ent = self._manifest["entries"].get(s)
+        if ent is None:
+            return None
+        enc_hash, guidance, steps = cache_key
+        if (ent["key"]["encoding_sha1"] != enc_hash
+                or ent["key"]["guidance"] != float(guidance)
+                or ent["key"]["steps"] != int(steps)):
+            raise ValueError(
+                f"store {self.root}: shard {s} records a different cache "
+                f"key than requested — refusing to serve the wrong D_syn")
+        with np.load(self._shards / f"{s}.npz") as z:
+            rows = z["rows"]
+        if (list(rows.shape[1:]) != list(ent["shape"])[1:]
+                or str(rows.dtype) != ent["dtype"]):
+            raise ValueError(
+                f"store {self.root}: shard {s} does not match its manifest "
+                f"entry (shape {rows.shape}/{ent['shape']}, dtype "
+                f"{rows.dtype}/{ent['dtype']})")
+        if len(rows) < ent["count"]:
+            return None                     # lost flush race: re-synthesize
+        self._rows[s] = rows = rows[:ent["count"]]
+        return rows
+
+    def __contains__(self, cache_key: tuple) -> bool:
+        return _slug(cache_key) in self._manifest["entries"]
+
+    def __len__(self) -> int:
+        return len(self._manifest["entries"])
+
+    # -- writes -----------------------------------------------------------
+    def put(self, cache_key: tuple, rows: np.ndarray):
+        """Record the full row set for ``cache_key`` (the engine always
+        hands the merged cache entry, so a put only ever grows a shard).
+        Buffered until ``flush``."""
+        s = _slug(cache_key)
+        have = self._rows.get(s)
+        if have is not None and len(have) > len(rows):
+            return                      # never shrink a shard
+        self._rows[s] = np.asarray(rows)
+        self._dirty.add(s)
+        enc_hash, guidance, steps = cache_key
+        self._manifest["entries"][s] = {
+            "key": {"encoding_sha1": enc_hash, "guidance": float(guidance),
+                    "steps": int(steps)},
+            "count": int(len(rows)),
+            "shape": [int(d) for d in rows.shape],
+            "dtype": str(rows.dtype),
+            "file": f"shards/{s}.npz",
+        }
+
+    def flush(self):
+        """Write dirty shards, then rewrite the manifest.  Both go through
+        temp + rename, shards strictly before the manifest, so a crash at
+        any point leaves every manifest entry pointing at a shard holding
+        at least its recorded rows (``get`` serves the manifest prefix).
+
+        The on-disk manifest is re-read and merged before the rewrite —
+        entries another process flushed since we opened the store are
+        kept (our own dirty keys win), so concurrent processes sharing a
+        root extend rather than erase each other.  The merge is
+        best-effort (read-merge-write without a lock): simultaneous
+        flushes can still lose the race for non-overlapping keys, which
+        costs a re-synthesis, never a wrong result."""
+        if not self._dirty:
+            return
+        self._shards.mkdir(parents=True, exist_ok=True)
+        for s in sorted(self._dirty):
+            # pid-suffixed like the manifest tmp: concurrent flushes must
+            # never interleave writes into one tmp and publish a torn npz
+            tmp = self._shards / f"{s}.{os.getpid()}.tmp"
+            with open(tmp, "wb") as f:
+                np.savez(f, rows=self._rows[s])
+            os.replace(tmp, self._shards / f"{s}.npz")
+        mpath = self.root / "manifest.json"
+        if mpath.exists():
+            try:
+                disk = json.loads(mpath.read_text()).get("entries", {})
+            except (json.JSONDecodeError, OSError):
+                disk = {}
+            ours = self._manifest["entries"]
+            for s, ent in disk.items():
+                if s not in self._dirty and s not in ours:
+                    ours[s] = ent
+        tmp = self.root / f"manifest.json.{os.getpid()}.tmp"
+        tmp.write_text(json.dumps(self._manifest, indent=1))
+        os.replace(tmp, mpath)
+        self._dirty.clear()

@@ -7,27 +7,44 @@ the LM runtime:
 
 * requests — (encoding, category, count) triples, or classifier-guided /
   unconditional variants — are expanded into per-sample conditioning rows
-  and packed into NEAR-UNIFORM WAVES: for a group of N rows the engine
-  picks one wave size ``w = ceil(N / ceil(N/wave_size) / g) * g`` so every
-  wave of the group shares ONE compiled reverse trajectory (the seed-era
-  per-method chunk loops compiled a fresh executable for every ragged tail
-  shape) and padding is bounded by one granule per wave;
+  held in LIVE PER-GROUP QUEUES; the wave packer peels rows off a group's
+  queue one wave at a time, so requests admitted mid-drain (streaming
+  mode) fill partially-empty waves instead of forcing padding;
+* in snapshot mode (``run`` without ``poll``) a group of N rows is packed
+  into NEAR-UNIFORM WAVES: one wave size
+  ``w = ceil(N / ceil(N/wave_size) / g) * g`` so every wave of the group
+  shares ONE compiled reverse trajectory (the seed-era per-method chunk
+  loops compiled a fresh executable for every ragged tail shape) and
+  padding is bounded by one granule per wave;  in streaming mode waves
+  are ``wave_size`` rows and only the final tail is rounded (down) to a
+  granule multiple — less padding at the cost of one extra tail shape;
+* waves are DOUBLE-BUFFERED: wave k+1's host-side row packing and
+  ``device_put`` overlap wave k's device step loop; the host fences on
+  ``jax.block_until_ready`` only when retiring wave k, so packing cost
+  disappears from the critical path (disable with ``async_waves=False``);
 * wave batches are optionally sharded over the data axes of a mesh
   (``sharding/rules.py`` + ``launch/mesh.py``) — the granule is rounded up
   so every wave divides the data-parallel device count;
 * per-encoding outputs are cached keyed by (encoding-hash, guidance,
   steps): resubmitting an encoding serves from cache and a larger count
   only generates the top-up rows (how benchmark sweeps over
-  samples-per-category reuse earlier synthesis).
+  samples-per-category reuse earlier synthesis).  With a persistent
+  ``serve/store.py::SynthesisStore`` attached the cache spills to disk,
+  so a cold process serves repeated workloads with zero sampler calls.
 
 Waves are grouped by (mode, guidance, steps[, classifier identity]) —
 classifier-guided requests batch per uploaded classifier, classifier-free
 requests batch across every client and category in the queue.
+
+Requests stay on the queue until their results are produced: an
+exception mid-drain (a failing sampler, an interrupted process) leaves
+every unserved request queued for the next ``run``.
 """
 from __future__ import annotations
 
 import hashlib
-from dataclasses import dataclass
+from collections import deque
+from dataclasses import dataclass, field
 from typing import Any, Callable, Optional
 
 import jax
@@ -61,13 +78,76 @@ class SynthesisRequest:
     cache_key: Optional[tuple] = None
 
 
+@dataclass
+class _Pending:
+    """A request admitted into a drain: ``fresh`` rows still to generate
+    (count minus cache/planned coverage), packed into waves row by row."""
+    req: SynthesisRequest
+    fresh: int
+    taken: int = 0                               # rows handed to waves
+    chunks: list = field(default_factory=list)   # retired output slices
+
+    def rows_left(self) -> int:
+        return self.fresh - self.taken
+
+    def row_block(self, k: int, start: int) -> np.ndarray:
+        """Rows ``start:start+k`` of this request's fresh conditioning.
+        A 1-D cfg encoding repeats one row; a 2-D encoding (one DISTINCT
+        conditioning per sample, e.g. FedDISC's resampled statistics)
+        slices — offset past the cached prefix, which covered the leading
+        rows."""
+        r = self.req
+        if r.mode == "cfg":
+            if r.cond.ndim == 2:
+                off = r.count - self.fresh + start
+                return r.cond[off:off + k]
+            return np.repeat(r.cond[None], k, axis=0)
+        if r.mode == "clf":
+            return np.full((k,), r.category, np.int32)
+        return np.zeros((k,), np.int32)          # uncond placeholder ids
+
+    def done_rows(self) -> int:
+        return sum(len(c) for c in self.chunks)
+
+
+class _GroupQueue:
+    """Live FIFO of pending requests sharing one wave group — the packer
+    consumes from here, so admissions mid-drain extend open waves."""
+
+    def __init__(self, head: SynthesisRequest):
+        self.head = head                          # defines mode/g/steps/clf
+        self.items: deque[_Pending] = deque()
+
+    def push(self, p: _Pending):
+        self.items.append(p)
+
+    def rows_available(self) -> int:
+        return sum(p.rows_left() for p in self.items)
+
+    def take(self, k: int) -> list[tuple[_Pending, int, int]]:
+        """Peel up to ``k`` rows off the queue front, FIFO.  Returns
+        (pending, rows_taken, start_row) triples."""
+        parts: list[tuple[_Pending, int, int]] = []
+        while k > 0 and self.items:
+            p = self.items[0]
+            t = min(p.rows_left(), k)
+            if t:
+                parts.append((p, t, p.taken))
+                p.taken += t
+                k -= t
+            if p.rows_left() == 0:
+                self.items.popleft()
+        return parts
+
+
 class SynthesisEngine:
     """Wave-based batched diffusion synthesis over a frozen DM."""
 
     def __init__(self, dm_params, dc: DiffusionConfig, sched: NoiseSchedule,
                  *, image_size: int, channels: int = 3, wave_size: int = 128,
                  eta: float = 1.0, use_pallas: bool = False, mesh=None,
-                 cache: bool = True, granule: int = 8):
+                 cache: bool = True, granule: int = 8, store=None,
+                 async_waves: bool = True):
         self.dm_params, self.dc, self.sched = dm_params, dc, sched
         self.image_size, self.channels = image_size, channels
         self.eta, self.use_pallas = eta, use_pallas
@@ -83,19 +163,32 @@ class SynthesisEngine:
         self.granule = granule
         self.wave_size = max(-(-wave_size // granule) * granule, granule)
         self.cache_enabled = cache
+        self.store = store                       # SynthesisStore | None
+        self.async_waves = async_waves
         self._cache: dict[tuple, np.ndarray] = {}
         self._queue: list[SynthesisRequest] = []
         self._next_rid = 0
         self.stats = {"requests": 0, "waves": 0, "generated": 0,
-                      "padded": 0, "cache_hits": 0}
+                      "padded": 0, "cache_hits": 0, "store_hits": 0,
+                      "streamed": 0}
 
     # -- submission -------------------------------------------------------
-    def submit(self, encoding, category: int, count: int, *,
+    def submit(self, encoding, category: int, count: int | None = None, *,
                guidance: float | None = None,
                num_steps: int | None = None) -> int:
-        """Classifier-free request: ``count`` samples conditioned on one
-        uploaded category encoding (paper Eq. 8/9)."""
+        """Classifier-free request (paper Eq. 8/9).  A 1-D ``encoding``
+        yields ``count`` samples of one conditioning row; a 2-D
+        ``(count, cond_dim)`` encoding carries one DISTINCT conditioning
+        per sample (e.g. FedDISC's resampled statistics) as a single
+        request — and a single cache/store entry."""
         enc = np.ascontiguousarray(encoding, np.float32)
+        if enc.ndim == 2:
+            if count is not None and count != len(enc):
+                raise ValueError(
+                    f"2-D encoding carries {len(enc)} rows; count={count}")
+            count = len(enc)
+        elif count is None:
+            raise ValueError("count is required for a 1-D encoding")
         g, steps = self._resolve(guidance, num_steps)
         ck = (_encoding_hash(enc), g, steps) if self.cache_enabled else None
         return self._push(SynthesisRequest(
@@ -127,27 +220,47 @@ class SynthesisEngine:
             guidance=0.0, num_steps=steps))
 
     # -- draining ---------------------------------------------------------
-    def run(self, key) -> dict[int, np.ndarray]:
+    def run(self, key, *, poll: Callable[[], bool] | None = None,
+            stream: bool | None = None,
+            on_result: Callable[[int, np.ndarray], None] | None = None,
+            ) -> dict[int, np.ndarray]:
         """Drain the queue.  Returns rid -> (count, H, W, C) images.
 
-        Deterministic in ``key`` and the queue contents: wave ``i`` of the
+        Deterministic in ``key`` and the arrival trace: wave ``i`` of the
         drain samples with ``fold_in(key, i)``.  Cached rows are returned
         as generated by the run that produced them.
-        """
-        results: dict[int, np.ndarray] = {}
-        pending: list[SynthesisRequest] = []
-        for r in self._queue:                      # serve from cache first
-            served = self._from_cache(r)
-            if served is not None:
-                results[r.rid] = served
-            else:
-                pending.append(r)
-        self._queue = []
 
-        wave_i = 0
-        for gkey in sorted({self._group_key(r) for r in pending}):
-            grp = [r for r in pending if self._group_key(r) == gkey]
-            wave_i = self._run_group(grp, key, wave_i, results)
+        ``poll`` (streaming mode) is called before each wave is packed and
+        again before the drain concludes; it may submit new requests —
+        compatible ones are packed into the currently-open wave.  Return
+        truthy to keep the drain alive when the queue runs dry, falsy once
+        the arrival trace is exhausted.  ``stream`` defaults to
+        ``poll is not None``; streaming packs ``wave_size``-row waves with
+        a granule-rounded tail, snapshot mode packs near-uniform waves
+        (one compiled shape per group).
+
+        ``on_result`` (if given) is called with (rid, rows) the moment
+        each request's results exist — this drain's caller (e.g. a
+        SynthesisService resolving futures) keeps requests served BEFORE
+        a mid-drain failure even though ``run`` raises.
+
+        Requests are removed from the queue only once their results are
+        produced — an exception mid-drain keeps every unserved request
+        queued for the next ``run``.
+        """
+        stream = (poll is not None) if stream is None else stream
+        results: dict[int, np.ndarray] = {}
+        try:
+            self._drain(key, results, poll=poll, stream=stream,
+                        on_result=on_result)
+        finally:
+            if self.store is not None:
+                self.store.flush()
+            # in-place removal, not a rebuild: a concurrent submit from
+            # another thread (SynthesisService) may append mid-removal and
+            # a rebuilt list would silently drop that request
+            for r in [r for r in self._queue if r.rid in results]:
+                self._queue.remove(r)
         return results
 
     # -- internals --------------------------------------------------------
@@ -166,14 +279,15 @@ class SynthesisEngine:
         clf = ("clf", repr(r.group)) if r.mode == "clf" else ("", "")
         return (r.mode, r.guidance, r.num_steps) + clf
 
-    def _from_cache(self, r: SynthesisRequest):
-        if r.cache_key is None:
-            return None
-        have = self._cache.get(r.cache_key)
-        if have is not None and len(have) >= r.count:
-            self.stats["cache_hits"] += r.count
-            return have[:r.count].copy()
-        return None
+    def _cached_rows(self, ck) -> Optional[np.ndarray]:
+        """Memory cache, spilling in from the persistent store on miss."""
+        rows = self._cache.get(ck)
+        if rows is None and self.store is not None:
+            rows = self.store.get(ck)
+            if rows is not None:
+                self._cache[ck] = rows
+                self.stats["store_hits"] += len(rows)
+        return rows
 
     def _plan_waves(self, n: int) -> tuple[int, int]:
         """(num_waves, wave_rows): near-uniform waves, one compiled shape
@@ -207,69 +321,174 @@ class SynthesisEngine:
                              len(cond_rows), key, image_size=H, channels=C,
                              num_steps=grp_head.num_steps, eta=self.eta)
 
-    def _run_group(self, grp: list[SynthesisRequest], key, wave_i: int,
-                   results: dict) -> int:
-        head = grp[0]
-        # top-up: only generate rows the cache doesn't already hold.
-        # ``planned`` counts rows already scheduled THIS drain, so several
-        # requests sharing a cache key generate their union once (they are
-        # served the same rows — the cache's cross-drain semantics).
-        fresh = []
-        planned: dict[tuple, int] = {}
-        for r in grp:
+    # -- drain machinery --------------------------------------------------
+    def _drain(self, key, results, *, poll, stream, on_result=None):
+        st = _DrainState()
+        st.on_result = on_result
+        self._admit_new(st, results)
+        st.started = True             # later admissions count as streamed
+        while True:
+            live = sorted(g for g, q in st.groups.items()
+                          if q.rows_available())
+            if not live:
+                if poll is not None and poll():
+                    self._admit_new(st, results)
+                    continue
+                break
+            self._drain_group(st.groups[live[0]], st, key, results,
+                              poll=poll, stream=stream)
+        # any still-unresolved waiters are covered by rows generated above
+        self._serve_waiters(st, results)
+
+    def _admit_new(self, st: "_DrainState", results):
+        """Admission: serve full cache hits, compute top-up ``fresh`` row
+        counts against cache + rows already planned this drain, and push
+        the remainder onto their live group queues."""
+        for r in list(self._queue):
+            if r.rid in st.admitted:
+                continue
+            st.admitted.add(r.rid)
+            if st.started:
+                self.stats["streamed"] += 1
+            if r.count <= 0:               # degenerate: nothing to generate
+                st.deliver(results, r.rid, np.zeros(
+                    (0, self.image_size, self.image_size, self.channels),
+                    np.float32))
+                continue
             have = 0
             if r.cache_key is not None:
-                have = (len(self._cache.get(r.cache_key, ()))
-                        + planned.get(r.cache_key, 0))
-            f = max(r.count - have, 0)
-            if r.cache_key is not None and f:
-                planned[r.cache_key] = planned.get(r.cache_key, 0) + f
-            fresh.append(f)
-            self.stats["cache_hits"] += r.count - f
-        n = sum(fresh)
-        if head.mode == "cfg":
-            rows = np.concatenate([
-                np.repeat(r.cond[None], f, axis=0)
-                for r, f in zip(grp, fresh) if f] or
-                [np.zeros((0, self.dc.cond_dim), np.float32)])
-        elif head.mode == "clf":
-            rows = np.concatenate([
-                np.full((f,), r.category, np.int32)
-                for r, f in zip(grp, fresh) if f] or
-                [np.zeros((0,), np.int32)])
-        else:
-            rows = np.zeros((n,), np.int32)       # placeholder row ids
-
-        outs = np.zeros((0, self.image_size, self.image_size, self.channels),
-                        np.float32)
-        if n:
-            nw, wrows = self._plan_waves(n)
-            total = nw * wrows
-            if total > n:                          # pad by repeating tail row
-                rows = np.concatenate([rows, np.repeat(rows[-1:],
-                                                       total - n, axis=0)])
-            self.stats["padded"] += total - n
-            self.stats["generated"] += total
-            wave_out = []
-            for w in range(nw):
-                kw = jax.random.fold_in(key, wave_i)
-                wave_i += 1
-                x = self._sample_wave(head, rows[w * wrows:(w + 1) * wrows],
-                                      kw)
-                wave_out.append(np.asarray(x))
-                self.stats["waves"] += 1
-            outs = np.concatenate(wave_out)[:n]
-
-        # scatter rows back to requests (+ cache append)
-        off = 0
-        for r, f in zip(grp, fresh):
-            new = outs[off:off + f]
-            off += f
+                cached = self._cached_rows(r.cache_key)
+                have = ((0 if cached is None else len(cached))
+                        + st.planned.get(r.cache_key, 0))
+            fresh = max(r.count - have, 0)
+            self.stats["cache_hits"] += r.count - fresh
+            if fresh == 0:
+                cached = self._cached_rows(r.cache_key)
+                if cached is not None and len(cached) >= r.count:
+                    st.deliver(results, r.rid, cached[:r.count].copy())
+                else:
+                    # covered by rows another request planned this drain —
+                    # resolved once the generating wave retires
+                    st.waiters.append(r)
+                continue
             if r.cache_key is not None:
-                have = self._cache.get(r.cache_key)
-                self._cache[r.cache_key] = (new if have is None
-                                            else np.concatenate([have, new]))
-                results[r.rid] = self._cache[r.cache_key][:r.count].copy()
+                st.planned[r.cache_key] = (st.planned.get(r.cache_key, 0)
+                                           + fresh)
+            gk = self._group_key(r)
+            if gk not in st.groups:
+                st.groups[gk] = _GroupQueue(r)
+            st.groups[gk].push(_Pending(r, fresh))
+
+    def _drain_group(self, q: _GroupQueue, st: "_DrainState", key, results,
+                     *, poll, stream):
+        """Drain one group's live queue wave by wave, double-buffered:
+        wave k+1 is packed and dispatched while wave k runs on device."""
+        if stream:
+            wave_rows = self.wave_size
+        else:
+            _, wave_rows = self._plan_waves(q.rows_available())
+        inflight = None                  # (device x, parts, n_real)
+        while True:
+            # admission runs at every wave boundary with or without a
+            # poll, so requests submitted by another thread while waves
+            # are in flight stream into this drain too
+            if poll is not None:
+                poll()
+            self._admit_new(st, results)
+            parts = q.take(wave_rows)
+            got = sum(t for _, t, _ in parts)
+            if got == 0:
+                break
+            if got < wave_rows:
+                # open wave: give late arrivals one chance to fill it
+                if poll is not None:
+                    poll()
+                self._admit_new(st, results)
+                more = q.take(wave_rows - got)
+                parts += more
+                got += sum(t for _, t, _ in more)
+            # tail: snapshot keeps the group-uniform shape, streaming
+            # rounds to a granule multiple (one extra compiled tail shape)
+            target = (-(-got // self.granule) * self.granule if stream
+                      else wave_rows)
+            rows = np.concatenate([p.row_block(t, s) for p, t, s in parts])
+            if target > got:
+                rows = np.concatenate(
+                    [rows, np.repeat(rows[-1:], target - got, axis=0)])
+            kw = jax.random.fold_in(key, st.wave_i)
+            st.wave_i += 1
+            x = self._sample_wave(q.head, rows, kw)
+            self.stats["waves"] += 1
+            self.stats["generated"] += target
+            self.stats["padded"] += target - got
+            if inflight is not None:
+                self._retire(st, results, *inflight)
+            if self.async_waves:
+                inflight = (x, parts, got)
             else:
-                results[r.rid] = new
-        return wave_i
+                self._retire(st, results, x, parts, got)
+        if inflight is not None:
+            self._retire(st, results, *inflight)
+
+    def _retire(self, st: "_DrainState", results, x, parts, n_real):
+        """Fence on the wave's device computation, scatter rows back to
+        their requests, finalize any request whose rows are complete."""
+        jax.block_until_ready(x)
+        outs = np.asarray(x)[:n_real]
+        off = 0
+        for p, t, _ in parts:
+            p.chunks.append(outs[off:off + t])
+            off += t
+            if p.done_rows() == p.fresh:
+                self._finalize(st, p, results)
+
+    def _finalize(self, st: "_DrainState", p: _Pending, results):
+        new = (np.concatenate(p.chunks) if p.chunks else
+               np.zeros((0, self.image_size, self.image_size, self.channels),
+                        np.float32))
+        r = p.req
+        if r.cache_key is not None:
+            have = self._cache.get(r.cache_key)
+            merged = new if have is None else np.concatenate([have, new])
+            self._cache[r.cache_key] = merged
+            # these rows moved from planned to cached — leaving them in
+            # ``planned`` would double-count coverage for a same-key
+            # request streamed in later this drain
+            left = st.planned.get(r.cache_key, 0) - p.fresh
+            st.planned[r.cache_key] = max(left, 0)
+            if self.store is not None:
+                self.store.put(r.cache_key, merged)
+            st.deliver(results, r.rid, merged[:r.count].copy())
+            self._serve_waiters(st, results)
+        else:
+            st.deliver(results, r.rid, new)
+
+    def _serve_waiters(self, st: "_DrainState", results):
+        still = []
+        for r in st.waiters:
+            cached = self._cache.get(r.cache_key)
+            if cached is not None and len(cached) >= r.count:
+                st.deliver(results, r.rid, cached[:r.count].copy())
+            else:
+                still.append(r)
+        st.waiters = still
+
+
+class _DrainState:
+    """Book-keeping for one drain: live group queues, per-key rows already
+    planned (cache top-up accounting), requests waiting on rows another
+    request is generating, and the wave counter keying ``fold_in``."""
+
+    def __init__(self):
+        self.groups: dict[tuple, _GroupQueue] = {}
+        self.planned: dict[tuple, int] = {}
+        self.waiters: list[SynthesisRequest] = []
+        self.admitted: set[int] = set()
+        self.wave_i = 0
+        self.started = False          # True once initial admission is done
+        self.on_result = None         # this drain's streaming delivery hook
+
+    def deliver(self, results: dict, rid: int, rows):
+        results[rid] = rows
+        if self.on_result is not None:
+            self.on_result(rid, rows)

@@ -1,0 +1,87 @@
+"""checkpoint/io round-trip fidelity: dtypes (incl. bf16 extension
+dtypes npz cannot represent natively), manifest validation, and
+back-compat with pre-dtype manifests."""
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import io as ckpt
+
+
+def _tree():
+    return {
+        "w_f32": jnp.arange(6, dtype=jnp.float32).reshape(2, 3) / 7,
+        "w_bf16": (jnp.arange(8, dtype=jnp.float32) / 3).astype(jnp.bfloat16),
+        "step": jnp.asarray(17, jnp.int32),
+        "nested": {"b_f16": jnp.ones((4,), jnp.float16) * 0.5},
+    }
+
+
+def test_dtypes_round_trip_exactly(tmp_path):
+    tree = _tree()
+    p = tmp_path / "ck"
+    ckpt.save_pytree(tree, p, meta={"note": "dtype test"})
+    loaded = ckpt.load_pytree(tree, p)
+    for (path_a, a), (path_b, b) in zip(jax.tree_util.tree_flatten_with_path(tree)[0],
+                                        jax.tree_util.tree_flatten_with_path(loaded)[0]):
+        assert a.dtype == b.dtype, path_a
+        # bit-exact, not allclose: bf16 must not detour through f32 rounding
+        assert np.array_equal(np.asarray(a).reshape(-1).view(np.uint8),
+                              np.asarray(b).reshape(-1).view(np.uint8)), path_a
+
+
+def test_manifest_records_dtypes(tmp_path):
+    p = tmp_path / "ck"
+    ckpt.save_pytree(_tree(), p)
+    manifest = json.loads(p.with_suffix(".json").read_text())
+    assert manifest["dtypes"]["w_bf16"] == "bfloat16"
+    assert manifest["dtypes"]["w_f32"] == "float32"
+    assert set(manifest["dtypes"]) == set(manifest["keys"])
+
+
+def test_bf16_stored_as_raw_bits_not_pickle(tmp_path):
+    """The npz must stay loadable with allow_pickle=False — bf16 leaves
+    ride as uint16 bit patterns, not pickled void scalars."""
+    p = tmp_path / "ck"
+    ckpt.save_pytree(_tree(), p)
+    with np.load(p.with_suffix(".npz"), allow_pickle=False) as z:
+        assert z["w_bf16"].dtype == np.uint16
+
+
+def test_load_validates_dtype_against_manifest(tmp_path):
+    tree = _tree()
+    p = tmp_path / "ck"
+    ckpt.save_pytree(tree, p)
+    manifest = json.loads(p.with_suffix(".json").read_text())
+    manifest["dtypes"]["w_f32"] = "float64"        # corrupt the record
+    p.with_suffix(".json").write_text(json.dumps(manifest))
+    with pytest.raises(ValueError, match="inconsistent with manifest"):
+        ckpt.load_pytree(tree, p)
+
+
+def test_load_rejects_same_width_native_dtype_corruption(tmp_path):
+    """uint16 raw bits must only ever be re-viewed as the recorded
+    EXTENSION dtype — a manifest edited to a same-width native dtype
+    (float16) must raise, not silently reinterpret the bits."""
+    tree = _tree()
+    p = tmp_path / "ck"
+    ckpt.save_pytree(tree, p)
+    manifest = json.loads(p.with_suffix(".json").read_text())
+    manifest["dtypes"]["w_bf16"] = "float16"
+    p.with_suffix(".json").write_text(json.dumps(manifest))
+    with pytest.raises(ValueError, match="inconsistent with manifest"):
+        ckpt.load_pytree(tree, p)
+
+
+def test_legacy_manifest_without_dtypes_still_loads(tmp_path):
+    tree = {"w": jnp.ones((3,), jnp.float32)}
+    p = tmp_path / "ck"
+    ckpt.save_pytree(tree, p)
+    manifest = json.loads(p.with_suffix(".json").read_text())
+    del manifest["dtypes"]                         # pre-PR-2 checkpoint
+    p.with_suffix(".json").write_text(json.dumps(manifest))
+    loaded = ckpt.load_pytree(tree, p)
+    assert np.array_equal(np.asarray(loaded["w"]), np.ones((3,), np.float32))

@@ -159,6 +159,125 @@ def test_mesh_aware_wave_batches(dm):
     assert eng.granule % dsize == 0 and eng.wave_size % dsize == 0
 
 
+def test_wave_planner_count_below_granule(dm):
+    """A request smaller than one granule still costs one granule-sized
+    wave — the floor of the wave quantisation."""
+    eng = _engine(dm)
+    assert eng._plan_waves(3) == (1, 8)
+    eng.submit(_enc(20), 0, 3)
+    eng.run(jax.random.PRNGKey(0))
+    assert eng.stats["generated"] == 8 and eng.stats["padded"] == 5
+
+
+def test_wave_planner_exact_wave_multiples(dm):
+    """Counts landing exactly on wave boundaries plan zero padding."""
+    eng = _engine(dm)
+    assert eng._plan_waves(8) == (1, 8)
+    assert eng._plan_waves(16) == (2, 8)
+    assert eng._plan_waves(24) == (3, 8)
+    eng.submit(_enc(21), 0, 24)
+    eng.run(jax.random.PRNGKey(0))
+    assert eng.stats["waves"] == 3
+    assert eng.stats["generated"] == 24 and eng.stats["padded"] == 0
+
+
+def test_wave_planner_rounded_granule(dm):
+    """A granule that does not divide wave_size (the mesh-rounding case:
+    granule is rounded UP to the data-parallel device count) rounds the
+    wave size up and keeps every wave a granule multiple."""
+    eng = _engine(dm, granule=5, wave_size=8)
+    assert eng.wave_size == 10                     # ceil(8/5)*5
+    for n in (1, 5, 10, 12, 23):
+        nw, rows = eng._plan_waves(n)
+        assert rows % eng.granule == 0
+        assert nw * rows >= n
+        assert nw * rows - n < eng.granule * nw    # < one granule per wave
+    eng.submit(_enc(22), 0, 12)
+    eng.run(jax.random.PRNGKey(0))
+    # 12 rows → 2 near-uniform waves of ceil(6/5)*5 = 10 rows
+    assert eng.stats["waves"] == 2
+    assert eng.stats["generated"] == 20 and eng.stats["padded"] == 8
+
+
+def test_two_dim_encoding_one_request_distinct_rows(dm):
+    """A (k, cond_dim) submission is ONE request carrying k distinct
+    conditionings (the FedDISC shape) — one cache entry, and the rows
+    genuinely differ from repeating any single row."""
+    eng = _engine(dm)
+    mat = np.stack([_enc(60 + i) for i in range(4)])        # (4, D)
+    ra = eng.submit(mat, 0)                                 # count inferred
+    rb = eng.submit(mat[0], 0, 4)                           # repeated row
+    out = eng.run(jax.random.PRNGKey(12))
+    assert out[ra].shape == out[rb].shape == (4, H, H, 3)
+    assert not np.array_equal(out[ra], out[rb])
+    # resubmission is a single full cache hit
+    rc = eng.submit(mat, 0)
+    again = eng.run(jax.random.PRNGKey(13))[rc]
+    assert np.array_equal(again, out[ra])
+    with pytest.raises(ValueError, match="rows; count"):
+        eng.submit(mat, 0, 3)
+    with pytest.raises(ValueError, match="count is required"):
+        eng.submit(mat[0], 0)
+
+
+def test_cache_topup_deterministic_across_drains(dm):
+    """Two engines fed the same submission/drain/key trace produce
+    bit-identical topped-up cache contents."""
+    outs = []
+    for _ in range(2):
+        eng = _engine(dm)
+        enc = _enc(30)
+        ra = eng.submit(enc, 0, 4)
+        first = eng.run(jax.random.PRNGKey(1))[ra]
+        rb = eng.submit(enc, 0, 7)
+        more = eng.run(jax.random.PRNGKey(2))[rb]
+        assert np.array_equal(more[:4], first)     # cached prefix reused
+        outs.append(more)
+    assert np.array_equal(outs[0], outs[1])
+
+
+def test_drain_failure_keeps_unserved_requests(dm):
+    """Regression: an exception mid-drain must not drop unserved requests
+    — they stay queued and the next drain serves them."""
+    eng = _engine(dm)
+    ra = eng.submit(_enc(40), 0, 4, guidance=1.0)
+    rb = eng.submit(_enc(41), 1, 4, guidance=9.0)   # later-sorted wave group
+    orig = eng._sample_wave
+    calls = []
+
+    def failing(head, rows, key):
+        calls.append(head.guidance)
+        if len(calls) > 1:
+            raise RuntimeError("sampler died mid-drain")
+        return orig(head, rows, key)
+
+    eng._sample_wave = failing
+    with pytest.raises(RuntimeError, match="mid-drain"):
+        eng.run(jax.random.PRNGKey(3))
+    # the first group's wave completed and was served; the second stayed
+    queued = {r.rid for r in eng._queue}
+    assert rb in queued and ra not in queued
+    eng._sample_wave = orig
+    out = eng.run(jax.random.PRNGKey(4))
+    assert out[rb].shape == (4, H, H, 3)
+
+
+def test_drain_failure_first_wave_keeps_everything(dm):
+    eng = _engine(dm)
+    rids = [eng.submit(_enc(42), 0, 4), eng.submit(_enc(43), 1, 4)]
+
+    def always_fail(head, rows, key):
+        raise RuntimeError("boom")
+
+    orig, eng._sample_wave = eng._sample_wave, always_fail
+    with pytest.raises(RuntimeError):
+        eng.run(jax.random.PRNGKey(5))
+    assert {r.rid for r in eng._queue} == set(rids)
+    eng._sample_wave = orig
+    out = eng.run(jax.random.PRNGKey(5))
+    assert set(out) == set(rids)
+
+
 def test_oscar_synthesize_empty_present(dm):
     from repro.core.oscar import synthesize
     params, sched = dm

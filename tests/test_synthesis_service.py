@@ -1,0 +1,322 @@
+"""SynthesisService behaviour: futures, streaming admission into open
+waves, the deterministic drain-key stream, and the persistent
+content-addressed D_syn store (cold-process warm-store reruns)."""
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.oscar import DiffusionConfig
+from repro.diffusion.dit import init_dit
+from repro.diffusion.schedule import make_schedule
+from repro.serve import (SynthesisEngine, SynthesisFuture, SynthesisService,
+                         SynthesisStore)
+
+DC = DiffusionConfig(d_model=32, num_layers=1, num_heads=2,
+                     sample_timesteps=3, train_timesteps=16)
+H = 8
+
+
+@pytest.fixture(scope="module")
+def dm():
+    key = jax.random.PRNGKey(0)
+    params = init_dit(key, DC, H, 3)
+    leaves, treedef = jax.tree.flatten(params)
+    keys = jax.random.split(jax.random.PRNGKey(1), len(leaves))
+    params = jax.tree.unflatten(treedef, [
+        a + 0.05 * jax.random.normal(k, a.shape, a.dtype)
+        for a, k in zip(leaves, keys)])
+    sched = make_schedule(DC.train_timesteps, DC.schedule)
+    return params, sched
+
+
+def _service(dm, **kw):
+    params, sched = dm
+    eng = SynthesisEngine(params, DC, sched, image_size=H, wave_size=8,
+                          async_waves=kw.pop("async_waves", True))
+    return SynthesisService(eng, **kw)
+
+
+def _enc(seed):
+    e = np.random.default_rng(seed).normal(size=(DC.cond_dim,))
+    return (e / np.linalg.norm(e)).astype(np.float32)
+
+
+def test_submit_returns_pending_future_result_drains(dm):
+    svc = _service(dm, key=0)
+    fut = svc.submit(_enc(0), 0, 3)
+    assert isinstance(fut, SynthesisFuture) and not fut.done()
+    out = fut.result()                      # triggers the drain
+    assert fut.done()
+    assert out.shape == (3, H, H, 3)
+
+
+def test_gather_preserves_submission_order(dm):
+    svc = _service(dm, key=0)
+    futs = [svc.submit(_enc(i), i % 3, c) for i, c in enumerate((2, 5, 3))]
+    outs = svc.gather(futs)
+    assert [o.shape[0] for o in outs] == [2, 5, 3]
+    assert svc.stats["drains"] == 1         # one drain served all three
+
+
+def test_drain_key_stream_is_deterministic(dm):
+    outs = []
+    for _ in range(2):
+        svc = _service(dm, key=7)
+        f = svc.submit(_enc(1), 0, 4)
+        g = svc.submit(_enc(2), 1, 4)
+        svc.drain()
+        h = svc.submit(_enc(3), 2, 4)       # second drain, next stream key
+        svc.drain()
+        outs.append([f.result(), g.result(), h.result()])
+    for a, b in zip(*outs):
+        assert np.array_equal(a, b)
+
+
+def test_streaming_fills_open_waves_fewer_padding(dm):
+    """Acceptance: on the same arrival trace, the streaming drain packs
+    late arrivals into open waves and pads fewer rows than snapshot
+    drains."""
+    initial = [(_enc(10), 0, 3), (_enc(11), 1, 2)]        # 5 rows
+    late = [(_enc(20), 2, 2), (_enc(21), 0, 1)]           # 3 more, mid-drain
+
+    # snapshot path: late arrivals form a second drain
+    snap = _service(dm, key=3)
+    for e, c, n in initial:
+        snap.submit(e, c, n)
+    snap.drain()
+    for e, c, n in late:
+        snap.submit(e, c, n)
+    snap.drain()
+
+    # streaming path: poll feeds the same arrivals into the open drain
+    strm = _service(dm, key=3)
+    for e, c, n in initial:
+        strm.submit(e, c, n)
+    trace = list(late)
+
+    def poll():
+        if not trace:
+            return False
+        strm.submit(*trace.pop(0))
+        return True
+
+    out = strm.drain(poll=poll)
+    assert len(out) == 4
+    assert strm.stats["streamed"] == 2
+    # 5+3 rows fill ONE 8-row wave; the snapshot path pads each of its
+    # two drains up to a full wave
+    assert strm.stats["padded"] == 0
+    assert strm.stats["padded"] < snap.stats["padded"]
+    assert strm.stats["generated"] < snap.stats["generated"]
+
+
+def test_warm_store_cold_process_zero_sampler_calls(dm, tmp_path):
+    """Acceptance: a cold process (fresh engine + fresh store handle on
+    the same directory) serves a repeated workload with zero sampler
+    calls and bit-identical D_syn."""
+    store_dir = tmp_path / "dsyn"
+    warm = _service(dm, key=5, store=SynthesisStore(store_dir))
+    futs = [warm.submit(_enc(30 + i), i, 5) for i in range(3)]
+    outs = warm.gather(futs)
+    assert warm.stats["generated"] > 0
+
+    cold = _service(dm, key=5, store=SynthesisStore(store_dir))
+    futs2 = [cold.submit(_enc(30 + i), i, 5) for i in range(3)]
+    outs2 = cold.gather(futs2)
+    assert cold.stats["generated"] == 0
+    assert cold.stats["waves"] == 0
+    assert cold.stats["store_hits"] > 0
+    for a, b in zip(outs, outs2):
+        assert np.array_equal(a, b)
+
+
+def test_store_topup_after_restore(dm, tmp_path):
+    """A larger count against a warm store generates only the top-up."""
+    store_dir = tmp_path / "dsyn"
+    warm = _service(dm, key=6, store=SynthesisStore(store_dir))
+    warm.submit(_enc(50), 0, 4).result()
+
+    cold = _service(dm, key=6, store=SynthesisStore(store_dir))
+    out = cold.submit(_enc(50), 0, 6).result()
+    assert out.shape[0] == 6
+    assert cold.stats["cache_hits"] == 4            # restored prefix
+    assert cold.stats["generated"] == 8             # one granule top-up wave
+
+    # and the store now holds the union for the NEXT process
+    cold2 = _service(dm, key=6, store=SynthesisStore(store_dir))
+    out2 = cold2.submit(_enc(50), 0, 6).result()
+    assert cold2.stats["generated"] == 0
+    assert np.array_equal(out, out2)
+
+
+def test_store_layout_and_validation(dm, tmp_path):
+    store_dir = tmp_path / "dsyn"
+    svc = _service(dm, key=8, store=SynthesisStore(store_dir))
+    svc.submit(_enc(60), 0, 2).result()
+
+    manifest = json.loads((store_dir / "manifest.json").read_text())
+    assert manifest["version"] == 1
+    (slug, ent), = manifest["entries"].items()
+    assert ent["count"] == 2 and ent["dtype"] == "float32"
+    assert ent["shape"] == [2, H, H, 3]
+    assert (store_dir / ent["file"]).exists()
+    assert ent["file"] == f"shards/{slug}.npz"
+
+    key = (ent["key"]["encoding_sha1"], ent["key"]["guidance"],
+           ent["key"]["steps"])
+
+    # a shard SHORTER than its entry (lost same-key flush race) is a
+    # miss — re-synthesize rather than crash every future process
+    ent["count"] = 99
+    ent["shape"][0] = 99
+    (store_dir / "manifest.json").write_text(json.dumps(manifest))
+    assert SynthesisStore(store_dir).get(key) is None
+
+    # structural corruption (wrong row shape) must refuse to serve
+    ent["count"] = 2
+    ent["shape"] = [2, H + 1, H, 3]
+    (store_dir / "manifest.json").write_text(json.dumps(manifest))
+    with pytest.raises(ValueError, match="does not match its manifest"):
+        SynthesisStore(store_dir).get(key)
+
+    # a slug recording a different key than requested must refuse too
+    ent["shape"] = [2, H, H, 3]
+    ent["key"]["steps"] = 999
+    (store_dir / "manifest.json").write_text(json.dumps(manifest))
+    with pytest.raises(ValueError, match="different cache key"):
+        SynthesisStore(store_dir).get(key)
+
+
+def test_midwave_submit_streams_into_drain_without_poll(dm):
+    """A request submitted while a wave is in flight (the cross-thread
+    path, simulated from inside the sampler) joins the SAME drain at the
+    next wave boundary — no poll callback required."""
+    svc = _service(dm, key=18)
+    svc.submit(_enc(99), 0, 8)                   # one full wave
+    eng = svc.engine
+    orig = eng._sample_wave
+    injected = []
+
+    def inject(head, rows, key):
+        if not injected:
+            injected.append(svc.submit(_enc(100), 1, 8))
+        return orig(head, rows, key)
+
+    eng._sample_wave = inject
+    out = svc.drain()                            # no poll
+    eng._sample_wave = orig
+    fut, = injected
+    assert fut.rid in out and fut.done()
+    assert fut.result().shape == (8, H, H, 3)
+    assert svc.stats["streamed"] == 1
+
+
+def test_sync_and_async_waves_bit_identical(dm):
+    """The double-buffered dispatch is a scheduling change only — results
+    must match the fenced synchronous path exactly."""
+    outs = []
+    for async_waves in (False, True):
+        svc = _service(dm, key=9, async_waves=async_waves)
+        futs = [svc.submit(_enc(70 + i), i, c)
+                for i, c in enumerate((3, 9, 5))]
+        outs.append(svc.gather(futs))
+    for a, b in zip(*outs):
+        assert np.array_equal(a, b)
+
+
+def test_partial_drain_failure_resolves_served_futures(dm):
+    """Futures resolve as waves retire: a request whose wave completed
+    before a later wave failed stays served (its results are not lost
+    with the exception), and the failed request survives for a retry."""
+    svc = _service(dm, key=13)
+    fa = svc.submit(_enc(90), 0, 4, guidance=1.0)
+    fb = svc.submit(_enc(91), 1, 4, guidance=9.0)   # later-sorted group
+    eng = svc.engine
+    orig = eng._sample_wave
+    calls = []
+
+    def failing(head, rows, key):
+        calls.append(1)
+        if len(calls) > 1:
+            raise RuntimeError("sampler died mid-drain")
+        return orig(head, rows, key)
+
+    eng._sample_wave = failing
+    with pytest.raises(RuntimeError, match="mid-drain"):
+        svc.drain()
+    assert fa.done() and fa.result().shape == (4, H, H, 3)
+    assert not fb.done()
+    eng._sample_wave = orig
+    assert fb.result().shape == (4, H, H, 3)        # retry drain serves it
+
+
+def test_store_serves_manifest_prefix_of_outrun_shard(dm, tmp_path):
+    """Crash tolerance: a shard holding MORE rows than its manifest entry
+    (crash between shard and manifest renames) serves the recorded
+    prefix instead of refusing."""
+    store_dir = tmp_path / "dsyn"
+    svc = _service(dm, key=14, store=SynthesisStore(store_dir))
+    first = svc.submit(_enc(95), 0, 4).result()
+    svc.submit(_enc(95), 0, 6).result()             # shard grows to 6 rows
+
+    manifest = json.loads((store_dir / "manifest.json").read_text())
+    (slug, ent), = manifest["entries"].items()
+    ent["count"] = 4                                # roll the manifest back
+    ent["shape"][0] = 4
+    (store_dir / "manifest.json").write_text(json.dumps(manifest))
+    cold = SynthesisStore(store_dir)
+    rows = cold.get((ent["key"]["encoding_sha1"], ent["key"]["guidance"],
+                     ent["key"]["steps"]))
+    assert rows.shape[0] == 4
+    assert np.array_equal(rows, first)
+
+
+def test_streamed_repeat_after_finalize_tops_up(dm):
+    """Regression: a same-cache-key request streamed in AFTER its earlier
+    twin finalized must see those rows as cached (not still 'planned') —
+    double-counting left it an unservable waiter and dropped it from the
+    drain."""
+    svc = _service(dm, key=15)
+    fa = svc.submit(_enc(96), 0, 4, guidance=1.0)
+    svc.submit(_enc(97), 1, 8, guidance=9.0)   # keeps the drain open
+    repeat = []
+
+    def poll():
+        if repeat:
+            return False
+        if fa.done():                # group 1 finalized; drain still live
+            repeat.append(svc.submit(_enc(96), 0, 8, guidance=1.0))
+        return True
+
+    out = svc.drain(poll=poll)
+    fr, = repeat
+    assert fr.rid in out and fr.done()
+    r = fr.result()
+    assert r.shape[0] == 8
+    assert np.array_equal(r[:4], fa.result())   # cached prefix + top-up
+
+
+def test_second_service_on_same_engine_does_not_orphan_futures(dm):
+    """Regression: wrapping a shared engine in a throwaway service (the
+    synthesize(engine=...) back-compat path) must not steal result
+    delivery from the longer-lived service's futures."""
+    svc_a = _service(dm, key=16)
+    SynthesisService(svc_a.engine, key=17)      # e.g. a throwaway wrapper
+    fut = svc_a.submit(_enc(98), 0, 3)
+    assert fut.result().shape == (3, H, H, 3)
+
+
+def test_oscar_synthesize_routes_through_service(dm):
+    from repro.core.oscar import synthesize
+    params, sched = dm
+    svc = _service(dm, key=11)
+    enc = np.stack([np.stack([_enc(80 + c) for c in range(3)])])
+    present = np.ones((1, 3), bool)
+    sx, sy = synthesize(jax.random.PRNGKey(0), params, DC, sched, enc,
+                        present, 2, image_size=H, service=svc)
+    assert sx.shape == (6, H, H, 3)
+    assert list(sy) == [0, 0, 1, 1, 2, 2]
+    assert svc.stats["requests"] == 3
