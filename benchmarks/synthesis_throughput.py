@@ -16,13 +16,26 @@ categories, k samples per (client, category) encoding.  Five runs:
   SynthesisService poll; open waves absorb them (compare padded rows
   against ``two_snapshots``, the same trace drained snapshot-style);
 * ``store_warm``   — a COLD process (fresh engine, fresh store handle)
-  against the warm on-disk D_syn store: zero sampler calls.
+  against the warm on-disk D_syn store: zero sampler calls;
+* ``ragged``       — a MIXED (guidance, steps) workload (the guidance
+  sweep's groups next to a second step count) served grouped vs ragged:
+  grouped compiles one trajectory per (guidance, steps) group and pads
+  each group's waves separately; ragged waves carry per-row guidance and
+  step counts, so every classifier-free row shares one compiled geometry.
+  Reported: padded rows, distinct compiled shapes, wall-clock, and
+  ``row_iters`` — the honest device-work count (ragged's frozen
+  right-aligned rows still ride through the denoiser).  The comparison
+  ASSERTS ragged pads strictly fewer rows and compiles strictly fewer
+  shapes, so a regression fails CI's smoke run.
 
-Writes ``results/BENCH_synthesis.json`` via the shared harness.
+Writes ``results/BENCH_synthesis.json`` via the shared harness
+(``--mode ragged`` re-runs only the ragged comparison and merges it into
+an existing results file).
 """
 from __future__ import annotations
 
 import argparse
+import json
 import tempfile
 import time
 
@@ -30,7 +43,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import print_table, save_result
+from benchmarks.common import RESULTS, print_table, save_result
 from repro.configs.oscar import DiffusionConfig
 from repro.diffusion.dit import init_dit
 from repro.diffusion.sampler import sample_cfg
@@ -107,6 +120,65 @@ def _bench_streaming(params, dc, sched, enc, *, steps, k):
             "streamed_requests": strm.stats["streamed"]}
 
 
+def _bench_ragged(params, dc, sched, enc, *, steps, k):
+    """Grouped vs ragged on an identical MIXED workload: the R×C requests
+    round-robin over (guidance, steps) combos — the serving-time shape of
+    a guidance sweep running next to requests at another step budget."""
+    R, C = enc.shape[:2]
+    half = max(steps // 2, 2)
+    combos = [(1.5, steps), (4.0, steps), (7.5, half), (1.5, half)]
+
+    def run_mode(ragged):
+        eng = SynthesisEngine(params, dc, sched, image_size=16, cache=False,
+                              ragged=ragged)
+        rids = []
+        for i, (r, c) in enumerate((r, c) for r in range(R)
+                                   for c in range(C)):
+            g, s = combos[i % len(combos)]
+            rids.append(eng.submit(enc[r, c], c, k, guidance=g, num_steps=s))
+        t0 = time.time()
+        out = eng.run(jax.random.PRNGKey(2))
+        wall = time.time() - t0
+        assert all(out[rid].shape[0] == k for rid in rids)
+        return wall, dict(eng.stats)
+
+    t_grp, st_grp = run_mode(False)
+    t_rag, st_rag = run_mode(True)
+    res = {"combos": len(combos),
+           "grouped_s": t_grp, "ragged_s": t_rag,
+           "grouped_padded": st_grp["padded"],
+           "ragged_padded": st_rag["padded"],
+           "grouped_compiled": st_grp["compiled_shapes"],
+           "ragged_compiled": st_rag["compiled_shapes"],
+           "grouped_waves": st_grp["waves"], "ragged_waves": st_rag["waves"],
+           "grouped_row_iters": st_grp["row_iters"],
+           "ragged_row_iters": st_rag["row_iters"]}
+    # the CI regression gate: cross-group wave fusion must strictly beat
+    # per-group packing on both padding and compile count
+    assert res["ragged_padded"] < res["grouped_padded"], (
+        f"ragged padded {res['ragged_padded']} rows >= grouped "
+        f"{res['grouped_padded']} — ragged wave fusion regressed")
+    assert res["ragged_compiled"] < res["grouped_compiled"], (
+        f"ragged compiled {res['ragged_compiled']} shapes >= grouped "
+        f"{res['grouped_compiled']} — ragged wave fusion regressed")
+    return res
+
+
+def _print_ragged(ragged: dict):
+    print_table("Ragged waves — mixed (guidance, steps) workload", [
+        {"mode": "grouped", "wall_s": ragged["grouped_s"],
+         "padded": ragged["grouped_padded"],
+         "compiled": ragged["grouped_compiled"],
+         "waves": ragged["grouped_waves"],
+         "row_iters": ragged["grouped_row_iters"]},
+        {"mode": "ragged", "wall_s": ragged["ragged_s"],
+         "padded": ragged["ragged_padded"],
+         "compiled": ragged["ragged_compiled"],
+         "waves": ragged["ragged_waves"],
+         "row_iters": ragged["ragged_row_iters"]},
+    ], ["mode", "wall_s", "padded", "compiled", "waves", "row_iters"])
+
+
 def _bench_store(params, dc, sched, enc, *, steps, k, store_dir):
     """Warm an on-disk store, then serve the workload from a cold process
     (fresh engine + fresh store handle): zero sampler calls."""
@@ -130,7 +202,7 @@ def _bench_store(params, dc, sched, enc, *, steps, k, store_dir):
             "store_hits": stats["store_hits"]}
 
 
-def run(preset: str = "paper"):
+def run(preset: str = "paper", mode: str = "all"):
     w = _workload(preset)
     dc, steps = w["dc"], w["steps"]
     R, C, k = w["R"], w["C"], w["k"]
@@ -145,6 +217,19 @@ def run(preset: str = "paper"):
     n = len(conds)
     print(f"  workload: {R} clients x {C} categories x {k} samples "
           f"= {n} images, {steps} steps")
+
+    if mode == "ragged":
+        # ragged comparison only (the CI regression step): merge into an
+        # existing results file rather than clobbering the full run
+        ragged = _bench_ragged(params, dc, sched, enc, steps=steps, k=k)
+        _print_ragged(ragged)
+        path = RESULTS / "BENCH_synthesis.json"
+        res = json.loads(path.read_text()) if path.exists() else {}
+        if res.get("preset") != preset:
+            res = {"preset": preset}    # never mix presets in one file
+        res["ragged"] = ragged
+        save_result("BENCH_synthesis", res)
+        return res
 
     t0 = time.time()
     seed_out = _seed_loop(params, dc, sched, conds, key, steps=steps)
@@ -173,6 +258,7 @@ def run(preset: str = "paper"):
     with tempfile.TemporaryDirectory(prefix="dsyn_store_") as store_dir:
         store = _bench_store(params, dc, sched, enc, steps=steps, k=k,
                              store_dir=store_dir)
+    ragged = _bench_ragged(params, dc, sched, enc, steps=steps, k=k)
 
     rows = [
         {"path": "seed_loop", "wall_s": t_seed, "img_per_s": n / t_seed},
@@ -186,6 +272,7 @@ def run(preset: str = "paper"):
     ]
     print_table("Synthesis throughput — engine waves vs seed chunk loops",
                 rows, ["path", "wall_s", "img_per_s"])
+    _print_ragged(ragged)
     print(f"  streaming: padded {streaming['streaming_padded']} rows vs "
           f"{streaming['two_snapshots_padded']} snapshot-drained, "
           f"{streaming['streamed_requests']} requests admitted mid-drain")
@@ -198,6 +285,7 @@ def run(preset: str = "paper"):
            "speedup_cold": t_seed / t_cold,
            "speedup_warm": t_seed / max(t_warm, 1e-9),
            "engine_stats": dict(eng.stats),
+           "ragged": ragged,
            **streaming, **store}
     save_result("BENCH_synthesis", res)
     return res
@@ -207,8 +295,12 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--preset", default="paper",
                     choices=("smoke", "quick", "paper"))
+    ap.add_argument("--mode", default="all", choices=("all", "ragged"),
+                    help="'ragged' runs only the grouped-vs-ragged mixed-"
+                         "workload comparison and merges it into an "
+                         "existing BENCH_synthesis.json")
     args = ap.parse_args()
-    run(args.preset)
+    run(args.preset, args.mode)
 
 
 if __name__ == "__main__":

@@ -28,25 +28,32 @@ from repro.serve.service import SynthesisService
 from repro.serve.synthesis import SynthesisEngine
 
 
-def _service(service, engine, ocfg, dm_params, sched):
+def _service(service, engine, ocfg, dm_params, sched, *,
+             ragged: bool = False):
     """Every baseline's D_syn generation routes through a service.  An
     explicitly-passed engine beats a shared service (same precedence as
     ``oscar.synthesize``); otherwise the shared service, else a fresh
-    engine."""
+    engine.  ``ragged=True`` opts the chosen engine into ragged waves
+    (opt-in only — it never forces a ragged shared engine back)."""
     if engine is not None:
+        if ragged:
+            engine.ragged = True
         return SynthesisService(engine)
     if service is not None:
+        if ragged:
+            service.engine.ragged = True
         return service
     return SynthesisService(SynthesisEngine(
         dm_params, ocfg.diffusion, sched, image_size=ocfg.data.image_size,
-        channels=ocfg.data.channels))
+        channels=ocfg.data.channels, ragged=ragged))
 
 
 def run_fedcado(key, ocfg: OscarConfig, data, dm_params, sched, *,
                 classifier: str | None = None, samples_per_category=None,
                 local_steps: int = 200,
                 engine: SynthesisEngine | None = None,
-                service: SynthesisService | None = None):
+                service: SynthesisService | None = None,
+                ragged: bool = False):
     classifier = classifier or ocfg.classifier
     k_samples = samples_per_category or ocfg.samples_per_category
     R = data.client_images.shape[0]
@@ -69,7 +76,9 @@ def run_fedcado(key, ocfg: OscarConfig, data, dm_params, sched, *,
     # One request per (client, category); the engine packs each client's
     # requests (same uploaded classifier → same wave group) into uniform
     # waves, so every client shares one compiled trajectory shape.
-    svc = _service(service, engine, ocfg, dm_params, sched)
+    # (``ragged`` affects only classifier-FREE groups; it is threaded so a
+    # FedCADO run next to cfg traffic leaves the shared engine configured.)
+    svc = _service(service, engine, ocfg, dm_params, sched, ragged=ragged)
 
     def make_logprob(pr):
         def logprob(x, labels):
@@ -101,7 +110,8 @@ def run_feddisc(key, ocfg: OscarConfig, data, dm_params, sched, fm: FrozenFM,
                 *, classifier: str | None = None, samples_per_category=None,
                 n_prototypes: int = 4,
                 engine: SynthesisEngine | None = None,
-                service: SynthesisService | None = None):
+                service: SynthesisService | None = None,
+                ragged: bool = False):
     classifier = classifier or ocfg.classifier
     k_samples = samples_per_category or ocfg.samples_per_category
     R = data.client_images.shape[0]
@@ -129,8 +139,10 @@ def run_feddisc(key, ocfg: OscarConfig, data, dm_params, sched, fm: FrozenFM,
     # Each (client, category)'s resampled statistics go up as ONE 2-D
     # request — k_samples DISTINCT conditioning rows, a single cache/
     # store entry (the engine batches across clients and categories into
-    # uniform waves either way).
-    svc = _service(service, engine, ocfg, dm_params, sched)
+    # uniform waves either way; ``ragged=True`` lets those waves also mix
+    # with other classifier-free traffic, e.g. OSCAR uploads at a
+    # different guidance scale, in one compiled trajectory).
+    svc = _service(service, engine, ocfg, dm_params, sched, ragged=ragged)
     rng = np.random.default_rng(0)
     futs, labels = [], []
     for r in range(R):

@@ -52,7 +52,8 @@ def client_encodings(fm: FrozenFM, data):
 def synthesize(key, dm_params, dc, sched, encodings, present, k_samples: int,
                *, image_size: int, channels: int = 3, guidance=None,
                use_pallas: bool = False, engine: SynthesisEngine | None = None,
-               service: SynthesisService | None = None, wave_size: int = 128):
+               service: SynthesisService | None = None, wave_size: int = 128,
+               ragged: bool = False):
     """Step (3): server-side D_syn generation.  Returns (images, labels).
 
     Synthesis is embarrassingly parallel over (client × category × sample);
@@ -60,7 +61,12 @@ def synthesize(key, dm_params, dc, sched, encodings, present, k_samples: int,
     and the engine batches them into uniform CFG waves (DESIGN.md §4).
     A shared ``service`` (e.g. ``Experiment.service``) additionally serves
     repeats from its persistent D_syn store.  An all-absent ``present``
-    mask degenerates to empty arrays."""
+    mask degenerates to empty arrays.
+
+    ``ragged=True`` opts the engine into ragged waves (per-row guidance
+    and step counts — one compiled trajectory across classifier-free
+    groups; see ``SynthesisEngine``).  Opt-in only: it switches a shared
+    engine ON but never forces a ragged shared engine back to grouped."""
     R, C, dim = encodings.shape
     svc, eng = service, engine
     if eng is not None:
@@ -74,7 +80,9 @@ def synthesize(key, dm_params, dc, sched, encodings, present, k_samples: int,
     if eng is None:
         eng = SynthesisEngine(dm_params, dc, sched, image_size=image_size,
                               channels=channels, use_pallas=use_pallas,
-                              wave_size=wave_size)
+                              wave_size=wave_size, ragged=ragged)
+    elif ragged:
+        eng.ragged = True
     if svc is None:
         svc = SynthesisService(eng)
     futs, cats = [], []
@@ -100,7 +108,8 @@ def run_oscar(key, ocfg: OscarConfig, data, dm_params, sched, fm: FrozenFM,
               guidance: float | None = None,
               use_pallas: bool = False,
               engine: SynthesisEngine | None = None,
-              service: SynthesisService | None = None) -> OscarResult:
+              service: SynthesisService | None = None,
+              ragged: bool = False) -> OscarResult:
     classifier = classifier or ocfg.classifier
     k_samples = samples_per_category or ocfg.samples_per_category
     kenc, ksyn, kclf = jax.random.split(key, 3)
@@ -111,7 +120,7 @@ def run_oscar(key, ocfg: OscarConfig, data, dm_params, sched, fm: FrozenFM,
                               image_size=ocfg.data.image_size,
                               channels=ocfg.data.channels,
                               guidance=guidance, use_pallas=use_pallas,
-                              engine=engine, service=service)
+                              engine=engine, service=service, ragged=ragged)
     if len(syn_x) == 0:
         # degenerate round: no (client, category) present anywhere — no
         # D_syn, so the broadcast model is the untrained init

@@ -20,19 +20,43 @@ A strategy answers two questions per step:
 """
 from __future__ import annotations
 
+import functools
 from dataclasses import dataclass
 from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs.oscar import DiffusionConfig
 from repro.diffusion.dit import dit_apply
 from repro.diffusion.schedule import NoiseSchedule
 
 
+def _strictly_decreasing(ts, num_steps: int):
+    """Enforce a strictly-decreasing integer trajectory ending at 0.
+
+    Rounding the respaced linspace can emit repeated t values (certain
+    when ``num_steps > T``; a float-precision hazard near it), and a
+    repeated timestep is a wasted denoiser call: ᾱ_t == ᾱ_prev makes the
+    update pure re-noising.  The fix is the tightest strictly-decreasing
+    envelope under the rounded trajectory (``cummin`` of ``ts + i`` minus
+    ``i``), floored so the tail still reaches 0 — the identity whenever
+    the input is already strictly decreasing, which is every collision-
+    free case, so historical trajectories are reproduced bit-exactly.
+    """
+    i = jnp.arange(num_steps)
+    ts = jax.lax.cummin(ts + i) - i            # strictly decreasing
+    return jnp.maximum(ts, num_steps - 1 - i)  # …and still ends at 0
+
+
 def respaced_ts(T: int, num_steps: int):
-    return jnp.linspace(T - 1, 0, num_steps).round().astype(jnp.int32)
+    if num_steps > T:
+        raise ValueError(
+            f"num_steps={num_steps} > T={T}: a respaced trajectory cannot "
+            f"visit more distinct timesteps than the schedule has")
+    ts = jnp.linspace(T - 1, 0, num_steps).round().astype(jnp.int32)
+    return _strictly_decreasing(ts, num_steps)
 
 
 def ancestral_coeffs(sched: NoiseSchedule, ts):
@@ -168,4 +192,113 @@ def reverse_sample(params, dc: DiffusionConfig, sched: NoiseSchedule,
         return (x, key), None
 
     (x, _), _ = jax.lax.scan(step, (x, key), (ts, ab_t, ab_prev))
+    return jnp.clip(x, -1.0, 1.0)
+
+
+# ---------------------------------------------------------------------------
+# ragged mode: per-row (guidance, steps) inside ONE compiled trajectory
+# ---------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=512)
+def _respaced_ts_host(T: int, k: int) -> np.ndarray:
+    """Host-side memo of ``respaced_ts``: the (T, k) → trajectory mapping
+    never changes, and table building runs in the packer's double-buffered
+    window — a device dispatch + sync per wave there would eat the overlap
+    the engine buys with async dispatch."""
+    return np.asarray(respaced_ts(T, k), np.int32)
+
+
+def ragged_tables(sched: NoiseSchedule, steps, max_steps: int):
+    """Right-aligned per-row respacing tables for a ragged wave.
+
+    Row ``b`` with ``steps[b] = k`` runs its k-step trajectory over the
+    LAST k of ``max_steps`` scan iterations — every row finishes on the
+    same final iteration, so the terminal clip stays shared — and is
+    frozen before that by the active mask.  Each row's table slice is the
+    row's own ``respaced_ts``/``ancestral_coeffs`` verbatim (built host-
+    side per distinct step count), which is what makes a ragged row
+    bit-exact against the same row sampled in a uniform wave.
+
+    Returns ``(ts, ab_t, ab_prev, jloc)`` as (B, max_steps) numpy arrays;
+    ``jloc[b, i] = i - (max_steps - k)`` is the row-local step index,
+    negative while the row is frozen (``jloc >= 0`` is the active mask,
+    and it keys the row's per-step noise stream so alignment padding
+    never shifts a row's draws).  Frozen slots carry the row's first real
+    (t, ᾱ) values — valid schedule positions, so the masked-out update
+    lanes stay finite.
+    """
+    steps = np.asarray(steps, np.int32).reshape(-1)
+    B, S = len(steps), int(max_steps)
+    if steps.max(initial=1) > S:
+        raise ValueError(f"max_steps={S} < largest row step count "
+                         f"{int(steps.max())}")
+    alpha_bar = np.asarray(sched.alpha_bar, np.float32)
+    ts = np.zeros((B, S), np.int32)
+    ab_t = np.zeros((B, S), np.float32)
+    ab_prev = np.zeros((B, S), np.float32)
+    jloc = np.arange(S, dtype=np.int32)[None] - (S - steps)[:, None]
+    for k in np.unique(steps):
+        rows = steps == k
+        ts_k = _respaced_ts_host(sched.T, int(k))
+        ab_k = alpha_bar[ts_k]
+        abp_k = np.concatenate([ab_k[1:], np.ones((1,), np.float32)])
+        ts[rows] = np.concatenate([np.full(S - k, ts_k[0], np.int32), ts_k])
+        ab_t[rows] = np.concatenate([np.full(S - k, ab_k[0], np.float32),
+                                     ab_k])
+        ab_prev[rows] = np.concatenate([np.full(S - k, abp_k[0], np.float32),
+                                        abp_k])
+    return ts, ab_t, ab_prev, jloc
+
+
+def _cfg_update_rowwise(x, eps_c, eps_u, s, ab_t, ab_prev, noise, active,
+                        eta, use_pallas):
+    if use_pallas:
+        from repro.kernels.cfg_fuse import ops as cfg_ops
+        return cfg_ops.cfg_update_rowwise(x, eps_c, eps_u, s, ab_t, ab_prev,
+                                          noise, active, eta)
+    from repro.kernels.cfg_fuse import ref as cfg_ref
+    return cfg_ref.cfg_update_rowwise(x, eps_c, eps_u, s, ab_t, ab_prev,
+                                      noise, active, eta)
+
+
+def reverse_sample_ragged(params, dc: DiffusionConfig, y, row_keys, guidance,
+                          ts, ab_t, ab_prev, jloc, *, image_size: int,
+                          channels: int = 3, eta: float = 1.0,
+                          use_pallas: bool = False):
+    """Classifier-free reverse loop with PER-ROW (guidance, steps).
+
+    One compiled (B, max_steps) geometry serves rows from different
+    classifier-free groups: each row carries its own guidance scale
+    (``guidance`` (B,)), its own right-aligned respacing slice of the
+    (B, S) tables from ``ragged_tables``, and its OWN noise stream —
+    row ``b`` draws x_T from ``fold_in(row_keys[b], 0)`` and step-j noise
+    from ``fold_in(row_keys[b], 1 + j)`` with j the row-LOCAL step index.
+    Row-keyed noise is what makes the result independent of wave packing:
+    a row produces bit-identical output whether its wave holds its own
+    group, a mix of groups, or alignment padding.
+    """
+    B = y.shape[0]
+    H = image_size
+    kx = jax.vmap(lambda k: jax.random.fold_in(k, 0))(row_keys)
+    x = jax.vmap(lambda k: jax.random.normal(k, (H, H, channels)))(kx)
+    null = jnp.broadcast_to(params["null_y"], (B, dc.cond_dim))
+    y2 = jnp.concatenate([y, null], axis=0)
+    guidance = jnp.asarray(guidance, jnp.float32)
+
+    def step(x, inp):
+        t, abt, abp, j = inp                     # (B,) each
+        active = j >= 0
+        x2 = jnp.concatenate([x, x], axis=0)
+        t2 = jnp.concatenate([t, t])
+        eps2 = dit_apply(params, dc, x2, t2, y2)
+        eps_c, eps_u = eps2[:B], eps2[B:]
+        nk = jax.vmap(jax.random.fold_in)(row_keys,
+                                          jnp.maximum(j, 0) + 1)
+        noise = jax.vmap(lambda k: jax.random.normal(k, (H, H, channels)))(nk)
+        noise = noise * (t > 0)[:, None, None, None]
+        x = _cfg_update_rowwise(x, eps_c, eps_u, guidance, abt, abp, noise,
+                                active, eta, use_pallas)
+        return x, None
+
+    x, _ = jax.lax.scan(step, x, (ts.T, ab_t.T, ab_prev.T, jloc.T))
     return jnp.clip(x, -1.0, 1.0)

@@ -18,10 +18,12 @@ from __future__ import annotations
 from functools import partial
 
 import jax
+import numpy as np
 
 from repro.configs.oscar import DiffusionConfig
 from repro.diffusion.guidance import (ClassifierFree, ClassifierGuided,
-                                      Unconditional, reverse_sample)
+                                      Unconditional, ragged_tables,
+                                      reverse_sample, reverse_sample_ragged)
 from repro.diffusion.guidance import respaced_ts as _respaced_ts  # noqa: F401
 from repro.diffusion.schedule import NoiseSchedule
 
@@ -56,6 +58,43 @@ def sample_classifier_guided(params, dc: DiffusionConfig, sched: NoiseSchedule,
     return reverse_sample(params, dc, sched, strat, key,
                           image_size=image_size, channels=channels,
                           num_steps=num_steps, eta=eta)
+
+
+@partial(jax.jit, static_argnames=("dc", "image_size", "channels", "eta",
+                                   "use_pallas"))
+def _ragged_core(params, dc, y, row_keys, guidance, ts, ab_t, ab_prev, jloc,
+                 *, image_size, channels, eta, use_pallas):
+    return reverse_sample_ragged(params, dc, y, row_keys, guidance,
+                                 ts, ab_t, ab_prev, jloc,
+                                 image_size=image_size, channels=channels,
+                                 eta=eta, use_pallas=use_pallas)
+
+
+def sample_cfg_ragged(params, dc: DiffusionConfig, sched: NoiseSchedule, y,
+                      row_keys, guidance, num_steps, *,
+                      max_steps: int | None = None,
+                      image_size: int | None = None, channels: int = 3,
+                      eta: float = 1.0, use_pallas: bool = False):
+    """Ragged classifier-free wave: PER-ROW guidance scales and step
+    counts inside one compiled trajectory.
+
+    ``y`` (B, cond_dim), ``row_keys`` (B,) PRNG keys, ``guidance`` (B,)
+    and ``num_steps`` (B,) — one entry per row.  ``num_steps`` must be
+    host-concrete (the right-aligned respacing tables are built outside
+    the jit); the compiled geometry is keyed only by (B, max_steps), so a
+    mixed (guidance, steps) workload shares ONE executable as long as its
+    wave shape and step ceiling agree.  Row results depend only on the
+    row's own (encoding, guidance, steps, key) — not on max_steps, the
+    wave's other rows, or padding — see ``reverse_sample_ragged``.
+    """
+    steps = np.asarray(num_steps, np.int32).reshape(-1)
+    S = int(max_steps if max_steps is not None else steps.max())
+    ts, ab_t, ab_prev, jloc = ragged_tables(sched, steps, S)
+    return _ragged_core(params, dc, y, row_keys,
+                        jax.numpy.asarray(guidance, jax.numpy.float32),
+                        ts, ab_t, ab_prev, jloc,
+                        image_size=image_size or 16, channels=channels,
+                        eta=eta, use_pallas=use_pallas)
 
 
 @partial(jax.jit, static_argnames=("dc", "num", "num_steps", "eta",

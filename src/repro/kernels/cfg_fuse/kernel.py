@@ -35,6 +35,54 @@ def _cfg_kernel(scal_ref, x_ref, ec_ref, eu_ref, z_ref, out_ref, *, s, eta):
     out_ref[...] = out.astype(out_ref.dtype)
 
 
+def _cfg_rowwise_kernel(scal_ref, x_ref, ec_ref, eu_ref, z_ref, out_ref, *,
+                        eta):
+    b = pl.program_id(0)
+    ab_t = scal_ref[0, b]
+    ab_prev = scal_ref[1, b]
+    s = scal_ref[2, b]
+    act = scal_ref[3, b]
+    x = x_ref[...].astype(jnp.float32)
+    eps = (1.0 + s) * ec_ref[...].astype(jnp.float32) \
+        - s * eu_ref[...].astype(jnp.float32)
+    x0 = (x - jnp.sqrt(1.0 - ab_t) * eps) * jax.lax.rsqrt(ab_t)
+    x0 = jnp.clip(x0, -1.0, 1.0)
+    var = (1.0 - ab_prev) / (1.0 - ab_t) * (1.0 - ab_t / ab_prev)
+    sigma = eta * jnp.sqrt(jnp.maximum(var, 0.0))
+    dir_coef = jnp.sqrt(jnp.maximum(1.0 - ab_prev - sigma * sigma, 0.0))
+    out = jnp.sqrt(ab_prev) * x0 + dir_coef * eps \
+        + sigma * z_ref[...].astype(jnp.float32)
+    out = jnp.where(act > 0.0, out, x)
+    out_ref[...] = out.astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("eta", "interpret"))
+def cfg_update_rowwise_3d(x, eps_c, eps_u, noise, scal, *, eta: float = 1.0,
+                          interpret: bool = False):
+    """Ragged-wave variant: one grid row per batch element, so every row
+    reads its OWN (ᾱ_t, ᾱ_prev, s, active) from the (4, B) scalar-prefetch
+    array — rows from different (guidance, steps) groups share one kernel
+    launch.  Tensor args are pre-laid-out (B, R, 128), R % 8 == 0; a row
+    whose ``active`` slot is 0 passes through bit-unchanged."""
+    B, R, _ = x.shape
+    block = min(BLOCK_ROWS, R)
+    grid = (B, pl.cdiv(R, block))
+    kern = functools.partial(_cfg_rowwise_kernel, eta=float(eta))
+    return pl.pallas_call(
+        kern,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[pl.BlockSpec((1, block, LANES),
+                                   lambda b, j, s: (b, j, 0))] * 4,
+            out_specs=pl.BlockSpec((1, block, LANES),
+                                   lambda b, j, s: (b, j, 0)),
+        ),
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        interpret=interpret,
+    )(scal, x, eps_c, eps_u, noise)
+
+
 @functools.partial(jax.jit, static_argnames=("s", "eta", "interpret"))
 def cfg_update_2d(x, eps_c, eps_u, noise, ab_t, ab_prev, *, s: float,
                   eta: float = 1.0, interpret: bool = False):

@@ -36,3 +36,38 @@ def cfg_update(x, eps_c, eps_u, s, ab_t, ab_prev, noise, eta: float = 1.0,
                           jnp.asarray(ab_prev, jnp.float32),
                           s=float(s), eta=float(eta), interpret=interpret)
     return out.reshape(-1)[:n].reshape(shape)
+
+
+def cfg_update_rowwise(x, eps_c, eps_u, s, ab_t, ab_prev, noise, active,
+                       eta: float = 1.0, *, interpret: bool | None = None):
+    """Per-row fused update for ragged waves: ``s``/``ab_t``/``ab_prev``/
+    ``active`` are (B,) vectors — every batch row carries its own guidance
+    scale and schedule position, and ``active`` freezes rows whose right-
+    aligned trajectory has not started yet.  Each image is flattened to
+    its own (rows, 128) lane block so the kernel's per-row scalars apply
+    exactly to that image's elements."""
+    if interpret is None:
+        interpret = _on_cpu()
+    shape = x.shape
+    B = shape[0]
+    n = int(np.prod(shape[1:]))
+    rows = -(-n // K.LANES)
+    rows = -(-rows // 8) * 8
+    pad = rows * K.LANES - n
+
+    def flat(a):
+        a = a.reshape(B, -1)
+        if pad:
+            a = jnp.pad(a, ((0, 0), (0, pad)))
+        return a.reshape(B, rows, K.LANES)
+
+    scal = jnp.stack([
+        jnp.asarray(ab_t, jnp.float32).reshape(B),
+        jnp.asarray(ab_prev, jnp.float32).reshape(B),
+        jnp.asarray(s, jnp.float32).reshape(B),
+        jnp.asarray(active).astype(jnp.float32).reshape(B),
+    ])
+    out = K.cfg_update_rowwise_3d(flat(x), flat(eps_c), flat(eps_u),
+                                  flat(noise), scal, eta=float(eta),
+                                  interpret=interpret)
+    return out.reshape(B, -1)[:, :n].reshape(shape)

@@ -26,3 +26,23 @@ def ancestral_step(x, eps, ab_t, ab_prev, noise, eta: float = 1.0):
 def cfg_update(x, eps_c, eps_u, s, ab_t, ab_prev, noise, eta: float = 1.0):
     eps = (1.0 + s) * eps_c - s * eps_u
     return ancestral_step(x, eps, ab_t, ab_prev, noise, eta)
+
+
+def cfg_update_rowwise(x, eps_c, eps_u, s, ab_t, ab_prev, noise, active,
+                       eta: float = 1.0):
+    """Per-row (ragged-wave) variant: ``s``/``ab_t``/``ab_prev`` are (B,)
+    vectors — one (guidance, schedule-position) per batch row — and
+    ``active`` (B,) freezes rows whose trajectory has not started (right-
+    aligned ragged respacing): a frozen row passes through bit-unchanged.
+    With every row agreeing this is elementwise-identical arithmetic to
+    ``cfg_update``, so the two are bit-exact on the shared rows."""
+    r = lambda v: jnp.asarray(v).reshape((-1,) + (1,) * (x.ndim - 1))
+    s, ab_t, ab_prev = r(s), r(ab_t), r(ab_prev)
+    eps = (1.0 + s) * eps_c - s * eps_u
+    x0 = (x - jnp.sqrt(1.0 - ab_t) * eps) / jnp.sqrt(ab_t)
+    x0 = jnp.clip(x0, -1.0, 1.0)
+    var = (1.0 - ab_prev) / (1.0 - ab_t) * (1.0 - ab_t / ab_prev)
+    sigma = eta * jnp.sqrt(jnp.maximum(var, 0.0))
+    dir_coef = jnp.sqrt(jnp.maximum(1.0 - ab_prev - sigma ** 2, 0.0))
+    out = jnp.sqrt(ab_prev) * x0 + dir_coef * eps + sigma * noise
+    return jnp.where(r(active), out, x)

@@ -71,13 +71,28 @@ class SynthesisService:
 
     def __init__(self, engine: SynthesisEngine, *,
                  key: jax.Array | int | None = None,
-                 store: SynthesisStore | str | None = None):
+                 store: SynthesisStore | str | None = None,
+                 ragged: bool | None = None,
+                 store_max_bytes: int | None = None):
+        """``ragged`` (opt-in) switches the engine to ragged waves: every
+        classifier-free group shares one compiled per-row (guidance,
+        steps) trajectory — see ``SynthesisEngine``.  Cache and store
+        keys are unchanged, so a warm store serves both modes.
+
+        ``store_max_bytes`` is the persistent store's size budget: after
+        every drain the least-recently-used shards are evicted until the
+        store fits (a long-lived server stops growing without bound).
+        """
         if store is not None and not isinstance(store, SynthesisStore):
             store = SynthesisStore(store)
         if store is not None:
             engine.store = store
+        if ragged is not None:
+            engine.ragged = bool(ragged)
         self.engine = engine
         self.store = engine.store
+        self.store_max_bytes = store_max_bytes
+        self._evicted_entries = 0
         if key is None:
             key = jax.random.PRNGKey(0)
         elif isinstance(key, int):
@@ -146,8 +161,14 @@ class SynthesisService:
             # on_result hook), so requests served before a mid-drain
             # failure stay resolved even though run() raises; the return
             # value is the full drain's rid -> rows map
-            return self.engine.run(key, poll=poll, stream=stream,
-                                   on_result=self._deliver)
+            try:
+                return self.engine.run(key, poll=poll, stream=stream,
+                                       on_result=self._deliver)
+            finally:
+                if (self.store is not None
+                        and self.store_max_bytes is not None):
+                    self._evicted_entries += len(
+                        self.store.evict(self.store_max_bytes))
 
     def gather(self, futures: list[SynthesisFuture],
                key=None) -> list[np.ndarray]:
@@ -161,4 +182,5 @@ class SynthesisService:
         s = dict(self.engine.stats)
         s["drains"] = self._drain_i
         s["store_entries"] = len(self.store) if self.store is not None else 0
+        s["store_evicted"] = self._evicted_entries
         return s

@@ -55,6 +55,7 @@ class SynthesisStore:
         self._shards = self.root / "shards"
         self._rows: dict[str, np.ndarray] = {}      # loaded / pending shards
         self._dirty: set[str] = set()
+        self._evicted: set[str] = set()     # tombstones: never merged back
         self._manifest: dict = {"version": _VERSION, "entries": {}}
         mpath = self.root / "manifest.json"
         if mpath.exists():
@@ -63,6 +64,18 @@ class SynthesisStore:
                 raise ValueError(
                     f"store {self.root}: unsupported manifest version "
                     f"{self._manifest.get('version')!r}")
+        # LRU clock: monotone per-entry access stamps ("lru", absent on
+        # pre-eviction manifests → treated as oldest); persisted whenever
+        # the manifest is rewritten, so recency survives the process
+        self._clock = 1 + max((e.get("lru", 0)
+                               for e in self._manifest["entries"].values()),
+                              default=0)
+
+    def _touch(self, slug: str):
+        ent = self._manifest["entries"].get(slug)
+        if ent is not None:
+            ent["lru"] = self._clock
+            self._clock += 1
 
     # -- reads ------------------------------------------------------------
     def get(self, cache_key: tuple) -> Optional[np.ndarray]:
@@ -79,6 +92,7 @@ class SynthesisStore:
         raise — that is corruption, not a race."""
         s = _slug(cache_key)
         if s in self._rows:
+            self._touch(s)
             return self._rows[s]
         ent = self._manifest["entries"].get(s)
         if ent is None:
@@ -90,8 +104,13 @@ class SynthesisStore:
             raise ValueError(
                 f"store {self.root}: shard {s} records a different cache "
                 f"key than requested — refusing to serve the wrong D_syn")
-        with np.load(self._shards / f"{s}.npz") as z:
-            rows = z["rows"]
+        try:
+            with np.load(self._shards / f"{s}.npz") as z:
+                rows = z["rows"]
+        except FileNotFoundError:
+            # another handle evicted the shard after we read the manifest
+            # — a miss, not corruption: re-synthesize and heal
+            return None
         if (list(rows.shape[1:]) != list(ent["shape"])[1:]
                 or str(rows.dtype) != ent["dtype"]):
             raise ValueError(
@@ -101,6 +120,7 @@ class SynthesisStore:
         if len(rows) < ent["count"]:
             return None                     # lost flush race: re-synthesize
         self._rows[s] = rows = rows[:ent["count"]]
+        self._touch(s)
         return rows
 
     def __contains__(self, cache_key: tuple) -> bool:
@@ -120,6 +140,7 @@ class SynthesisStore:
             return                      # never shrink a shard
         self._rows[s] = np.asarray(rows)
         self._dirty.add(s)
+        self._evicted.discard(s)            # re-putting resurrects the key
         enc_hash, guidance, steps = cache_key
         self._manifest["entries"][s] = {
             "key": {"encoding_sha1": enc_hash, "guidance": float(guidance),
@@ -129,6 +150,7 @@ class SynthesisStore:
             "dtype": str(rows.dtype),
             "file": f"shards/{s}.npz",
         }
+        self._touch(s)
 
     def flush(self):
         """Write dirty shards, then rewrite the manifest.  Both go through
@@ -153,6 +175,14 @@ class SynthesisStore:
             with open(tmp, "wb") as f:
                 np.savez(f, rows=self._rows[s])
             os.replace(tmp, self._shards / f"{s}.npz")
+        self._write_manifest()
+        self._dirty.clear()
+
+    def _write_manifest(self):
+        """Merge-then-rewrite via temp + rename.  Entries another process
+        flushed since we opened the store are kept (our dirty keys win)
+        UNLESS this handle evicted them — tombstones stop a concurrent
+        flush from resurrecting a shard whose file we deleted."""
         mpath = self.root / "manifest.json"
         if mpath.exists():
             try:
@@ -161,9 +191,57 @@ class SynthesisStore:
                 disk = {}
             ours = self._manifest["entries"]
             for s, ent in disk.items():
-                if s not in self._dirty and s not in ours:
+                if s not in self._dirty and s not in ours \
+                        and s not in self._evicted:
                     ours[s] = ent
         tmp = self.root / f"manifest.json.{os.getpid()}.tmp"
         tmp.write_text(json.dumps(self._manifest, indent=1))
         os.replace(tmp, mpath)
-        self._dirty.clear()
+
+    # -- eviction ---------------------------------------------------------
+    @staticmethod
+    def _entry_bytes(ent: dict) -> int:
+        return int(np.prod(ent["shape"]) * np.dtype(ent["dtype"]).itemsize)
+
+    def total_bytes(self) -> int:
+        """Row bytes recorded in the manifest (uncompressed; the budget's
+        accounting unit — stable across npz compression ratios)."""
+        return sum(self._entry_bytes(e)
+                   for e in self._manifest["entries"].values())
+
+    def evict(self, max_bytes: int) -> list[str]:
+        """Evict least-recently-used shards until ``total_bytes() <=
+        max_bytes``.  Returns the evicted slugs (empty when under budget).
+
+        Ordering is crash-safe for the manifest invariant ('every entry
+        points at a shard holding at least its recorded rows'): entries
+        leave the manifest — rewritten via temp + rename — BEFORE their
+        shard files are unlinked, so a crash mid-evict strands at worst
+        an orphaned shard file, never a dangling manifest entry.  An
+        evicted key simply misses and re-synthesizes."""
+        entries = self._manifest["entries"]
+        total = self.total_bytes()
+        if total <= max_bytes:
+            return []
+        # publish pending shards first: the manifest rewrite below must
+        # never expose a dirty entry whose shard is not on disk yet
+        self.flush()
+        victims = []
+        for s, ent in sorted(entries.items(),
+                             key=lambda kv: kv[1].get("lru", 0)):
+            if total <= max_bytes:
+                break
+            total -= self._entry_bytes(ent)
+            victims.append(s)
+        for s in victims:
+            entries.pop(s)
+            self._rows.pop(s, None)
+            self._dirty.discard(s)
+            self._evicted.add(s)
+        self._write_manifest()
+        for s in victims:
+            try:
+                (self._shards / f"{s}.npz").unlink()
+            except FileNotFoundError:
+                pass                    # never flushed, or already gone
+        return victims

@@ -36,6 +36,20 @@ Waves are grouped by (mode, guidance, steps[, classifier identity]) —
 classifier-guided requests batch per uploaded classifier, classifier-free
 requests batch across every client and category in the queue.
 
+RAGGED WAVES (``ragged=True``): guidance scale and step count become
+PER-ROW, so every classifier-free group merges into ONE live queue and
+one compiled (wave_rows, max_steps) trajectory serves a mixed
+(guidance, steps) workload — the guidance sweep's groups, FedDISC's
+resampled-statistics requests, and OSCAR's uploads all share waves
+instead of each padding and compiling their own.  Shorter-step rows are
+right-aligned inside the shared scan and frozen by an active mask until
+their trajectory starts; each row's noise stream is keyed by
+``fold_in(fold_in(drain_key, rid), row_index)`` — the row's identity,
+not its wave position — so results are bit-independent of how the
+packer interleaved groups, streamed arrivals, or padded the wave.
+Cache/store keys stay (encoding-hash, guidance, steps), so a ragged
+engine and a grouped engine share a warm store transparently.
+
 Requests stay on the queue until their results are produced: an
 exception mid-drain (a failing sampler, an interrupted process) leaves
 every unserved request queued for the next ``run``.
@@ -54,8 +68,8 @@ from jax.sharding import NamedSharding
 from jax.sharding import PartitionSpec as P
 
 from repro.configs.oscar import DiffusionConfig
-from repro.diffusion.sampler import (sample_cfg, sample_classifier_guided,
-                                     sample_uncond)
+from repro.diffusion.sampler import (sample_cfg, sample_cfg_ragged,
+                                     sample_classifier_guided, sample_uncond)
 from repro.diffusion.schedule import NoiseSchedule
 
 
@@ -147,7 +161,7 @@ class SynthesisEngine:
                  *, image_size: int, channels: int = 3, wave_size: int = 128,
                  eta: float = 1.0, use_pallas: bool = False, mesh=None,
                  cache: bool = True, granule: int = 8, store=None,
-                 async_waves: bool = True):
+                 async_waves: bool = True, ragged: bool = False):
         self.dm_params, self.dc, self.sched = dm_params, dc, sched
         self.image_size, self.channels = image_size, channels
         self.eta, self.use_pallas = eta, use_pallas
@@ -165,12 +179,15 @@ class SynthesisEngine:
         self.cache_enabled = cache
         self.store = store                       # SynthesisStore | None
         self.async_waves = async_waves
+        self.ragged = ragged
         self._cache: dict[tuple, np.ndarray] = {}
         self._queue: list[SynthesisRequest] = []
         self._next_rid = 0
+        self.traj_shapes: set = set()    # distinct compiled wave geometries
         self.stats = {"requests": 0, "waves": 0, "generated": 0,
                       "padded": 0, "cache_hits": 0, "store_hits": 0,
-                      "streamed": 0}
+                      "streamed": 0, "merged_waves": 0, "compiled_shapes": 0,
+                      "row_iters": 0}
 
     # -- submission -------------------------------------------------------
     def submit(self, encoding, category: int, count: int | None = None, *,
@@ -276,6 +293,10 @@ class SynthesisEngine:
         return req.rid
 
     def _group_key(self, r: SynthesisRequest):
+        if self.ragged and r.mode == "cfg":
+            # one merged super-group: per-row (guidance, steps) inside
+            # shared ragged waves instead of one wave group per pair
+            return ("cfg",)
         clf = ("clf", repr(r.group)) if r.mode == "clf" else ("", "")
         return (r.mode, r.guidance, r.num_steps) + clf
 
@@ -302,9 +323,40 @@ class SynthesisEngine:
             return arr
         return jax.device_put(arr, self._data_sharding)
 
+    def _note_shape(self, sig: tuple):
+        """Track distinct compiled wave geometries (the jit-static part of
+        a wave's sampler signature) — the benchmark's compile-count lens."""
+        self.traj_shapes.add(sig)
+        self.stats["compiled_shapes"] = len(self.traj_shapes)
+
+    def _sample_wave_ragged(self, cond_rows, meta, key, max_steps: int):
+        """One merged classifier-free wave.  ``meta`` carries one
+        (guidance, steps, rid, absolute_row_index) per row; row noise keys
+        are ``fold_in(fold_in(drain_key, rid), row_index)`` — a function
+        of the row's identity, NOT its wave position, so outputs are
+        independent of group interleaving, streaming arrival order, and
+        alignment padding."""
+        g = np.array([m[0] for m in meta], np.float32)
+        steps = np.array([m[1] for m in meta], np.int32)
+        rids = jnp.asarray([m[2] for m in meta], jnp.uint32)
+        ridx = jnp.asarray([m[3] for m in meta], jnp.uint32)
+        row_keys = jax.vmap(
+            lambda r, i: jax.random.fold_in(jax.random.fold_in(key, r), i)
+        )(rids, ridx)
+        self._note_shape(("cfg-ragged", len(cond_rows), max_steps))
+        return sample_cfg_ragged(self.dm_params, self.dc, self.sched,
+                                 self._shard(jnp.asarray(cond_rows)),
+                                 row_keys, jnp.asarray(g), steps,
+                                 max_steps=max_steps,
+                                 image_size=self.image_size,
+                                 channels=self.channels, eta=self.eta,
+                                 use_pallas=self.use_pallas)
+
     def _sample_wave(self, grp_head: SynthesisRequest, cond_rows, key):
         H, C = self.image_size, self.channels
         if grp_head.mode == "cfg":
+            self._note_shape(("cfg", len(cond_rows), grp_head.num_steps,
+                              grp_head.guidance))
             return sample_cfg(self.dm_params, self.dc, self.sched,
                               self._shard(jnp.asarray(cond_rows)), key,
                               image_size=H, channels=C,
@@ -312,11 +364,14 @@ class SynthesisEngine:
                               guidance=grp_head.guidance, eta=self.eta,
                               use_pallas=self.use_pallas)
         if grp_head.mode == "clf":
+            self._note_shape(("clf", repr(grp_head.group), len(cond_rows),
+                              grp_head.num_steps, grp_head.guidance))
             return sample_classifier_guided(
                 self.dm_params, self.dc, self.sched, grp_head.logprob_fn,
                 self._shard(jnp.asarray(cond_rows, jnp.int32)), key,
                 image_size=H, channels=C, num_steps=grp_head.num_steps,
                 guidance=grp_head.guidance, eta=self.eta)
+        self._note_shape(("uncond", len(cond_rows), grp_head.num_steps))
         return sample_uncond(self.dm_params, self.dc, self.sched,
                              len(cond_rows), key, image_size=H, channels=C,
                              num_steps=grp_head.num_steps, eta=self.eta)
@@ -383,10 +438,17 @@ class SynthesisEngine:
                      *, poll, stream):
         """Drain one group's live queue wave by wave, double-buffered:
         wave k+1 is packed and dispatched while wave k runs on device."""
+        ragged = self.ragged and q.head.mode == "cfg"
         if stream:
             wave_rows = self.wave_size
         else:
             _, wave_rows = self._plan_waves(q.rows_available())
+        # ragged step ceiling: a running max, so every wave after the
+        # deepest row arrives shares one compiled geometry (row results
+        # are max_steps-independent — right-aligned rows just freeze
+        # longer), and a drain sees at most one recompile per new deepest
+        # step count instead of one per (guidance, steps) group
+        smax = 0
         inflight = None                  # (device x, parts, n_real)
         while True:
             # admission runs at every wave boundary with or without a
@@ -412,12 +474,35 @@ class SynthesisEngine:
             target = (-(-got // self.granule) * self.granule if stream
                       else wave_rows)
             rows = np.concatenate([p.row_block(t, s) for p, t, s in parts])
+            meta = None
+            if ragged:
+                # (guidance, steps, rid, absolute row index) per row; the
+                # index offsets past the cached prefix so a top-up row has
+                # the same identity whichever drain generates it
+                meta = [(p.req.guidance, p.req.num_steps, p.req.rid,
+                         p.req.count - p.fresh + s + i)
+                        for p, t, s in parts for i in range(t)]
             if target > got:
                 rows = np.concatenate(
                     [rows, np.repeat(rows[-1:], target - got, axis=0)])
+                if ragged:
+                    # padding duplicates the last row's identity: same key,
+                    # same cond — a discarded bit-identical copy that can
+                    # never perturb the real rows
+                    meta += [meta[-1]] * (target - got)
             kw = jax.random.fold_in(key, st.wave_i)
             st.wave_i += 1
-            x = self._sample_wave(q.head, rows, kw)
+            if ragged:
+                smax = max(smax, *(m[1] for m in meta))
+                x = self._sample_wave_ragged(rows, meta, key, smax)
+                self.stats["merged_waves"] += 1
+                # honest device-work accounting: every row runs the wave's
+                # step ceiling — frozen (right-aligned) rows still ride
+                # through the denoiser, the price of one shared geometry
+                self.stats["row_iters"] += target * smax
+            else:
+                x = self._sample_wave(q.head, rows, kw)
+                self.stats["row_iters"] += target * q.head.num_steps
             self.stats["waves"] += 1
             self.stats["generated"] += target
             self.stats["padded"] += target - got

@@ -49,6 +49,45 @@ def test_respaced_ts_cover_range():
     assert bool(jnp.all(jnp.diff(ts) < 0))
 
 
+@pytest.mark.parametrize("T", [10, 16, 32, 100, 1000])
+def test_respaced_ts_no_duplicate_timesteps(T):
+    """Every trajectory is STRICTLY decreasing — a repeated t would waste
+    a denoiser call re-noising in place — starts at T-1, and (for >=2
+    steps) ends at 0."""
+    for S in {1, 2, 3, T // 2, T - 1, T}:
+        ts = np.asarray(_respaced_ts(T, S))
+        assert len(np.unique(ts)) == S, (T, S)
+        assert int(ts[0]) == T - 1
+        assert bool(np.all(np.diff(ts) <= -1)) if S > 1 else True
+        if S >= 2:
+            assert int(ts[-1]) == 0
+
+
+def test_respaced_ts_unchanged_where_collision_free():
+    """The dedupe envelope is the identity on every historical (collision-
+    free) trajectory — respacing stays bit-compatible with the seed."""
+    for T, S in ((1000, 50), (64, 8), (32, 6), (16, 3), (100, 100)):
+        old = np.asarray(jnp.linspace(T - 1, 0, S).round().astype(jnp.int32))
+        assert np.array_equal(old, np.asarray(_respaced_ts(T, S)))
+
+
+def test_respaced_ts_rejects_more_steps_than_T():
+    """num_steps > T cannot visit distinct timesteps; rounding silently
+    emitted duplicates before — now it refuses loudly."""
+    with pytest.raises(ValueError, match="cannot"):
+        _respaced_ts(16, 20)
+
+
+def test_dedupe_envelope_on_crafted_collisions():
+    from repro.diffusion.guidance import _strictly_decreasing
+    ts = jnp.array([15, 14, 13, 13, 12, 5, 5, 5, 1, 0])
+    fixed = np.asarray(_strictly_decreasing(ts, 10))
+    assert bool(np.all(np.diff(fixed) <= -1))
+    assert fixed[0] == 15 and fixed[-1] == 0
+    # never above the input's running envelope, so order is preserved
+    assert bool(np.all(fixed <= np.asarray(ts)))
+
+
 def test_dit_shapes_and_null_cond(rng_key):
     p = init_dit(rng_key, DC, image_size=16, channels=3)
     x = jax.random.normal(rng_key, (2, 16, 16, 3))

@@ -113,6 +113,79 @@ def test_cfg_fuse_ragged_flatten(rng_key):
     assert jnp.max(jnp.abs(out - ref)) < 1e-5
 
 
+@pytest.mark.parametrize("shape", [(6, 16, 16, 3), (3, 8, 8, 1), (2, 33),
+                                   (5, 97, 13)])
+def test_cfg_fuse_rowwise_matches_oracle(rng_key, shape):
+    """Ragged-wave kernel: per-row (s, ᾱ_t, ᾱ_prev, active) scalars vs the
+    rowwise jnp oracle, incl. non-lane-aligned per-image flatten."""
+    B = shape[0]
+    ks = jax.random.split(rng_key, 4)
+    x, ec, eu, z = (jax.random.normal(k, shape) for k in ks)
+    s = jnp.linspace(0.0, 7.5, B)
+    ab_t = jnp.linspace(0.05, 0.9, B)
+    ab_prev = jnp.linspace(0.11, 0.95, B)
+    act = (jnp.arange(B) % 3 != 1).astype(jnp.float32)
+    out = cfg_ops.cfg_update_rowwise(x, ec, eu, s, ab_t, ab_prev, z, act)
+    ref = cfg_ref.cfg_update_rowwise(x, ec, eu, s, ab_t, ab_prev, z, act)
+    assert out.shape == shape
+    assert jnp.max(jnp.abs(out - ref)) < 1e-5
+
+
+def test_cfg_fuse_rowwise_uniform_matches_scalar_kernel(rng_key):
+    """All rows agreeing on (s, ᾱ_t, ᾱ_prev) must reproduce the scalar
+    cfg_fuse kernel BIT-exactly — the contract that lets ragged waves
+    replace per-group waves without changing a single pixel."""
+    ks = jax.random.split(rng_key, 4)
+    shape = (4, 16, 16, 3)
+    x, ec, eu, z = (jax.random.normal(k, shape) for k in ks)
+    for s, ab_t, ab_prev in [(7.5, 0.31, 0.52), (0.0, 0.9, 0.95),
+                             (1.5, 0.05, 0.11)]:
+        row = cfg_ops.cfg_update_rowwise(
+            x, ec, eu, jnp.full((4,), s), jnp.full((4,), ab_t),
+            jnp.full((4,), ab_prev), z, jnp.ones((4,)))
+        scal = cfg_ops.cfg_update(x, ec, eu, s, ab_t, ab_prev, z)
+        assert jnp.array_equal(row, scal)
+
+
+def test_cfg_fuse_rowwise_inactive_rows_frozen(rng_key):
+    """active=0 rows pass through bit-unchanged (the right-aligned ragged
+    freeze), in both the kernel and the oracle."""
+    ks = jax.random.split(rng_key, 4)
+    shape = (5, 8, 8, 3)
+    x, ec, eu, z = (jax.random.normal(k, shape) for k in ks)
+    act = jnp.array([1.0, 0.0, 1.0, 0.0, 0.0])
+    s = jnp.full((5,), 7.5)
+    ab_t, ab_prev = jnp.full((5,), 0.31), jnp.full((5,), 0.52)
+    out = cfg_ops.cfg_update_rowwise(x, ec, eu, s, ab_t, ab_prev, z, act)
+    ref = cfg_ref.cfg_update_rowwise(x, ec, eu, s, ab_t, ab_prev, z, act)
+    for b, a in enumerate([1, 0, 1, 0, 0]):
+        if a:
+            assert not jnp.array_equal(out[b], x[b])
+        else:
+            assert jnp.array_equal(out[b], x[b])
+            assert jnp.array_equal(ref[b], x[b])
+
+
+def test_cfg_fuse_rowwise_bf16(rng_key):
+    """bf16 rows: f32 accumulation, one rounding on store — within one
+    bf16 ulp of the f32 oracle, dtype preserved."""
+    ks = jax.random.split(rng_key, 4)
+    shape = (4, 16, 16, 3)
+    x, ec, eu, z = (jax.random.normal(k, shape, jnp.bfloat16) for k in ks)
+    s = jnp.linspace(0.0, 7.5, 4)
+    ab_t = jnp.linspace(0.05, 0.9, 4)
+    ab_prev = jnp.linspace(0.11, 0.95, 4)
+    out = cfg_ops.cfg_update_rowwise(x, ec, eu, s, ab_t, ab_prev, z,
+                                     jnp.ones((4,)))
+    assert out.dtype == jnp.bfloat16
+    ref = cfg_ref.cfg_update_rowwise(
+        x.astype(jnp.float32), ec.astype(jnp.float32),
+        eu.astype(jnp.float32), s, ab_t, ab_prev, z.astype(jnp.float32),
+        jnp.ones((4,)))
+    err = jnp.abs(out.astype(jnp.float32) - ref)
+    assert bool(jnp.all(err <= 2.0 ** -8 * jnp.maximum(jnp.abs(ref), 1.0)))
+
+
 @pytest.mark.parametrize("shape", [(4, 16, 16, 3), (300, 128)])
 def test_cfg_fuse_bf16(rng_key, shape):
     """bf16 inputs: kernel accumulates in f32 and rounds once on store, so

@@ -1,0 +1,301 @@
+"""Ragged waves: per-row (guidance, steps) vectorization of the reverse
+core and the engine/service layers above it.
+
+The load-bearing property throughout is PACKING INDEPENDENCE: a row's
+output depends only on its own (encoding, guidance, steps, noise key) —
+never on the wave's other rows, the step ceiling, alignment padding, or
+whether the row arrived up front or streamed in mid-drain.  That is what
+lets one compiled wave geometry serve every classifier-free group at
+once without changing a single pixel of any row.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.oscar import DiffusionConfig
+from repro.diffusion.dit import init_dit
+from repro.diffusion.guidance import ragged_tables, respaced_ts
+from repro.diffusion.sampler import sample_cfg_ragged
+from repro.diffusion.schedule import make_schedule
+from repro.serve import SynthesisEngine, SynthesisService
+
+DC = DiffusionConfig(d_model=32, num_layers=1, num_heads=2,
+                     sample_timesteps=3, train_timesteps=16)
+H = 8
+
+
+@pytest.fixture(scope="module")
+def dm():
+    key = jax.random.PRNGKey(0)
+    params = init_dit(key, DC, H, 3)
+    leaves, treedef = jax.tree.flatten(params)
+    keys = jax.random.split(jax.random.PRNGKey(1), len(leaves))
+    params = jax.tree.unflatten(treedef, [
+        a + 0.05 * jax.random.normal(k, a.shape, a.dtype)
+        for a, k in zip(leaves, keys)])
+    sched = make_schedule(DC.train_timesteps, DC.schedule)
+    return params, sched
+
+
+def _engine(dm, **kw):
+    params, sched = dm
+    kw.setdefault("image_size", H)
+    kw.setdefault("wave_size", 8)
+    kw.setdefault("ragged", True)
+    return SynthesisEngine(params, DC, sched, **kw)
+
+
+def _enc(seed):
+    e = np.random.default_rng(seed).normal(size=(DC.cond_dim,))
+    return (e / np.linalg.norm(e)).astype(np.float32)
+
+
+def _row_keys(base, n):
+    return jax.vmap(lambda i: jax.random.fold_in(base, i))(
+        jnp.arange(n, dtype=jnp.uint32))
+
+
+# ---------------------------------------------------------------------------
+# tables
+# ---------------------------------------------------------------------------
+
+def test_ragged_tables_right_aligned(dm):
+    _, sched = dm
+    steps = np.array([6, 3, 1], np.int32)
+    ts, ab_t, ab_prev, jloc = ragged_tables(sched, steps, 6)
+    assert ts.shape == ab_t.shape == ab_prev.shape == jloc.shape == (3, 6)
+    alpha_bar = np.asarray(sched.alpha_bar)
+    for b, k in enumerate(steps):
+        own = np.asarray(respaced_ts(sched.T, int(k)))
+        assert np.array_equal(ts[b, 6 - k:], own)      # verbatim slice
+        assert np.array_equal(jloc[b], np.arange(6) - (6 - k))
+        assert np.array_equal(ab_t[b, 6 - k:], alpha_bar[own])
+        assert ab_prev[b, -1] == 1.0                    # terminal ᾱ_prev
+        # frozen slots carry valid schedule values (finite masked lanes)
+        assert np.all(np.isfinite(ab_t[b])) and np.all(ab_t[b] > 0)
+
+
+def test_ragged_tables_reject_undersized_ceiling(dm):
+    _, sched = dm
+    with pytest.raises(ValueError, match="max_steps"):
+        ragged_tables(sched, np.array([4, 6]), 5)
+
+
+# ---------------------------------------------------------------------------
+# sampler core: per-row bit-exactness
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("use_pallas", [False, True])
+def test_ragged_rows_bit_exact_vs_isolated_groups(dm, use_pallas):
+    """Each (guidance, steps) group inside one mixed ragged wave must be
+    bit-exact against the same rows sampled alone (same row keys) — the
+    parity that justifies merging groups into shared waves."""
+    params, sched = dm
+    B = 6
+    y = jax.random.normal(jax.random.PRNGKey(1), (B, DC.cond_dim))
+    rk = _row_keys(jax.random.PRNGKey(7), B)
+    g = jnp.array([7.5, 7.5, 1.5, 1.5, 4.0, 4.0], jnp.float32)
+    steps = np.array([3, 3, 2, 2, 3, 2], np.int32)
+    mixed = sample_cfg_ragged(params, DC, sched, y, rk, g, steps,
+                              image_size=H, use_pallas=use_pallas)
+    assert float(jnp.abs(mixed).max()) <= 1.0
+    for idx in ([0, 1], [2, 3], [4], [5]):
+        i = np.array(idx)
+        iso = sample_cfg_ragged(params, DC, sched, y[i], rk[i], g[i],
+                                steps[i], image_size=H,
+                                use_pallas=use_pallas)
+        assert np.array_equal(np.asarray(mixed[i]), np.asarray(iso))
+
+
+def test_ragged_rows_independent_of_step_ceiling(dm):
+    """Raising max_steps only lengthens the frozen prefix — outputs are
+    bit-identical, which is what lets the engine reuse one compiled
+    geometry as deeper rows arrive."""
+    params, sched = dm
+    y = jax.random.normal(jax.random.PRNGKey(2), (3, DC.cond_dim))
+    rk = _row_keys(jax.random.PRNGKey(8), 3)
+    g = jnp.full((3,), 7.5)
+    steps = np.array([2, 2, 2], np.int32)
+    a = sample_cfg_ragged(params, DC, sched, y, rk, g, steps, image_size=H)
+    b = sample_cfg_ragged(params, DC, sched, y, rk, g, steps, max_steps=5,
+                          image_size=H)
+    assert np.array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_ragged_rows_independent_of_padding_rows(dm):
+    """Extra rows in the wave (packer padding duplicates a real row) never
+    perturb the real rows."""
+    params, sched = dm
+    y = jax.random.normal(jax.random.PRNGKey(3), (2, DC.cond_dim))
+    rk = _row_keys(jax.random.PRNGKey(9), 2)
+    g = jnp.array([7.5, 1.5])
+    steps = np.array([3, 2], np.int32)
+    bare = sample_cfg_ragged(params, DC, sched, y, rk, g, steps,
+                             image_size=H)
+    y_pad = jnp.concatenate([y, y[-1:], y[-1:]])
+    rk_pad = jnp.concatenate([rk, rk[-1:], rk[-1:]])
+    padded = sample_cfg_ragged(params, DC, sched, y_pad, rk_pad,
+                               jnp.concatenate([g, g[-1:], g[-1:]]),
+                               np.array([3, 2, 2, 2], np.int32),
+                               image_size=H)
+    assert np.array_equal(np.asarray(bare), np.asarray(padded[:2]))
+    # and the duplicated rows really are copies of the row they clone
+    assert np.array_equal(np.asarray(padded[1]), np.asarray(padded[2]))
+
+
+# ---------------------------------------------------------------------------
+# engine: merged waves
+# ---------------------------------------------------------------------------
+
+def test_ragged_engine_merges_cfg_groups(dm):
+    """Three (guidance, steps) groups share waves: fewer waves, fewer
+    padded rows, ONE compiled geometry (vs one per group when grouped)."""
+    subs = [(_enc(0), 0, 3, 1.5, 3), (_enc(1), 1, 3, 7.5, 3),
+            (_enc(2), 2, 3, 7.5, 2)]
+    grp = _engine(dm, ragged=False)
+    for e, c, n, g, s in subs:
+        grp.submit(e, c, n, guidance=g, num_steps=s)
+    grp.run(jax.random.PRNGKey(5))
+    rag = _engine(dm)
+    rids = [rag.submit(e, c, n, guidance=g, num_steps=s)
+            for e, c, n, g, s in subs]
+    out = rag.run(jax.random.PRNGKey(5))
+    for rid, (e, c, n, g, s) in zip(rids, subs):
+        assert out[rid].shape == (n, H, H, 3)
+        assert np.abs(out[rid]).max() <= 1.0
+    assert rag.stats["padded"] < grp.stats["padded"]
+    assert rag.stats["waves"] < grp.stats["waves"]
+    assert rag.stats["compiled_shapes"] == 1
+    assert grp.stats["compiled_shapes"] == len(subs)
+    assert rag.stats["merged_waves"] == rag.stats["waves"]
+
+
+def test_ragged_engine_packing_independent_across_drains(dm):
+    """A mixed single drain and per-group isolated drains (same run key,
+    same rids) produce bit-identical rows — wave packing is invisible."""
+    key = jax.random.PRNGKey(9)
+    mixed = _engine(dm)
+    r0 = mixed.submit(_enc(10), 0, 4, guidance=1.5, num_steps=3)
+    r1 = mixed.submit(_enc(11), 1, 4, guidance=7.5, num_steps=2)
+    out = mixed.run(key)
+
+    solo0 = _engine(dm)
+    s0 = solo0.submit(_enc(10), 0, 4, guidance=1.5, num_steps=3)
+    out0 = solo0.run(key)
+    solo1 = _engine(dm)
+    solo1._next_rid = 1                      # align the row identity
+    s1 = solo1.submit(_enc(11), 1, 4, guidance=7.5, num_steps=2)
+    out1 = solo1.run(key)
+    assert np.array_equal(out[r0], out0[s0])
+    assert np.array_equal(out[r1], out1[s1])
+
+
+def test_ragged_clf_and_uncond_groups_stay_separate(dm):
+    """Ragged merging is classifier-free only: clf/uncond requests keep
+    their own wave groups (a classifier closure cannot be vectorised
+    per-row) and still serve correctly next to merged cfg waves."""
+    eng = _engine(dm)
+    rc = eng.submit(_enc(20), 0, 3, guidance=7.5, num_steps=3)
+    rl = eng.submit_classifier_guided(
+        lambda x, labels: -jnp.sum(x ** 2, axis=(1, 2, 3)), 1, 3,
+        group="client0")
+    ru = eng.submit_unconditional(3)
+    out = eng.run(jax.random.PRNGKey(6))
+    assert out[rc].shape == out[rl].shape == out[ru].shape == (3, H, H, 3)
+    assert eng.stats["merged_waves"] == 1          # only the cfg wave
+    assert eng.stats["waves"] == 3
+
+
+def test_ragged_cache_topup_and_2d_encodings(dm):
+    """(encoding-hash, guidance, steps) caching is unchanged in ragged
+    mode: exact resubmission hits, larger counts top up with a cached
+    prefix, and FedDISC-style 2-D requests stay single cache entries."""
+    eng = _engine(dm)
+    enc = _enc(30)
+    ra = eng.submit(enc, 0, 4, guidance=7.5)
+    first = eng.run(jax.random.PRNGKey(3))[ra]
+    waves = eng.stats["waves"]
+    rb = eng.submit(enc, 0, 4, guidance=7.5)
+    again = eng.run(jax.random.PRNGKey(99))[rb]
+    assert np.array_equal(first, again)
+    assert eng.stats["waves"] == waves             # pure cache hit
+    rc = eng.submit(enc, 0, 7, guidance=7.5)
+    more = eng.run(jax.random.PRNGKey(4))[rc]
+    assert more.shape[0] == 7 and np.array_equal(more[:4], first)
+    mat = np.stack([_enc(40 + i) for i in range(4)])
+    rd = eng.submit(mat, 0, guidance=1.5, num_steps=2)
+    out = eng.run(jax.random.PRNGKey(5))[rd]
+    assert out.shape == (4, H, H, 3)
+    re_ = eng.submit(mat, 0, guidance=1.5, num_steps=2)
+    assert np.array_equal(eng.run(jax.random.PRNGKey(6))[re_], out)
+
+
+# ---------------------------------------------------------------------------
+# service: streaming drains
+# ---------------------------------------------------------------------------
+
+def _svc(dm, **kw):
+    eng = _engine(dm, ragged=kw.pop("ragged", True))
+    return SynthesisService(eng, **kw)
+
+
+def test_service_mixed_streaming_drain_matches_snapshot_trace(dm):
+    """Acceptance: a mixed-group STREAMING drain (late arrivals fused into
+    open ragged waves) returns results bit-identical to the same arrival
+    trace served across two snapshot drains — packing, streaming, and
+    padding are all invisible to row values."""
+    key = jax.random.PRNGKey(11)
+    initial = [(_enc(50), 0, 3, 1.5, 3), (_enc(51), 1, 2, 7.5, 2)]
+    late = [(_enc(52), 2, 2, 7.5, 3), (_enc(53), 0, 1, 1.5, 2)]
+
+    snap = _svc(dm)
+    fs = [snap.submit(e, c, n, guidance=g, num_steps=s)
+          for e, c, n, g, s in initial]
+    snap.drain(key)
+    fs += [snap.submit(e, c, n, guidance=g, num_steps=s)
+           for e, c, n, g, s in late]
+    snap.drain(key)                         # same run key: same identities
+
+    strm = _svc(dm)
+    ft = [strm.submit(e, c, n, guidance=g, num_steps=s)
+          for e, c, n, g, s in initial]
+    trace = list(late)
+
+    def poll():
+        if not trace:
+            return False
+        e, c, n, g, s = trace.pop(0)
+        ft.append(strm.submit(e, c, n, guidance=g, num_steps=s))
+        return True
+
+    strm.drain(key, poll=poll)
+    assert strm.stats["streamed"] == 2
+    assert strm.stats["drains"] == 1
+    for a, b in zip(fs, ft):
+        assert np.array_equal(a.result(), b.result())
+    # and the fused drain generated no more rows than the split one
+    assert strm.stats["generated"] <= snap.stats["generated"]
+
+
+def test_service_ragged_flag_threads_to_engine(dm):
+    params, sched = dm
+    eng = SynthesisEngine(params, DC, sched, image_size=H)
+    assert not eng.ragged
+    SynthesisService(eng, ragged=True)
+    assert eng.ragged
+    # opt-in only: constructing without the flag leaves the mode alone
+    SynthesisService(eng)
+    assert eng.ragged
+
+
+def test_run_paths_thread_ragged_flag(dm):
+    from repro.core.oscar import synthesize
+    params, sched = dm
+    enc = np.stack([np.stack([_enc(60 + c) for c in range(3)])])
+    present = np.ones((1, 3), bool)
+    eng = _engine(dm, ragged=False)
+    sx, sy = synthesize(jax.random.PRNGKey(0), params, DC, sched, enc,
+                        present, 2, image_size=H, engine=eng, ragged=True)
+    assert eng.ragged and eng.stats["merged_waves"] > 0
+    assert sx.shape == (6, H, H, 3)

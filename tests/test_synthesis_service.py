@@ -309,6 +309,126 @@ def test_second_service_on_same_engine_does_not_orphan_futures(dm):
     assert fut.result().shape == (3, H, H, 3)
 
 
+def _fill_store(dm, store_dir, seeds, *, key=21, count=2):
+    svc = _service(dm, key=key, store=SynthesisStore(store_dir))
+    outs = {s: svc.submit(_enc(s), 0, count).result() for s in seeds}
+    return svc, outs
+
+
+def test_store_evict_lru_under_budget(dm, tmp_path):
+    """evict(max_bytes) drops least-recently-used shards first, is a
+    no-op under budget, and never corrupts the manifest: a cold handle
+    validates and serves every surviving entry."""
+    store_dir = tmp_path / "dsyn"
+    svc, outs = _fill_store(dm, store_dir, [100, 101, 102, 103])
+    store = svc.store
+    per = 2 * H * H * 3 * 4                     # bytes per 2-row f32 shard
+    assert store.total_bytes() == 4 * per
+    assert store.evict(10 ** 9) == []           # under budget: no-op
+    # touch the oldest entry THROUGH THE STORE so recency, not insertion,
+    # decides (an engine-cache hit never reaches the store's LRU)
+    assert store.get(_key_for(dm, 100)) is not None
+    evicted = store.evict(2 * per)
+    assert len(evicted) == 2 and store.total_bytes() <= 2 * per
+
+    cold = SynthesisStore(store_dir)
+    assert len(cold) == 2
+    hits = 0
+    for s in (100, 101, 102, 103):
+        rows = cold.get(_key_for(dm, s))
+        if rows is not None:
+            hits += 1
+            assert np.array_equal(rows, outs[s])
+    assert hits == 2
+    assert cold.get(_key_for(dm, 100)) is not None   # the touched survivor
+    # evicted shard files are gone, survivors intact
+    assert len(list((store_dir / "shards").glob("*.npz"))) == 2
+
+
+def _key_for(dm, seed, *, count=2):
+    from repro.serve.synthesis import _encoding_hash
+    return (_encoding_hash(_enc(seed)), DC.guidance_scale,
+            DC.sample_timesteps)
+
+
+def test_store_evicted_key_resynthesizes_and_heals(dm, tmp_path):
+    """An evicted key is a clean miss: the next request regenerates it and
+    the store heals — no error, no wrong rows."""
+    store_dir = tmp_path / "dsyn"
+    svc, outs = _fill_store(dm, store_dir, [110, 111])
+    svc.store.evict(0)                          # evict everything
+    assert len(SynthesisStore(store_dir)) == 0
+    cold = _service(dm, key=21, store=SynthesisStore(store_dir))
+    again = cold.submit(_enc(110), 0, 2).result()
+    assert cold.stats["generated"] > 0          # regenerated, not served
+    assert again.shape == outs[110].shape
+    assert len(SynthesisStore(store_dir)) == 1  # healed on flush
+
+
+def test_store_eviction_tombstones_survive_flush(dm, tmp_path):
+    """A flush after evict must not resurrect evicted entries from the
+    on-disk manifest merge (the tombstone path)."""
+    store_dir = tmp_path / "dsyn"
+    svc, _ = _fill_store(dm, store_dir, [120, 121])
+    store = svc.store
+    victims = store.evict(0)
+    assert len(victims) == 2
+    # new work dirties the store; its flush merges against disk
+    svc.submit(_enc(122), 0, 2).result()
+    cold = SynthesisStore(store_dir)
+    assert len(cold) == 1
+    assert cold.get(_key_for(dm, 122)) is not None
+
+
+def test_store_get_missing_shard_file_is_miss(dm, tmp_path):
+    """A shard file deleted out from under a live handle (another process
+    evicting a shared root) is a MISS, not a crash — re-synthesize."""
+    store_dir = tmp_path / "dsyn"
+    svc, _ = _fill_store(dm, store_dir, [140])
+    (store_dir / "shards" / f"{next(iter(svc.store._manifest['entries']))}"
+     ".npz").unlink()
+    assert SynthesisStore(store_dir).get(_key_for(dm, 140)) is None
+
+
+def test_store_evict_with_dirty_entries_keeps_manifest_consistent(tmp_path):
+    """evict() while puts are still buffered must not publish a manifest
+    entry whose shard is not on disk — every surviving entry a cold
+    handle sees must load."""
+    store_dir = tmp_path / "dsyn"
+    rows = np.zeros((2, 4, 4, 3), np.float32)
+    st = SynthesisStore(store_dir)
+    ka, kb, kc = [(f"{i:040x}", 7.5, 3) for i in range(3)]
+    st.put(ka, rows)
+    st.put(kb, rows)
+    st.flush()
+    st.put(kc, rows + 1.0)                  # dirty, unflushed
+    st.evict(2 * rows.nbytes + 1)           # room for two entries
+    cold = SynthesisStore(store_dir)
+    served = 0
+    for key in (ka, kb, kc):
+        got = cold.get(key)
+        if got is not None:
+            served += 1
+    assert served == len(cold) == 2
+    assert cold.get(kc) is not None          # the freshest entry survived
+
+
+def test_service_store_budget_evicts_after_drain(dm, tmp_path):
+    """store_max_bytes on the service keeps the persistent store under
+    budget across drains — a long-lived server stops growing."""
+    per = 2 * H * H * 3 * 4
+    svc = _service(dm, key=22, store=SynthesisStore(tmp_path / "dsyn"),
+                   store_max_bytes=2 * per)
+    for i, s in enumerate((130, 131, 132, 133)):
+        svc.submit(_enc(s), i % 3, 2).result()
+    assert svc.store.total_bytes() <= 2 * per
+    assert svc.stats["store_evicted"] >= 2
+    assert svc.stats["store_entries"] <= 2
+    # the most recent key survived and round-trips from a cold handle
+    assert SynthesisStore(tmp_path / "dsyn").get(_key_for(dm, 133)) \
+        is not None
+
+
 def test_oscar_synthesize_routes_through_service(dm):
     from repro.core.oscar import synthesize
     params, sched = dm
