@@ -23,14 +23,20 @@ categories, k samples per (client, category) encoding.  Five runs:
   each group's waves separately; ragged waves carry per-row guidance and
   step counts, so every classifier-free row shares one compiled geometry.
   Reported: padded rows, distinct compiled shapes, wall-clock, and
-  ``row_iters`` — the honest device-work count (ragged's frozen
-  right-aligned rows still ride through the denoiser).  The comparison
-  ASSERTS ragged pads strictly fewer rows and compiles strictly fewer
-  shapes, so a regression fails CI's smoke run.
+  ``row_iters_scheduled`` vs ``row_iters_active`` — the honest device-
+  work split (one-shot ragged schedules its frozen right-aligned rows
+  through the denoiser; only the active count is useful work).  The
+  comparison ASSERTS ragged pads strictly fewer rows and compiles
+  strictly fewer shapes, so a regression fails CI's smoke run;
+* ``compacted``    — the same mixed workload through the iteration-
+  compacted scheduler (``compaction="full"``): one scan segment per
+  activation epoch, so scheduled row-iterations must equal the TRUE sum
+  of per-row steps with 0 padded rows, and D_syn must be bit-identical
+  to the one-shot ragged run — both ASSERTED, gating CI's smoke run.
 
 Writes ``results/BENCH_synthesis.json`` via the shared harness
-(``--mode ragged`` re-runs only the ragged comparison and merges it into
-an existing results file).
+(``--mode ragged`` / ``--mode compacted`` re-run only the mixed-workload
+comparison and merge it into an existing results file).
 """
 from __future__ import annotations
 
@@ -120,30 +126,34 @@ def _bench_streaming(params, dc, sched, enc, *, steps, k):
             "streamed_requests": strm.stats["streamed"]}
 
 
-def _bench_ragged(params, dc, sched, enc, *, steps, k):
-    """Grouped vs ragged on an identical MIXED workload: the R×C requests
-    round-robin over (guidance, steps) combos — the serving-time shape of
-    a guidance sweep running next to requests at another step budget."""
+def _bench_mixed(params, dc, sched, enc, *, steps, k, compacted: bool):
+    """Grouped vs ragged (vs compacted) on an identical MIXED workload:
+    the R×C requests round-robin over (guidance, steps) combos — the
+    serving-time shape of a guidance sweep running next to requests at
+    another step budget.  With ``compacted`` the same workload also runs
+    through the iteration-compacted scheduler (``compaction="full"``) and
+    its outputs are asserted BIT-IDENTICAL to the one-shot ragged run."""
     R, C = enc.shape[:2]
     half = max(steps // 2, 2)
     combos = [(1.5, steps), (4.0, steps), (7.5, half), (1.5, half)]
+    reqs = [(r, c, *combos[i % len(combos)])
+            for i, (r, c) in enumerate((r, c) for r in range(R)
+                                       for c in range(C))]
+    true_row_iters = sum(k * s for _, _, _, s in reqs)
 
-    def run_mode(ragged):
+    def run_mode(ragged, compaction=None):
         eng = SynthesisEngine(params, dc, sched, image_size=16, cache=False,
-                              ragged=ragged)
-        rids = []
-        for i, (r, c) in enumerate((r, c) for r in range(R)
-                                   for c in range(C)):
-            g, s = combos[i % len(combos)]
-            rids.append(eng.submit(enc[r, c], c, k, guidance=g, num_steps=s))
+                              ragged=ragged, compaction=compaction)
+        rids = [eng.submit(enc[r, c], c, k, guidance=g, num_steps=s)
+                for r, c, g, s in reqs]
         t0 = time.time()
         out = eng.run(jax.random.PRNGKey(2))
         wall = time.time() - t0
         assert all(out[rid].shape[0] == k for rid in rids)
-        return wall, dict(eng.stats)
+        return wall, dict(eng.stats), [out[rid] for rid in rids]
 
-    t_grp, st_grp = run_mode(False)
-    t_rag, st_rag = run_mode(True)
+    t_grp, st_grp, _ = run_mode(False)
+    t_rag, st_rag, out_rag = run_mode(True)
     res = {"combos": len(combos),
            "grouped_s": t_grp, "ragged_s": t_rag,
            "grouped_padded": st_grp["padded"],
@@ -151,8 +161,18 @@ def _bench_ragged(params, dc, sched, enc, *, steps, k):
            "grouped_compiled": st_grp["compiled_shapes"],
            "ragged_compiled": st_rag["compiled_shapes"],
            "grouped_waves": st_grp["waves"], "ragged_waves": st_rag["waves"],
-           "grouped_row_iters": st_grp["row_iters"],
-           "ragged_row_iters": st_rag["row_iters"]}
+           "grouped_row_iters_scheduled": st_grp["row_iters_scheduled"],
+           "grouped_row_iters_active": st_grp["row_iters_active"],
+           "ragged_row_iters_scheduled": st_rag["row_iters_scheduled"],
+           "ragged_row_iters_active": st_rag["row_iters_active"]}
+    # honest accounting: active iters count only REAL rows' own steps, so
+    # every mode agrees on the workload's useful work no matter how much
+    # padding or frozen riding its schedule added on top
+    assert (res["grouped_row_iters_active"]
+            == res["ragged_row_iters_active"] == true_row_iters), (
+        f"active row_iters grouped {res['grouped_row_iters_active']} / "
+        f"ragged {res['ragged_row_iters_active']} != true sum "
+        f"{true_row_iters} — padding leaked into the useful-work stat")
     # the CI regression gate: cross-group wave fusion must strictly beat
     # per-group packing on both padding and compile count
     assert res["ragged_padded"] < res["grouped_padded"], (
@@ -161,22 +181,66 @@ def _bench_ragged(params, dc, sched, enc, *, steps, k):
     assert res["ragged_compiled"] < res["grouped_compiled"], (
         f"ragged compiled {res['ragged_compiled']} shapes >= grouped "
         f"{res['grouped_compiled']} — ragged wave fusion regressed")
-    return res
+    if not compacted:
+        return res, None
+
+    t_cmp, st_cmp, out_cmp = run_mode(True, compaction="full")
+    comp = {"compacted_s": t_cmp,
+            "compacted_padded": st_cmp["padded"],
+            "compacted_compiled": st_cmp["compiled_shapes"],
+            "compacted_waves": st_cmp["waves"],
+            "compacted_segments": st_cmp["segments"],
+            "compacted_row_iters_scheduled": st_cmp["row_iters_scheduled"],
+            "compacted_row_iters_active": st_cmp["row_iters_active"],
+            "true_row_iters": true_row_iters}
+    # the compute-skipping regression gate: full compaction must schedule
+    # EXACTLY the true sum of per-row steps (no frozen rows riding the
+    # denoiser, no alignment padding) and change no output bit
+    assert comp["compacted_padded"] == 0, (
+        f"compacted padded {comp['compacted_padded']} rows != 0 — wave "
+        f"packing regressed")
+    assert (comp["compacted_row_iters_scheduled"]
+            == comp["compacted_row_iters_active"] == true_row_iters), (
+        f"compacted scheduled/active row_iters "
+        f"{comp['compacted_row_iters_scheduled']}/"
+        f"{comp['compacted_row_iters_active']} != true sum "
+        f"{true_row_iters} — compaction is leaving frozen rows scheduled")
+    assert (comp["compacted_row_iters_scheduled"]
+            < res["ragged_row_iters_scheduled"]), (
+        "compaction scheduled no fewer row_iters than the one-shot "
+        "ragged scan")
+    assert all(np.array_equal(a, b) for a, b in zip(out_rag, out_cmp)), (
+        "compacted D_syn differs from ragged — the schedule leaked into "
+        "row values")
+    return res, comp
 
 
-def _print_ragged(ragged: dict):
-    print_table("Ragged waves — mixed (guidance, steps) workload", [
+def _print_ragged(ragged: dict, compacted: dict | None = None):
+    rows = [
         {"mode": "grouped", "wall_s": ragged["grouped_s"],
          "padded": ragged["grouped_padded"],
          "compiled": ragged["grouped_compiled"],
          "waves": ragged["grouped_waves"],
-         "row_iters": ragged["grouped_row_iters"]},
+         "iters_sched": ragged["grouped_row_iters_scheduled"],
+         "iters_active": ragged["grouped_row_iters_active"]},
         {"mode": "ragged", "wall_s": ragged["ragged_s"],
          "padded": ragged["ragged_padded"],
          "compiled": ragged["ragged_compiled"],
          "waves": ragged["ragged_waves"],
-         "row_iters": ragged["ragged_row_iters"]},
-    ], ["mode", "wall_s", "padded", "compiled", "waves", "row_iters"])
+         "iters_sched": ragged["ragged_row_iters_scheduled"],
+         "iters_active": ragged["ragged_row_iters_active"]},
+    ]
+    if compacted is not None:
+        rows.append(
+            {"mode": "compacted", "wall_s": compacted["compacted_s"],
+             "padded": compacted["compacted_padded"],
+             "compiled": compacted["compacted_compiled"],
+             "waves": compacted["compacted_waves"],
+             "iters_sched": compacted["compacted_row_iters_scheduled"],
+             "iters_active": compacted["compacted_row_iters_active"]})
+    print_table("Ragged waves — mixed (guidance, steps) workload", rows,
+                ["mode", "wall_s", "padded", "compiled", "waves",
+                 "iters_sched", "iters_active"])
 
 
 def _bench_store(params, dc, sched, enc, *, steps, k, store_dir):
@@ -218,16 +282,25 @@ def run(preset: str = "paper", mode: str = "all"):
     print(f"  workload: {R} clients x {C} categories x {k} samples "
           f"= {n} images, {steps} steps")
 
-    if mode == "ragged":
-        # ragged comparison only (the CI regression step): merge into an
-        # existing results file rather than clobbering the full run
-        ragged = _bench_ragged(params, dc, sched, enc, steps=steps, k=k)
-        _print_ragged(ragged)
+    if mode in ("ragged", "compacted"):
+        # mixed-workload comparison only (the CI regression step): merge
+        # into an existing results file rather than clobbering the full
+        # run.  ``compacted`` additionally runs the iteration-compacted
+        # scheduler and its row_iters/bit-parity asserts.
+        ragged, compacted = _bench_mixed(params, dc, sched, enc, steps=steps,
+                                         k=k, compacted=mode == "compacted")
+        _print_ragged(ragged, compacted)
         path = RESULTS / "BENCH_synthesis.json"
         res = json.loads(path.read_text()) if path.exists() else {}
         if res.get("preset") != preset:
             res = {"preset": preset}    # never mix presets in one file
         res["ragged"] = ragged
+        if compacted is not None:
+            res["compacted"] = compacted
+        else:
+            # a ragged-only refresh must not leave an older run's
+            # compacted block paired with the fresh numbers
+            res.pop("compacted", None)
         save_result("BENCH_synthesis", res)
         return res
 
@@ -258,7 +331,8 @@ def run(preset: str = "paper", mode: str = "all"):
     with tempfile.TemporaryDirectory(prefix="dsyn_store_") as store_dir:
         store = _bench_store(params, dc, sched, enc, steps=steps, k=k,
                              store_dir=store_dir)
-    ragged = _bench_ragged(params, dc, sched, enc, steps=steps, k=k)
+    ragged, compacted = _bench_mixed(params, dc, sched, enc, steps=steps,
+                                     k=k, compacted=True)
 
     rows = [
         {"path": "seed_loop", "wall_s": t_seed, "img_per_s": n / t_seed},
@@ -272,7 +346,7 @@ def run(preset: str = "paper", mode: str = "all"):
     ]
     print_table("Synthesis throughput — engine waves vs seed chunk loops",
                 rows, ["path", "wall_s", "img_per_s"])
-    _print_ragged(ragged)
+    _print_ragged(ragged, compacted)
     print(f"  streaming: padded {streaming['streaming_padded']} rows vs "
           f"{streaming['two_snapshots_padded']} snapshot-drained, "
           f"{streaming['streamed_requests']} requests admitted mid-drain")
@@ -285,7 +359,7 @@ def run(preset: str = "paper", mode: str = "all"):
            "speedup_cold": t_seed / t_cold,
            "speedup_warm": t_seed / max(t_warm, 1e-9),
            "engine_stats": dict(eng.stats),
-           "ragged": ragged,
+           "ragged": ragged, "compacted": compacted,
            **streaming, **store}
     save_result("BENCH_synthesis", res)
     return res
@@ -295,10 +369,13 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--preset", default="paper",
                     choices=("smoke", "quick", "paper"))
-    ap.add_argument("--mode", default="all", choices=("all", "ragged"),
+    ap.add_argument("--mode", default="all",
+                    choices=("all", "ragged", "compacted"),
                     help="'ragged' runs only the grouped-vs-ragged mixed-"
                          "workload comparison and merges it into an "
-                         "existing BENCH_synthesis.json")
+                         "existing BENCH_synthesis.json; 'compacted' adds "
+                         "the iteration-compacted scheduler with its "
+                         "row_iters == true-sum and bit-parity asserts")
     args = ap.parse_args()
     run(args.preset, args.mode)
 

@@ -29,23 +29,22 @@ from repro.serve.synthesis import SynthesisEngine
 
 
 def _service(service, engine, ocfg, dm_params, sched, *,
-             ragged: bool = False):
+             ragged: bool = False, compaction: int | str | None = None):
     """Every baseline's D_syn generation routes through a service.  An
     explicitly-passed engine beats a shared service (same precedence as
     ``oscar.synthesize``); otherwise the shared service, else a fresh
-    engine.  ``ragged=True`` opts the chosen engine into ragged waves
-    (opt-in only — it never forces a ragged shared engine back)."""
+    engine.  ``ragged=True`` opts the chosen engine into ragged waves,
+    ``compaction`` into iteration-compacted segments (opt-in only — they
+    never force a ragged/compacted shared engine back)."""
     if engine is not None:
-        if ragged:
-            engine.ragged = True
-        return SynthesisService(engine)
+        return SynthesisService(engine.opt_in(ragged=ragged,
+                                              compaction=compaction))
     if service is not None:
-        if ragged:
-            service.engine.ragged = True
+        service.engine.opt_in(ragged=ragged, compaction=compaction)
         return service
     return SynthesisService(SynthesisEngine(
         dm_params, ocfg.diffusion, sched, image_size=ocfg.data.image_size,
-        channels=ocfg.data.channels, ragged=ragged))
+        channels=ocfg.data.channels, ragged=ragged, compaction=compaction))
 
 
 def run_fedcado(key, ocfg: OscarConfig, data, dm_params, sched, *,
@@ -53,7 +52,8 @@ def run_fedcado(key, ocfg: OscarConfig, data, dm_params, sched, *,
                 local_steps: int = 200,
                 engine: SynthesisEngine | None = None,
                 service: SynthesisService | None = None,
-                ragged: bool = False):
+                ragged: bool = False,
+                compaction: int | str | None = None):
     classifier = classifier or ocfg.classifier
     k_samples = samples_per_category or ocfg.samples_per_category
     R = data.client_images.shape[0]
@@ -76,9 +76,11 @@ def run_fedcado(key, ocfg: OscarConfig, data, dm_params, sched, *,
     # One request per (client, category); the engine packs each client's
     # requests (same uploaded classifier → same wave group) into uniform
     # waves, so every client shares one compiled trajectory shape.
-    # (``ragged`` affects only classifier-FREE groups; it is threaded so a
-    # FedCADO run next to cfg traffic leaves the shared engine configured.)
-    svc = _service(service, engine, ocfg, dm_params, sched, ragged=ragged)
+    # (``ragged``/``compaction`` affect only classifier-FREE groups; they
+    # are threaded so a FedCADO run next to cfg traffic leaves the shared
+    # engine configured.)
+    svc = _service(service, engine, ocfg, dm_params, sched, ragged=ragged,
+                   compaction=compaction)
 
     def make_logprob(pr):
         def logprob(x, labels):
@@ -111,7 +113,8 @@ def run_feddisc(key, ocfg: OscarConfig, data, dm_params, sched, fm: FrozenFM,
                 n_prototypes: int = 4,
                 engine: SynthesisEngine | None = None,
                 service: SynthesisService | None = None,
-                ragged: bool = False):
+                ragged: bool = False,
+                compaction: int | str | None = None):
     classifier = classifier or ocfg.classifier
     k_samples = samples_per_category or ocfg.samples_per_category
     R = data.client_images.shape[0]
@@ -141,8 +144,10 @@ def run_feddisc(key, ocfg: OscarConfig, data, dm_params, sched, fm: FrozenFM,
     # store entry (the engine batches across clients and categories into
     # uniform waves either way; ``ragged=True`` lets those waves also mix
     # with other classifier-free traffic, e.g. OSCAR uploads at a
-    # different guidance scale, in one compiled trajectory).
-    svc = _service(service, engine, ocfg, dm_params, sched, ragged=ragged)
+    # different guidance scale, in one compiled trajectory, and
+    # ``compaction`` skips the frozen iterations of that mixing).
+    svc = _service(service, engine, ocfg, dm_params, sched, ragged=ragged,
+                   compaction=compaction)
     rng = np.random.default_rng(0)
     futs, labels = [], []
     for r in range(R):

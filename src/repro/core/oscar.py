@@ -53,7 +53,7 @@ def synthesize(key, dm_params, dc, sched, encodings, present, k_samples: int,
                *, image_size: int, channels: int = 3, guidance=None,
                use_pallas: bool = False, engine: SynthesisEngine | None = None,
                service: SynthesisService | None = None, wave_size: int = 128,
-               ragged: bool = False):
+               ragged: bool = False, compaction: int | str | None = None):
     """Step (3): server-side D_syn generation.  Returns (images, labels).
 
     Synthesis is embarrassingly parallel over (client × category × sample);
@@ -65,8 +65,11 @@ def synthesize(key, dm_params, dc, sched, encodings, present, k_samples: int,
 
     ``ragged=True`` opts the engine into ragged waves (per-row guidance
     and step counts — one compiled trajectory across classifier-free
-    groups; see ``SynthesisEngine``).  Opt-in only: it switches a shared
-    engine ON but never forces a ragged shared engine back to grouped."""
+    groups; see ``SynthesisEngine``); ``compaction`` (implies ragged)
+    further runs those waves as iteration-compacted nested segments, same
+    bits, fewer scheduled row-iterations.  Opt-in only: they switch a
+    shared engine ON but never force a ragged/compacted shared engine
+    back."""
     R, C, dim = encodings.shape
     svc, eng = service, engine
     if eng is not None:
@@ -80,9 +83,10 @@ def synthesize(key, dm_params, dc, sched, encodings, present, k_samples: int,
     if eng is None:
         eng = SynthesisEngine(dm_params, dc, sched, image_size=image_size,
                               channels=channels, use_pallas=use_pallas,
-                              wave_size=wave_size, ragged=ragged)
-    elif ragged:
-        eng.ragged = True
+                              wave_size=wave_size, ragged=ragged,
+                              compaction=compaction)
+    else:
+        eng.opt_in(ragged=ragged, compaction=compaction)
     if svc is None:
         svc = SynthesisService(eng)
     futs, cats = [], []
@@ -109,7 +113,8 @@ def run_oscar(key, ocfg: OscarConfig, data, dm_params, sched, fm: FrozenFM,
               use_pallas: bool = False,
               engine: SynthesisEngine | None = None,
               service: SynthesisService | None = None,
-              ragged: bool = False) -> OscarResult:
+              ragged: bool = False,
+              compaction: int | str | None = None) -> OscarResult:
     classifier = classifier or ocfg.classifier
     k_samples = samples_per_category or ocfg.samples_per_category
     kenc, ksyn, kclf = jax.random.split(key, 3)
@@ -120,7 +125,8 @@ def run_oscar(key, ocfg: OscarConfig, data, dm_params, sched, fm: FrozenFM,
                               image_size=ocfg.data.image_size,
                               channels=ocfg.data.channels,
                               guidance=guidance, use_pallas=use_pallas,
-                              engine=engine, service=service, ragged=ragged)
+                              engine=engine, service=service, ragged=ragged,
+                              compaction=compaction)
     if len(syn_x) == 0:
         # degenerate round: no (client, category) present anywhere — no
         # D_syn, so the broadcast model is the untrained init

@@ -261,6 +261,40 @@ def _cfg_update_rowwise(x, eps_c, eps_u, s, ab_t, ab_prev, noise, active,
                                       noise, active, eta)
 
 
+def _ragged_scan(params, dc: DiffusionConfig, x, y2, row_keys, guidance,
+                 ts, ab_t, ab_prev, jloc, *, eta: float, use_pallas: bool):
+    """The shared per-row reverse scan: one iteration per table column,
+    per-row (t, ᾱ_t, ᾱ_prev, guidance), per-row noise keyed
+    ``fold_in(row_keys[b], 1 + j)`` with j the row-LOCAL step index, and
+    an active mask (``jloc >= 0``) freezing rows whose right-aligned
+    trajectory has not started.  Both the one-shot ragged wave and every
+    compaction segment run THIS body, so their arithmetic is identical by
+    construction — the substrate of the compacted/ragged bit-parity.
+    Returns the advanced x UNCLIPPED (callers clip once, at the end of the
+    full trajectory)."""
+    B, H, _, channels = x.shape
+
+    def step(x, inp):
+        t, abt, abp, j = inp                     # (B,) each
+        active = j >= 0
+        x2 = jnp.concatenate([x, x], axis=0)
+        t2 = jnp.concatenate([t, t])
+        eps2 = dit_apply(params, dc, x2, t2, y2)
+        eps_c, eps_u = eps2[:B], eps2[B:]
+        nk = jax.vmap(jax.random.fold_in)(row_keys,
+                                          jnp.maximum(j, 0) + 1)
+        noise = jax.vmap(lambda k: jax.random.normal(k, (H, H, channels)))(nk)
+        noise = noise * (t > 0)[:, None, None, None]
+        x = _cfg_update_rowwise(x, eps_c, eps_u, guidance, abt, abp, noise,
+                                active, eta, use_pallas)
+        return x, None
+
+    x, _ = jax.lax.scan(step, x,
+                        (jnp.asarray(ts).T, jnp.asarray(ab_t).T,
+                         jnp.asarray(ab_prev).T, jnp.asarray(jloc).T))
+    return x
+
+
 def reverse_sample_ragged(params, dc: DiffusionConfig, y, row_keys, guidance,
                           ts, ab_t, ab_prev, jloc, *, image_size: int,
                           channels: int = 3, eta: float = 1.0,
@@ -284,21 +318,235 @@ def reverse_sample_ragged(params, dc: DiffusionConfig, y, row_keys, guidance,
     null = jnp.broadcast_to(params["null_y"], (B, dc.cond_dim))
     y2 = jnp.concatenate([y, null], axis=0)
     guidance = jnp.asarray(guidance, jnp.float32)
-
-    def step(x, inp):
-        t, abt, abp, j = inp                     # (B,) each
-        active = j >= 0
-        x2 = jnp.concatenate([x, x], axis=0)
-        t2 = jnp.concatenate([t, t])
-        eps2 = dit_apply(params, dc, x2, t2, y2)
-        eps_c, eps_u = eps2[:B], eps2[B:]
-        nk = jax.vmap(jax.random.fold_in)(row_keys,
-                                          jnp.maximum(j, 0) + 1)
-        noise = jax.vmap(lambda k: jax.random.normal(k, (H, H, channels)))(nk)
-        noise = noise * (t > 0)[:, None, None, None]
-        x = _cfg_update_rowwise(x, eps_c, eps_u, guidance, abt, abp, noise,
-                                active, eta, use_pallas)
-        return x, None
-
-    x, _ = jax.lax.scan(step, x, (ts.T, ab_t.T, ab_prev.T, jloc.T))
+    x = _ragged_scan(params, dc, x, y2, row_keys, guidance,
+                     ts, ab_t, ab_prev, jloc, eta=eta, use_pallas=use_pallas)
     return jnp.clip(x, -1.0, 1.0)
+
+
+# ---------------------------------------------------------------------------
+# compacted mode: iteration-compacted nested waves (compute-skipping ragged)
+# ---------------------------------------------------------------------------
+#
+# The one-shot ragged scan runs EVERY row through all max_steps iterations;
+# right-aligned rows whose trajectory has not started ride the denoiser
+# frozen — pure discarded compute (the row_iters_scheduled vs _active gap).
+# Compaction partitions the iteration axis into K ACTIVATION EPOCHS: rows
+# are sorted by start iteration (host-side, stable), and each epoch runs
+# one scan segment over only the rows live by that epoch's end — nested
+# waves whose batch grows as rows activate.  Because every row's noise is
+# keyed by its request identity (not wave position or iteration count),
+# and a frozen iteration is the identity on x, running a row's trajectory
+# in segments is BIT-EXACT vs the one-shot ragged scan.
+
+
+def plan_epochs(steps, max_steps: int, *, compaction="full",
+                granule: int = 1, geoms=None, compile_cost: int = 256):
+    """Partition a ragged wave into activation epochs.
+
+    ``steps`` (B,) per-row step counts, ``max_steps`` the wave's step
+    ceiling.  Row b activates at iteration ``start = max_steps - steps[b]``
+    of the right-aligned shared scan.  Returns ``(order, epochs)``:
+    ``order`` (B,) sorts rows by activation (earliest first, stable, so
+    the rows live in any epoch are a PREFIX of the sorted order), and
+    ``epochs`` is a tuple of ``(rows, begin, end)`` — scan iterations
+    ``[begin, end)`` run over the first ``rows`` sorted rows.  The first
+    epoch begins at the earliest start, so iterations where NO row is
+    live (a running step ceiling above the wave's deepest row) are
+    skipped outright.
+
+    ``compaction`` selects the boundary set:
+
+    * ``"full"`` — an epoch boundary at every distinct start: no row ever
+      rides frozen, total scheduled row-iterations equal the true sum of
+      per-row steps;
+    * an ``int`` K — at most K epochs: full boundaries merged greedily,
+      always dropping the boundary whose removal adds the fewest frozen
+      row-iterations;
+    * ``"auto"`` — a boundary is kept when the frozen row-iterations it
+      saves outweigh its compile cost: rows arriving at start u save
+      ``count(u) * (u - epoch_begin)`` iterations, and the cut costs
+      ``compile_cost`` row-iteration-equivalents unless the segment
+      geometry ``(carried, rows, length)`` — granule-rounded, exactly the
+      key a jitted segment executable specializes on — is already in
+      ``geoms``, the caller's shape-bucket cache of compiled segment
+      geometries, which makes a split free once its executable exists
+      (e.g. the same wave shape recurring across drains).
+
+    ``granule`` rounds each epoch's row count up (to keep segment batches
+    divisible by a mesh's data axes); the extra rows are future arrivals
+    admitted early — frozen by the active mask until their start, so the
+    rounding never changes a row's value, only the schedule.
+    """
+    steps = np.asarray(steps, np.int32).reshape(-1)
+    B, S = len(steps), int(max_steps)
+    if B == 0:
+        raise ValueError("plan_epochs: empty wave")
+    if steps.min() < 1:
+        raise ValueError(f"plan_epochs: step counts must be >= 1, got "
+                         f"{int(steps.min())}")
+    if steps.max() > S:
+        raise ValueError(f"plan_epochs: max_steps={S} < largest row step "
+                         f"count {int(steps.max())}")
+    starts = S - steps
+    order = np.argsort(starts, kind="stable")
+    ss = starts[order]
+    events = [(int(u), int(c)) for u, c in
+              zip(*np.unique(ss, return_counts=True))]   # ascending starts
+
+    def _rounded(rows):
+        return min(-(-rows // granule) * granule, B) if granule > 1 else rows
+
+    if compaction == "full":
+        bounds = [u for u, _ in events]
+    elif isinstance(compaction, int) and not isinstance(compaction, bool):
+        if compaction < 1:
+            raise ValueError(f"plan_epochs: K={compaction} < 1")
+        bounds = [u for u, _ in events]
+        while len(bounds) > compaction:
+            # drop the boundary whose removal freezes the fewest row-iters:
+            # arrivals in its epoch ride from the previous boundary instead
+            costs = []
+            for i in range(1, len(bounds)):
+                hi = bounds[i + 1] if i + 1 < len(bounds) else S
+                arriving = sum(c for u, c in events if bounds[i] <= u < hi)
+                costs.append((arriving * (bounds[i] - bounds[i - 1]), i))
+            bounds.pop(min(costs)[1])
+    elif compaction == "auto":
+        geoms = geoms or set()
+        bounds = [events[0][0]]
+        live = events[0][1]
+        carried = 0        # rows the would-be segment inherits (= the
+                           # previous closed segment's rounded row count)
+        for u, c in events[1:]:
+            length = u - bounds[-1]
+            cut_cost = (0 if (carried, _rounded(live), length) in geoms
+                        else int(compile_cost))
+            if c * length >= cut_cost:
+                bounds.append(u)
+                carried = _rounded(live)
+            live += c
+    else:
+        raise ValueError(f"plan_epochs: unknown compaction={compaction!r} "
+                         f"(expected 'full', 'auto', or an int K)")
+
+    epochs = []
+    for i, b0 in enumerate(bounds):
+        b1 = bounds[i + 1] if i + 1 < len(bounds) else S
+        rows = _rounded(int(np.searchsorted(ss, b1, side="left")))  # start < b1
+        epochs.append((rows, b0, b1))
+    return order, tuple(epochs)
+
+
+def reverse_sample_segment(params, dc: DiffusionConfig, x, y, row_keys,
+                           guidance, ts, ab_t, ab_prev, jloc, *,
+                           image_size: int, channels: int = 3,
+                           eta: float = 1.0, use_pallas: bool = False):
+    """One compaction epoch: advance the carried rows and admit the new.
+
+    ``x`` is the previous segment's output (the first ``x.shape[0]`` rows
+    of this segment); rows ``x.shape[0]:`` activate here — their x_T is
+    drawn from ``fold_in(row_keys[b], 0)``, the SAME draw the one-shot
+    ragged scan makes up front, so admitting a row late never changes its
+    trajectory.  Tables are the ``[:rows, begin:end]`` slices of the
+    wave's ``ragged_tables``.  Returns x UNCLIPPED (the trajectory
+    continues into the next segment; ``reverse_sample_compacted`` clips
+    once at the end)."""
+    n_prev = x.shape[0]
+    H = image_size
+    kx = jax.vmap(lambda k: jax.random.fold_in(k, 0))(row_keys[n_prev:])
+    x_new = jax.vmap(lambda k: jax.random.normal(k, (H, H, channels)))(kx)
+    x = jnp.concatenate([x, x_new], axis=0)
+    B = x.shape[0]
+    null = jnp.broadcast_to(params["null_y"], (B, dc.cond_dim))
+    y2 = jnp.concatenate([y, null], axis=0)
+    guidance = jnp.asarray(guidance, jnp.float32)
+    return _ragged_scan(params, dc, x, y2, row_keys, guidance,
+                        ts, ab_t, ab_prev, jloc, eta=eta,
+                        use_pallas=use_pallas)
+
+
+def reverse_sample_compacted(params, dc: DiffusionConfig, y, row_keys,
+                             guidance, ts, ab_t, ab_prev, jloc, *,
+                             epochs, order=None, image_size: int,
+                             channels: int = 3, eta: float = 1.0,
+                             use_pallas: bool = False, segment_fn=None):
+    """Compute-skipping ragged reverse process: nested activation waves.
+
+    Runs one scan segment per epoch from ``plan_epochs`` — each over only
+    the rows live by that epoch's end — and stitches the segments back
+    into REQUEST order (``order`` from ``plan_epochs``; pass ``None`` if
+    inputs are already activation-sorted).  Bit-exact vs
+    ``reverse_sample_ragged`` on the same tables: row noise is keyed by
+    request identity (``row_keys``), frozen iterations are the identity
+    on x, and every segment runs the same scan body — so skipping a
+    frozen row's iterations cannot change any row's value.
+
+    ``segment_fn`` defaults to ``reverse_sample_segment``; callers that
+    want one compiled executable per segment geometry pass a jitted
+    wrapper (``sampler._compacted_segment``)."""
+    if segment_fn is None:
+        segment_fn = reverse_sample_segment
+    if order is not None:
+        idx = np.asarray(order)
+        y, row_keys = y[idx], row_keys[idx]
+        guidance = jnp.asarray(guidance, jnp.float32)[idx]
+        ts, ab_t = ts[idx], ab_t[idx]
+        ab_prev, jloc = ab_prev[idx], jloc[idx]
+    H = image_size
+    n_total = y.shape[0]
+    if not epochs:
+        raise ValueError("reverse_sample_compacted: empty epoch plan")
+    if epochs[-1][0] != n_total:
+        raise ValueError(
+            f"epochs cover {epochs[-1][0]} rows; wave has {n_total}")
+    # a caller-supplied plan must have the shape plan_epochs guarantees —
+    # contiguous non-empty segments with nondecreasing row counts that
+    # run the tables to their final iteration; a gap or an early stop
+    # would silently return half-denoised rows
+    S = ts.shape[1]
+    if epochs[0][1] < 0:
+        raise ValueError(f"reverse_sample_compacted: epoch begins at "
+                         f"iteration {epochs[0][1]} < 0")
+    prev_end, prev_rows = epochs[0][1], 1
+    for rows, begin, end in epochs:
+        if begin != prev_end or end <= begin or not (prev_rows <= rows
+                                                     <= n_total):
+            raise ValueError(
+                f"reverse_sample_compacted: malformed epoch "
+                f"({rows}, {begin}, {end}) — epochs must be contiguous, "
+                f"non-empty, with nondecreasing row counts")
+        prev_end, prev_rows = end, rows
+    if prev_end != S:
+        raise ValueError(
+            f"reverse_sample_compacted: epochs stop at iteration "
+            f"{prev_end}; tables span {S}")
+    # ...and every iteration a row is ACTIVE (jloc >= 0, monotone per
+    # row) must be computed by an epoch that includes the row: rows a
+    # plan skips — before the first epoch, or above an epoch's row count
+    # — must be frozen there, or their scan starts mid-trajectory from
+    # fresh x_T
+    jl = np.asarray(jloc)
+    b0 = epochs[0][1]
+    if b0 > 0 and not (jl[:, b0 - 1] < 0).all():
+        raise ValueError(
+            f"reverse_sample_compacted: rows are active before the first "
+            f"epoch (begin {b0}) — their leading iterations would be "
+            f"skipped")
+    for rows, begin, end in epochs:
+        if rows < n_total and not (jl[rows:, end - 1] < 0).all():
+            raise ValueError(
+                f"reverse_sample_compacted: epoch ({rows}, {begin}, {end}) "
+                f"excludes rows that are active within it")
+    x = jnp.zeros((0, H, H, channels))
+    for rows, begin, end in epochs:
+        x = segment_fn(params, dc, x, y[:rows], row_keys[:rows],
+                       guidance[:rows], ts[:rows, begin:end],
+                       ab_t[:rows, begin:end], ab_prev[:rows, begin:end],
+                       jloc[:rows, begin:end], image_size=H,
+                       channels=channels, eta=eta, use_pallas=use_pallas)
+    x = jnp.clip(x, -1.0, 1.0)
+    if order is not None:
+        inv = np.empty_like(idx)
+        inv[idx] = np.arange(len(idx))
+        x = x[inv]
+    return x

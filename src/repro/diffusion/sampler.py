@@ -18,12 +18,16 @@ from __future__ import annotations
 from functools import partial
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.oscar import DiffusionConfig
 from repro.diffusion.guidance import (ClassifierFree, ClassifierGuided,
-                                      Unconditional, ragged_tables,
-                                      reverse_sample, reverse_sample_ragged)
+                                      Unconditional, plan_epochs,
+                                      ragged_tables, reverse_sample,
+                                      reverse_sample_compacted,
+                                      reverse_sample_ragged,
+                                      reverse_sample_segment)
 from repro.diffusion.guidance import respaced_ts as _respaced_ts  # noqa: F401
 from repro.diffusion.schedule import NoiseSchedule
 
@@ -95,6 +99,58 @@ def sample_cfg_ragged(params, dc: DiffusionConfig, sched: NoiseSchedule, y,
                         ts, ab_t, ab_prev, jloc,
                         image_size=image_size or 16, channels=channels,
                         eta=eta, use_pallas=use_pallas)
+
+
+@partial(jax.jit, static_argnames=("dc", "image_size", "channels", "eta",
+                                   "use_pallas"))
+def _compacted_segment(params, dc, x, y, row_keys, guidance, ts, ab_t,
+                       ab_prev, jloc, *, image_size, channels, eta,
+                       use_pallas):
+    """One compaction epoch, jitted: the executable is keyed by the
+    segment GEOMETRY — (carried rows, live rows, iterations) — not by the
+    wave it came from, so two waves (or two drains) whose epochs share a
+    geometry share one compile.  Table values are traced operands: the
+    same (rows, length) segment at a different iteration offset reuses
+    the executable."""
+    return reverse_sample_segment(params, dc, x, y, row_keys, guidance,
+                                  ts, ab_t, ab_prev, jloc,
+                                  image_size=image_size, channels=channels,
+                                  eta=eta, use_pallas=use_pallas)
+
+
+def sample_cfg_compacted(params, dc: DiffusionConfig, sched: NoiseSchedule,
+                         y, row_keys, guidance, num_steps, *,
+                         max_steps: int | None = None, compaction="full",
+                         plan=None, geoms=None, compile_cost: int = 256,
+                         granule: int = 1, image_size: int | None = None,
+                         channels: int = 3, eta: float = 1.0,
+                         use_pallas: bool = False):
+    """Compute-skipping ragged wave: iteration-compacted nested waves.
+
+    Same per-row contract as ``sample_cfg_ragged`` — ``y`` (B, cond_dim),
+    ``row_keys``/``guidance``/``num_steps`` one entry per row, results
+    bit-identical to it (and to the row sampled in any other packing) —
+    but the reverse process runs as one scan segment per activation
+    epoch, so frozen right-aligned rows stop riding the denoiser: total
+    scheduled row-iterations drop from B × max_steps toward the true sum
+    of per-row steps.  ``compaction``/``geoms``/``compile_cost``/
+    ``granule`` are forwarded to ``plan_epochs``; pass ``plan`` (its
+    ``(order, epochs)`` result) to reuse a plan the caller already made
+    for accounting.  Returns rows in REQUEST order.
+    """
+    steps = np.asarray(num_steps, np.int32).reshape(-1)
+    S = int(max_steps if max_steps is not None else steps.max())
+    if plan is None:
+        plan = plan_epochs(steps, S, compaction=compaction, granule=granule,
+                           geoms=geoms, compile_cost=compile_cost)
+    order, epochs = plan
+    ts, ab_t, ab_prev, jloc = ragged_tables(sched, steps, S)
+    return reverse_sample_compacted(
+        params, dc, jnp.asarray(y), jnp.asarray(row_keys),
+        jnp.asarray(guidance, jnp.float32), ts, ab_t, ab_prev, jloc,
+        epochs=epochs, order=order, image_size=image_size or 16,
+        channels=channels, eta=eta, use_pallas=use_pallas,
+        segment_fn=_compacted_segment)
 
 
 @partial(jax.jit, static_argnames=("dc", "num", "num_steps", "eta",

@@ -35,9 +35,14 @@ def _cfg_kernel(scal_ref, x_ref, ec_ref, eu_ref, z_ref, out_ref, *, s, eta):
     out_ref[...] = out.astype(out_ref.dtype)
 
 
-def _cfg_rowwise_kernel(scal_ref, x_ref, ec_ref, eu_ref, z_ref, out_ref, *,
-                        eta):
-    b = pl.program_id(0)
+def _cfg_rowwise_kernel(off_ref, scal_ref, x_ref, ec_ref, eu_ref, z_ref,
+                        out_ref, *, eta):
+    # segment-offset indexing: tensor row b reads its scalars at column
+    # off + b of a scalar table that may span a WIDER row range than this
+    # launch — a compaction segment (or a per-host window of a sharded
+    # wave) addresses its window of the wave-resident (4, B_wave) table
+    # instead of materialising a sliced copy per segment per step.
+    b = off_ref[0] + pl.program_id(0)
     ab_t = scal_ref[0, b]
     ab_prev = scal_ref[1, b]
     s = scal_ref[2, b]
@@ -57,13 +62,21 @@ def _cfg_rowwise_kernel(scal_ref, x_ref, ec_ref, eu_ref, z_ref, out_ref, *,
 
 
 @functools.partial(jax.jit, static_argnames=("eta", "interpret"))
-def cfg_update_rowwise_3d(x, eps_c, eps_u, noise, scal, *, eta: float = 1.0,
-                          interpret: bool = False):
+def cfg_update_rowwise_3d(x, eps_c, eps_u, noise, off, scal, *,
+                          eta: float = 1.0, interpret: bool = False):
     """Ragged-wave variant: one grid row per batch element, so every row
-    reads its OWN (ᾱ_t, ᾱ_prev, s, active) from the (4, B) scalar-prefetch
+    reads its OWN (ᾱ_t, ᾱ_prev, s, active) from the (4, Bs) scalar-prefetch
     array — rows from different (guidance, steps) groups share one kernel
     launch.  Tensor args are pre-laid-out (B, R, 128), R % 8 == 0; a row
-    whose ``active`` slot is 0 passes through bit-unchanged."""
+    whose ``active`` slot is 0 passes through bit-unchanged.
+
+    ``off`` ((1,) int32 prefetch) is the row-window offset: tensor row b
+    reads scalar column ``off + b``, so ``scal`` may carry a whole wave's
+    per-row scalars (Bs >= off + B) while this launch updates only a
+    window of its rows.  Forward-looking substrate (ROADMAP multi-host):
+    today's compaction segments slice their tables host-side up front and
+    always call with ``off == 0``; a per-host window of a wave-resident
+    table is what needs a non-zero offset."""
     B, R, _ = x.shape
     block = min(BLOCK_ROWS, R)
     grid = (B, pl.cdiv(R, block))
@@ -71,16 +84,16 @@ def cfg_update_rowwise_3d(x, eps_c, eps_u, noise, scal, *, eta: float = 1.0,
     return pl.pallas_call(
         kern,
         grid_spec=pltpu.PrefetchScalarGridSpec(
-            num_scalar_prefetch=1,
+            num_scalar_prefetch=2,
             grid=grid,
             in_specs=[pl.BlockSpec((1, block, LANES),
-                                   lambda b, j, s: (b, j, 0))] * 4,
+                                   lambda b, j, o, s: (b, j, 0))] * 4,
             out_specs=pl.BlockSpec((1, block, LANES),
-                                   lambda b, j, s: (b, j, 0)),
+                                   lambda b, j, o, s: (b, j, 0)),
         ),
         out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
         interpret=interpret,
-    )(scal, x, eps_c, eps_u, noise)
+    )(off, scal, x, eps_c, eps_u, noise)
 
 
 @functools.partial(jax.jit, static_argnames=("s", "eta", "interpret"))

@@ -39,13 +39,22 @@ def cfg_update(x, eps_c, eps_u, s, ab_t, ab_prev, noise, eta: float = 1.0,
 
 
 def cfg_update_rowwise(x, eps_c, eps_u, s, ab_t, ab_prev, noise, active,
-                       eta: float = 1.0, *, interpret: bool | None = None):
+                       eta: float = 1.0, *, row_offset: int = 0,
+                       interpret: bool | None = None):
     """Per-row fused update for ragged waves: ``s``/``ab_t``/``ab_prev``/
-    ``active`` are (B,) vectors — every batch row carries its own guidance
+    ``active`` are (Bs,) vectors — every batch row carries its own guidance
     scale and schedule position, and ``active`` freezes rows whose right-
     aligned trajectory has not started yet.  Each image is flattened to
     its own (rows, 128) lane block so the kernel's per-row scalars apply
-    exactly to that image's elements."""
+    exactly to that image's elements.
+
+    Row-window path: the scalar vectors may be WIDER than ``x``'s batch —
+    tensor row b uses scalar slot ``row_offset + b`` — so a window of a
+    wave's rows can update against the wave-wide scalar table without
+    slicing a copy of it per step.  Substrate for the ROADMAP multi-host
+    direction (per-host windows of a sharded wave); the in-tree
+    compaction scheduler slices its segment tables host-side and always
+    uses the default ``row_offset=0``."""
     if interpret is None:
         interpret = _on_cpu()
     shape = x.shape
@@ -62,12 +71,17 @@ def cfg_update_rowwise(x, eps_c, eps_u, s, ab_t, ab_prev, noise, active,
         return a.reshape(B, rows, K.LANES)
 
     scal = jnp.stack([
-        jnp.asarray(ab_t, jnp.float32).reshape(B),
-        jnp.asarray(ab_prev, jnp.float32).reshape(B),
-        jnp.asarray(s, jnp.float32).reshape(B),
-        jnp.asarray(active).astype(jnp.float32).reshape(B),
+        jnp.asarray(ab_t, jnp.float32).reshape(-1),
+        jnp.asarray(ab_prev, jnp.float32).reshape(-1),
+        jnp.asarray(s, jnp.float32).reshape(-1),
+        jnp.asarray(active).astype(jnp.float32).reshape(-1),
     ])
+    if row_offset < 0 or scal.shape[1] < row_offset + B:
+        raise ValueError(
+            f"rowwise scalars span {scal.shape[1]} rows; window "
+            f"[{row_offset}, {row_offset + B}) is out of range")
+    off = jnp.asarray([row_offset], jnp.int32)
     out = K.cfg_update_rowwise_3d(flat(x), flat(eps_c), flat(eps_u),
-                                  flat(noise), scal, eta=float(eta),
+                                  flat(noise), off, scal, eta=float(eta),
                                   interpret=interpret)
     return out.reshape(B, -1)[:, :n].reshape(shape)

@@ -46,3 +46,17 @@ def cfg_update_rowwise(x, eps_c, eps_u, s, ab_t, ab_prev, noise, active,
     dir_coef = jnp.sqrt(jnp.maximum(1.0 - ab_prev - sigma ** 2, 0.0))
     out = jnp.sqrt(ab_prev) * x0 + dir_coef * eps + sigma * noise
     return jnp.where(r(active), out, x)
+
+
+def cfg_update_rowwise_windowed(x, eps_c, eps_u, s, ab_t, ab_prev, noise,
+                                active, row_offset: int = 0,
+                                eta: float = 1.0):
+    """Oracle for the segment-offset kernel path: the scalar vectors span
+    a wave's FULL row range and ``x`` holds only the window starting at
+    ``row_offset`` (a compaction segment's live rows) — tensor row b must
+    read scalar slot ``row_offset + b``.  Defined as the plain rowwise
+    update on the sliced window, which is exactly what the kernel's
+    offset indexing must reproduce."""
+    w = slice(row_offset, row_offset + x.shape[0])
+    return cfg_update_rowwise(x, eps_c, eps_u, s[w], ab_t[w], ab_prev[w],
+                              noise, active[w], eta)

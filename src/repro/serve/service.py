@@ -73,11 +73,20 @@ class SynthesisService:
                  key: jax.Array | int | None = None,
                  store: SynthesisStore | str | None = None,
                  ragged: bool | None = None,
+                 compaction: int | str | None = None,
                  store_max_bytes: int | None = None):
         """``ragged`` (opt-in) switches the engine to ragged waves: every
         classifier-free group shares one compiled per-row (guidance,
         steps) trajectory — see ``SynthesisEngine``.  Cache and store
         keys are unchanged, so a warm store serves both modes.
+
+        ``compaction`` (opt-in; implies ragged) additionally runs each
+        merged wave as iteration-compacted nested segments — frozen rows
+        stop riding the denoiser — with results still bit-identical to
+        the one-shot ragged wave: ``"full"``, ``"auto"``, or an
+        epoch-count cap K.  Opt-in only: ``"off"`` is IGNORED here so
+        wrapping a shared engine never forces its mode back — disable
+        directly via ``engine.set_compaction("off")``.
 
         ``store_max_bytes`` is the persistent store's size budget: after
         every drain the least-recently-used shards are evicted until the
@@ -87,8 +96,7 @@ class SynthesisService:
             store = SynthesisStore(store)
         if store is not None:
             engine.store = store
-        if ragged is not None:
-            engine.ragged = bool(ragged)
+        engine.opt_in(ragged=ragged, compaction=compaction)
         self.engine = engine
         self.store = engine.store
         self.store_max_bytes = store_max_bytes

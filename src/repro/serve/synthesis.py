@@ -50,6 +50,24 @@ packer interleaved groups, streamed arrivals, or padded the wave.
 Cache/store keys stay (encoding-hash, guidance, steps), so a ragged
 engine and a grouped engine share a warm store transparently.
 
+COMPACTION (``compaction="auto" | "full" | K``, implies ``ragged``): the
+one-shot ragged scan still runs every row through the wave's full step
+ceiling — frozen right-aligned rows ride the denoiser before they
+activate (the ``row_iters_scheduled`` vs ``row_iters_active`` gap).  A
+compacted wave instead runs one scan SEGMENT per activation epoch
+(``diffusion/guidance.py::plan_epochs``): rows sorted by start iteration,
+each segment's batch holding only the rows live by its end — nested
+waves that grow as rows activate — and segment outputs stitched back
+into request order.  Row noise stays keyed by request identity, so
+compacted output is BIT-IDENTICAL to ragged (and to any other packing);
+only the schedule changes.  ``"full"`` puts a boundary at every distinct
+start (scheduled == active == the true sum of per-row steps); an int
+caps the epoch count; ``"auto"`` keeps a boundary when the frozen
+row-iterations it saves outweigh ``compaction_compile_cost``, consulting
+the engine's shape-bucket cache of already-compiled segment geometries
+(``(carried, rows, iterations)``) so a split that reuses an executable
+from an earlier wave or drain is free.
+
 Requests stay on the queue until their results are produced: an
 exception mid-drain (a failing sampler, an interrupted process) leaves
 every unserved request queued for the next ``run``.
@@ -68,7 +86,9 @@ from jax.sharding import NamedSharding
 from jax.sharding import PartitionSpec as P
 
 from repro.configs.oscar import DiffusionConfig
-from repro.diffusion.sampler import (sample_cfg, sample_cfg_ragged,
+from repro.diffusion.guidance import plan_epochs
+from repro.diffusion.sampler import (sample_cfg, sample_cfg_compacted,
+                                     sample_cfg_ragged,
                                      sample_classifier_guided, sample_uncond)
 from repro.diffusion.schedule import NoiseSchedule
 
@@ -161,7 +181,9 @@ class SynthesisEngine:
                  *, image_size: int, channels: int = 3, wave_size: int = 128,
                  eta: float = 1.0, use_pallas: bool = False, mesh=None,
                  cache: bool = True, granule: int = 8, store=None,
-                 async_waves: bool = True, ragged: bool = False):
+                 async_waves: bool = True, ragged: bool = False,
+                 compaction: int | str | None = None,
+                 compaction_compile_cost: int = 256):
         self.dm_params, self.dc, self.sched = dm_params, dc, sched
         self.image_size, self.channels = image_size, channels
         self.eta, self.use_pallas = eta, use_pallas
@@ -180,14 +202,58 @@ class SynthesisEngine:
         self.store = store                       # SynthesisStore | None
         self.async_waves = async_waves
         self.ragged = ragged
+        self.compaction = None
+        self.compaction_compile_cost = compaction_compile_cost
+        if compaction is not None:
+            self.set_compaction(compaction)
         self._cache: dict[tuple, np.ndarray] = {}
         self._queue: list[SynthesisRequest] = []
         self._next_rid = 0
         self.traj_shapes: set = set()    # distinct compiled wave geometries
+        # shape-bucket cache of compiled compaction-segment geometries
+        # ((carried, rows, iterations) — the jitted executable's key);
+        # plan_epochs treats a split that lands in a bucket as
+        # compile-free, so recurring wave shapes compact deeper
+        self._segment_geoms: set[tuple] = set()
         self.stats = {"requests": 0, "waves": 0, "generated": 0,
                       "padded": 0, "cache_hits": 0, "store_hits": 0,
                       "streamed": 0, "merged_waves": 0, "compiled_shapes": 0,
-                      "row_iters": 0}
+                      "segments": 0,
+                      "row_iters_scheduled": 0, "row_iters_active": 0}
+
+    def set_compaction(self, compaction):
+        """Normalize + apply the compaction knob.  ``None`` leaves the
+        mode alone; ``"off"`` disables; ``"full"``/``"auto"``/int K
+        enable (compaction implies ragged waves — it schedules the ragged
+        per-row tables)."""
+        if compaction is None:
+            return
+        if compaction == "off":
+            self.compaction = None
+            return
+        if compaction not in ("full", "auto") and (
+                not isinstance(compaction, int) or isinstance(compaction, bool)
+                or compaction < 1):
+            raise ValueError(
+                f"compaction={compaction!r}: expected 'off', 'full', "
+                f"'auto', or an int K >= 1")
+        self.compaction = compaction
+        self.ragged = True
+
+    def opt_in(self, *, ragged: bool | None = None, compaction=None):
+        """Thread scheduling knobs from a run entry point, OPT-IN ONLY:
+        ``ragged=True`` switches this engine to ragged waves and
+        ``compaction`` (``"full"``/``"auto"``/int K) enables compacted
+        scheduling, but neither ever forces a shared engine's mode back —
+        ``ragged=False``/``None`` and ``compaction="off"``/``None`` leave
+        it alone here (disable directly via the attribute or
+        ``set_compaction``).  This is THE contract every runner and the
+        service constructor share; keep them on this helper."""
+        if ragged:
+            self.ragged = True
+        if compaction != "off":
+            self.set_compaction(compaction)
+        return self
 
     # -- submission -------------------------------------------------------
     def submit(self, encoding, category: int, count: int | None = None, *,
@@ -329,6 +395,54 @@ class SynthesisEngine:
         self.traj_shapes.add(sig)
         self.stats["compiled_shapes"] = len(self.traj_shapes)
 
+    def _row_keys(self, meta, key):
+        """Per-row noise keys: ``fold_in(fold_in(drain_key, rid),
+        row_index)`` — a function of the row's identity, NOT its wave
+        position or schedule, so ragged and compacted waves (and any
+        packing of either) draw identical streams for the same row."""
+        rids = jnp.asarray([m[2] for m in meta], jnp.uint32)
+        ridx = jnp.asarray([m[3] for m in meta], jnp.uint32)
+        return jax.vmap(
+            lambda r, i: jax.random.fold_in(jax.random.fold_in(key, r), i)
+        )(rids, ridx)
+
+    def _sample_wave_compacted(self, cond_rows, meta, key, max_steps: int):
+        """One merged classifier-free wave, iteration-compacted: rows
+        sorted by activation, one scan segment per epoch over only the
+        live rows, outputs stitched back to request order.  Bit-identical
+        to ``_sample_wave_ragged`` on the same rows (row noise is keyed
+        by request identity); only the schedule — and therefore
+        ``row_iters_scheduled`` — changes.  Returns
+        ``(x, scheduled_iters)`` — scheduled counts every device row,
+        padding included (it is device work); the caller accounts active
+        iters over the real rows only."""
+        g = np.array([m[0] for m in meta], np.float32)
+        steps = np.array([m[1] for m in meta], np.int32)
+        row_keys = self._row_keys(meta, key)
+        seg_granule = self.granule if self.mesh is not None else 1
+        plan = plan_epochs(steps, max_steps, compaction=self.compaction,
+                           granule=seg_granule, geoms=self._segment_geoms,
+                           compile_cost=self.compaction_compile_cost)
+        _, epochs = plan
+        prev = 0
+        for rows, begin, end in epochs:
+            # the full executable key — a jitted segment specializes on
+            # (carried, live, iterations), and plan_epochs' "auto" cost
+            # model checks exactly this tuple for free splits
+            self._note_shape(("cfg-seg", prev, rows, end - begin))
+            self._segment_geoms.add((prev, rows, end - begin))
+            prev = rows
+        self.stats["segments"] += len(epochs)
+        x = sample_cfg_compacted(self.dm_params, self.dc, self.sched,
+                                 self._shard(jnp.asarray(cond_rows)),
+                                 row_keys, jnp.asarray(g), steps,
+                                 max_steps=max_steps, plan=plan,
+                                 image_size=self.image_size,
+                                 channels=self.channels, eta=self.eta,
+                                 use_pallas=self.use_pallas)
+        scheduled = sum(rows * (end - begin) for rows, begin, end in epochs)
+        return x, scheduled
+
     def _sample_wave_ragged(self, cond_rows, meta, key, max_steps: int):
         """One merged classifier-free wave.  ``meta`` carries one
         (guidance, steps, rid, absolute_row_index) per row; row noise keys
@@ -338,11 +452,7 @@ class SynthesisEngine:
         alignment padding."""
         g = np.array([m[0] for m in meta], np.float32)
         steps = np.array([m[1] for m in meta], np.int32)
-        rids = jnp.asarray([m[2] for m in meta], jnp.uint32)
-        ridx = jnp.asarray([m[3] for m in meta], jnp.uint32)
-        row_keys = jax.vmap(
-            lambda r, i: jax.random.fold_in(jax.random.fold_in(key, r), i)
-        )(rids, ridx)
+        row_keys = self._row_keys(meta, key)
         self._note_shape(("cfg-ragged", len(cond_rows), max_steps))
         return sample_cfg_ragged(self.dm_params, self.dc, self.sched,
                                  self._shard(jnp.asarray(cond_rows)),
@@ -494,15 +604,29 @@ class SynthesisEngine:
             st.wave_i += 1
             if ragged:
                 smax = max(smax, *(m[1] for m in meta))
-                x = self._sample_wave_ragged(rows, meta, key, smax)
+                # honest device-work accounting, split two ways:
+                # ``row_iters_active`` is the useful work — each REAL
+                # row's own step count (padding duplicates are discarded,
+                # so they are never useful); ``row_iters_scheduled`` is
+                # what the device actually ran, padding included.
+                # One-shot ragged schedules every row for the wave's step
+                # ceiling (frozen right-aligned rows ride the denoiser —
+                # the price of one shared geometry); compaction closes
+                # the gap by skipping frozen epochs.
+                active_iters = int(sum(m[1] for m in meta[:got]))
+                if self.compaction is not None:
+                    x, sched_iters = \
+                        self._sample_wave_compacted(rows, meta, key, smax)
+                else:
+                    x = self._sample_wave_ragged(rows, meta, key, smax)
+                    sched_iters = target * smax
                 self.stats["merged_waves"] += 1
-                # honest device-work accounting: every row runs the wave's
-                # step ceiling — frozen (right-aligned) rows still ride
-                # through the denoiser, the price of one shared geometry
-                self.stats["row_iters"] += target * smax
+                self.stats["row_iters_scheduled"] += sched_iters
+                self.stats["row_iters_active"] += active_iters
             else:
                 x = self._sample_wave(q.head, rows, kw)
-                self.stats["row_iters"] += target * q.head.num_steps
+                self.stats["row_iters_scheduled"] += target * q.head.num_steps
+                self.stats["row_iters_active"] += got * q.head.num_steps
             self.stats["waves"] += 1
             self.stats["generated"] += target
             self.stats["padded"] += target - got

@@ -1,0 +1,468 @@
+"""Compute-skipping ragged scheduling: iteration-compacted nested waves.
+
+The contract under test is BIT-EXACTNESS UNDER ANY RE-PACKING: a row's
+output depends only on its own (encoding, guidance, steps, noise key), so
+running the ragged reverse process as compaction segments — any segment
+boundaries, any epoch count, any wave interleaving, any arrival trace —
+must reproduce the one-shot ragged scan (and the row's isolated uniform
+wave) bit for bit.  Because that property is quantified over schedules,
+the harness here is PROPERTY-BASED: fuzzed step tables, fuzzed epoch
+boundaries, and fuzzed arrival traces are all driven through the
+hypothesis shim against the one-shot oracle.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ImportError:            # pragma: no cover - CI installs it
+    from _hypothesis_fallback import given, settings, st
+
+from repro.configs.oscar import DiffusionConfig
+from repro.diffusion.dit import init_dit
+from repro.diffusion.guidance import plan_epochs
+from repro.diffusion.sampler import sample_cfg_compacted, sample_cfg_ragged
+from repro.diffusion.schedule import make_schedule
+from repro.serve import SynthesisEngine, SynthesisService, SynthesisStore
+
+DC = DiffusionConfig(d_model=32, num_layers=1, num_heads=2,
+                     sample_timesteps=3, train_timesteps=16)
+H = 8
+
+_DM = None
+
+
+def _dm():
+    """Module-memoised tiny DM (plain function, not a pytest fixture, so
+    @given tests can use it without tripping hypothesis' fixture health
+    check when the real library is installed)."""
+    global _DM
+    if _DM is None:
+        key = jax.random.PRNGKey(0)
+        params = init_dit(key, DC, H, 3)
+        leaves, treedef = jax.tree.flatten(params)
+        keys = jax.random.split(jax.random.PRNGKey(1), len(leaves))
+        params = jax.tree.unflatten(treedef, [
+            a + 0.05 * jax.random.normal(k, a.shape, a.dtype)
+            for a, k in zip(leaves, keys)])
+        _DM = params, make_schedule(DC.train_timesteps, DC.schedule)
+    return _DM
+
+
+def _row_keys(base, n):
+    return jax.vmap(lambda i: jax.random.fold_in(base, i))(
+        jnp.arange(n, dtype=jnp.uint32))
+
+
+def _enc(seed):
+    e = np.random.default_rng(seed).normal(size=(DC.cond_dim,))
+    return (e / np.linalg.norm(e)).astype(np.float32)
+
+
+# ---------------------------------------------------------------------------
+# plan_epochs: the epoch partition itself
+# ---------------------------------------------------------------------------
+
+def test_plan_epochs_full_covers_every_start():
+    steps = np.array([4, 2, 4, 1, 3], np.int32)
+    order, epochs = plan_epochs(steps, 4, compaction="full")
+    # sorted by activation: deepest rows first, stably
+    assert np.array_equal(steps[order], [4, 4, 3, 2, 1])
+    # one epoch per distinct start, contiguous, ending at max_steps
+    assert epochs == ((2, 0, 1), (3, 1, 2), (4, 2, 3), (5, 3, 4))
+    # full compaction schedules exactly the true sum of per-row steps
+    assert sum(n * (e - b) for n, b, e in epochs) == int(steps.sum())
+
+
+def test_plan_epochs_skips_dead_head_iterations():
+    """A step ceiling above the deepest row (the engine's running smax)
+    leaves leading iterations with NO live rows — the first epoch starts
+    at the earliest activation, not 0."""
+    _, epochs = plan_epochs(np.array([3, 2], np.int32), 8, compaction="full")
+    assert epochs[0][1] == 5                       # 8 - max(steps)
+    assert sum(n * (e - b) for n, b, e in epochs) == 5
+
+
+def test_plan_epochs_k_cap_merges_cheapest_boundary():
+    steps = np.array([8, 8, 8, 8, 7, 1], np.int32)
+    _, epochs = plan_epochs(steps, 8, compaction=2)
+    # merging the 1-row epoch at start=1 freezes 1 row-iter; merging the
+    # start=7 boundary would freeze 7 — the cap keeps the expensive one
+    assert len(epochs) == 2
+    assert epochs == ((5, 0, 7), (6, 7, 8))
+    _, one = plan_epochs(steps, 8, compaction=1)
+    assert one == ((6, 0, 8),)
+
+
+def test_plan_epochs_auto_cost_model_and_shape_buckets():
+    steps = np.array([6, 6, 6, 6, 2, 2], np.int32)
+    # splitting at start=4 saves 2 rows x 4 iters = 8 frozen row-iters
+    _, cheap = plan_epochs(steps, 6, compaction="auto", compile_cost=8)
+    assert len(cheap) == 2
+    _, dear = plan_epochs(steps, 6, compaction="auto", compile_cost=9)
+    assert len(dear) == 1
+    # ...unless the segment geometry is already compiled: a shape-bucket
+    # hit — keyed (carried, rows, length), the jitted executable's own
+    # specialization key — makes the split free
+    _, bucketed = plan_epochs(steps, 6, compaction="auto", compile_cost=9,
+                              geoms={(0, 4, 4)})
+    assert len(bucketed) == 2
+    # a bucket recorded under a different carried-row count is NOT the
+    # same executable, so it cannot make this split free
+    _, missed = plan_epochs(steps, 6, compaction="auto", compile_cost=9,
+                            geoms={(2, 4, 4)})
+    assert len(missed) == 1
+
+
+def test_plan_epochs_granule_rounds_rows_up():
+    steps = np.array([4, 4, 4, 2, 2], np.int32)
+    _, epochs = plan_epochs(steps, 4, compaction="full", granule=4)
+    # 3 live rows round up to 4: the 4th row is a future arrival admitted
+    # early (frozen by the active mask — values unchanged)
+    assert epochs == ((4, 0, 2), (5, 2, 4))
+
+
+def test_plan_epochs_rejects_bad_inputs():
+    with pytest.raises(ValueError, match="empty"):
+        plan_epochs(np.zeros((0,), np.int32), 4)
+    with pytest.raises(ValueError, match=">= 1"):
+        plan_epochs(np.array([2, 0]), 4)
+    with pytest.raises(ValueError, match="max_steps"):
+        plan_epochs(np.array([5]), 4)
+    with pytest.raises(ValueError, match="compaction"):
+        plan_epochs(np.array([2, 1]), 4, compaction="fastest")
+    with pytest.raises(ValueError, match="compaction"):
+        # bool is an int subclass: True must not be read as K=1
+        plan_epochs(np.array([2, 1]), 4, compaction=True)
+
+
+@given(seed=st.integers(0, 10), smax_extra=st.integers(0, 3))
+@settings(max_examples=20, deadline=None)
+def test_plan_epochs_invariants_fuzzed(seed, smax_extra):
+    """Any plan — full, capped, auto — is a valid nested-wave schedule:
+    epochs tile [first start, max_steps), row counts are non-decreasing
+    prefixes ending at B, and every row's active iterations are covered
+    by epochs that include it."""
+    rng = np.random.default_rng(seed)
+    B = int(rng.integers(1, 9))
+    smax0 = int(rng.integers(1, 9))
+    steps = rng.integers(1, smax0 + 1, B).astype(np.int32)
+    S = int(steps.max()) + smax_extra
+    for compaction in ("full", "auto", int(rng.integers(1, 5))):
+        order, epochs = plan_epochs(steps, S, compaction=compaction,
+                                    compile_cost=int(rng.integers(0, 20)))
+        ss = (S - steps)[order]
+        assert np.all(np.diff(ss) >= 0)            # activation-sorted
+        assert epochs[0][1] == int(ss[0])          # dead head skipped
+        assert epochs[-1][2] == S
+        assert epochs[-1][0] == B
+        prev_rows, prev_end = 0, epochs[0][1]
+        for rows, begin, end in epochs:
+            assert begin == prev_end and end > begin
+            assert rows >= prev_rows
+            # every row live in this epoch is present in its batch
+            assert rows >= np.searchsorted(ss, end, side="left")
+            prev_rows, prev_end = rows, end
+
+
+# ---------------------------------------------------------------------------
+# sampler core: compacted vs one-shot ragged vs isolated uniform waves
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("use_pallas", [False, True])
+@pytest.mark.parametrize("compaction", ["full", "auto", 2])
+def test_compacted_bit_exact_vs_ragged_and_isolated(compaction, use_pallas):
+    """The acceptance parity: every compaction of a mixed wave reproduces
+    the one-shot ragged scan bit for bit, and each (guidance, steps)
+    group inside it matches the same rows sampled alone as a uniform
+    wave — nested segments are invisible to row values."""
+    params, sched = _dm()
+    B = 6
+    y = jax.random.normal(jax.random.PRNGKey(1), (B, DC.cond_dim))
+    rk = _row_keys(jax.random.PRNGKey(7), B)
+    g = jnp.array([7.5, 7.5, 1.5, 1.5, 4.0, 4.0], jnp.float32)
+    steps = np.array([3, 3, 2, 2, 3, 1], np.int32)
+    ragged = sample_cfg_ragged(params, DC, sched, y, rk, g, steps,
+                               image_size=H, use_pallas=use_pallas)
+    comp = sample_cfg_compacted(params, DC, sched, y, rk, g, steps,
+                                image_size=H, compaction=compaction,
+                                use_pallas=use_pallas)
+    assert np.array_equal(np.asarray(ragged), np.asarray(comp))
+    for idx in ([0, 1], [2, 3], [4], [5]):
+        i = np.array(idx)
+        iso = sample_cfg_ragged(params, DC, sched, y[i], rk[i], g[i],
+                                steps[i], image_size=H,
+                                use_pallas=use_pallas)
+        assert np.array_equal(np.asarray(comp[i]), np.asarray(iso))
+
+
+def test_compacted_rejects_malformed_caller_plan():
+    """A caller-supplied ``plan`` that stops early, leaves a gap, or
+    shrinks its row counts must be refused — a truncated scan would
+    silently return half-denoised rows."""
+    params, sched = _dm()
+    B = 3
+    y = jax.random.normal(jax.random.PRNGKey(3), (B, DC.cond_dim))
+    rk = _row_keys(jax.random.PRNGKey(9), B)
+    g = jnp.full((B,), 7.5)
+    steps = np.array([3, 3, 2], np.int32)
+    order = np.arange(B)
+    bad_plans = [
+        (order, ()),                           # empty
+        (order, ((B, 0, 2),)),                 # stops before S=3
+        (order, ((2, 0, 1), (B, 2, 3))),       # gap between segments
+        (order, ((B, 0, 1), (2, 1, 3))),       # row count shrinks
+        (order, ((B, 0, 0), (B, 0, 3))),       # empty segment
+        (order, ((B, -1, 3),)),                # negative begin
+        (order, ((B, 2, 3),)),                 # skips active iterations:
+                                               # 3-step rows start at 0
+        (order, ((1, 0, 2), (B, 2, 3))),       # first epoch excludes a
+                                               # row already active there
+    ]
+    for plan in bad_plans:
+        with pytest.raises(ValueError,
+                           match="epoch|rows|iteration"):
+            sample_cfg_compacted(params, DC, sched, y, rk, g, steps,
+                                 plan=plan, image_size=H)
+    # the well-formed plan (what plan_epochs emits) still samples
+    good = plan_epochs(steps, 3, compaction="full")
+    out = sample_cfg_compacted(params, DC, sched, y, rk, g, steps,
+                               plan=good, image_size=H)
+    assert out.shape == (B, H, H, 3)
+
+
+def test_compacted_independent_of_step_ceiling():
+    """A higher step ceiling only lengthens the skipped dead head —
+    outputs are bit-identical, so the engine's running smax never
+    invalidates a row."""
+    params, sched = _dm()
+    y = jax.random.normal(jax.random.PRNGKey(2), (3, DC.cond_dim))
+    rk = _row_keys(jax.random.PRNGKey(8), 3)
+    g = jnp.full((3,), 7.5)
+    steps = np.array([3, 2, 1], np.int32)
+    a = sample_cfg_compacted(params, DC, sched, y, rk, g, steps,
+                             image_size=H)
+    b = sample_cfg_compacted(params, DC, sched, y, rk, g, steps,
+                             max_steps=6, image_size=H)
+    assert np.array_equal(np.asarray(a), np.asarray(b))
+
+
+@given(seed=st.integers(0, 8), compaction=st.sampled_from(["full", "auto",
+                                                           2, 3]))
+@settings(max_examples=6, deadline=None)
+def test_fuzzed_schedules_and_boundaries_bit_exact(seed, compaction):
+    """The fuzzed parity harness: random per-row (guidance, steps)
+    tables, random step ceilings, random epoch boundaries (via the
+    compaction modes AND a randomly merged custom plan) — all must
+    reproduce the one-shot ragged oracle bit for bit."""
+    params, sched = _dm()
+    rng = np.random.default_rng(seed)
+    B = int(rng.integers(2, 7))
+    steps = rng.integers(1, 4, B).astype(np.int32)
+    S = int(steps.max()) + int(rng.integers(0, 3))
+    g = jnp.asarray(rng.choice([1.5, 4.0, 7.5], B).astype(np.float32))
+    y = jax.random.normal(jax.random.PRNGKey(seed), (B, DC.cond_dim))
+    rk = _row_keys(jax.random.PRNGKey(100 + seed), B)
+    oracle = np.asarray(sample_cfg_ragged(params, DC, sched, y, rk, g,
+                                          steps, max_steps=S, image_size=H))
+    comp = sample_cfg_compacted(params, DC, sched, y, rk, g, steps,
+                                max_steps=S, image_size=H,
+                                compaction=compaction,
+                                compile_cost=int(rng.integers(0, 16)))
+    assert np.array_equal(oracle, np.asarray(comp))
+    # a custom plan with a random subset of the full boundaries merged —
+    # compaction boundaries anywhere must not leak into row values
+    order, full = plan_epochs(steps, S, compaction="full")
+    keep = [e for i, e in enumerate(full)
+            if i == 0 or rng.random() < 0.5]
+    epochs = tuple((keep[i + 1][0] if i + 1 < len(keep) else full[-1][0],
+                    b, keep[i + 1][1] if i + 1 < len(keep) else S)
+                   for i, (_, b, _) in enumerate(keep))
+    custom = sample_cfg_compacted(params, DC, sched, y, rk, g, steps,
+                                  max_steps=S, image_size=H,
+                                  plan=(order, epochs))
+    assert np.array_equal(oracle, np.asarray(custom))
+
+
+# ---------------------------------------------------------------------------
+# engine + service: packing invariance under fuzzed traces
+# ---------------------------------------------------------------------------
+
+def _engine(**kw):
+    params, sched = _dm()
+    kw.setdefault("image_size", H)
+    kw.setdefault("wave_size", 8)
+    return SynthesisEngine(params, DC, sched, **kw)
+
+
+_REQS = [(_enc(40), 0, 3, 1.5, 3), (_enc(41), 1, 2, 7.5, 2),
+         (_enc(42), 2, 4, 7.5, 3), (_enc(43), 0, 2, 4.0, 1),
+         (_enc(44), 1, 3, 1.5, 2)]
+
+
+def _run_trace(eng, key, split, wave_order_seed=None):
+    """Submit _REQS with the first ``split`` up front and the rest
+    streamed in one-per-poll mid-drain; returns rows per request in
+    submission order (the submission SEQUENCE is fixed — request identity
+    keys the noise — while the arrival trace varies)."""
+    svc = SynthesisService(eng, key=0)
+    futs = [svc.submit(e, c, n, guidance=g, num_steps=s)
+            for e, c, n, g, s in _REQS[:split]]
+    trace = list(_REQS[split:])
+
+    def poll():
+        if not trace:
+            return False
+        e, c, n, g, s = trace.pop(0)
+        futs.append(svc.submit(e, c, n, guidance=g, num_steps=s))
+        return True
+
+    svc.drain(key, poll=poll)
+    return [f.result() for f in futs]
+
+
+@given(seed=st.integers(0, 6))
+@settings(max_examples=4, deadline=None)
+def test_fuzzed_packing_invariance_across_modes_and_traces(seed):
+    """Acceptance: random arrival traces (upfront/streamed split, wave
+    sizes) × scheduling modes (one-shot ragged; full/auto/capped
+    compaction) all produce BIT-IDENTICAL D_syn for every request — the
+    schedule, the packing, and mid-drain admissions are invisible."""
+    rng = np.random.default_rng(seed)
+    key = jax.random.PRNGKey(3)
+    baseline = _run_trace(_engine(ragged=True), key, split=len(_REQS))
+    for _ in range(2):
+        split = int(rng.integers(1, len(_REQS) + 1))
+        wave = int(rng.choice([4, 8, 16]))
+        compaction = rng.choice(["off", "full", "auto", "2"])
+        compaction = int(compaction) if compaction == "2" else compaction
+        eng = _engine(ragged=True, wave_size=wave, compaction=compaction,
+                      compaction_compile_cost=int(rng.integers(0, 12)))
+        outs = _run_trace(eng, key, split=split)
+        for a, b in zip(baseline, outs):
+            assert np.array_equal(a, b)
+
+
+def test_compacted_store_and_cache_keys_match_all_modes(tmp_path):
+    """grouped, ragged, and compacted engines must agree on cache keys
+    and persistent store identity — same manifest slugs, same entry keys
+    — so any of them can serve a store the others warmed.  (Row VALUES
+    are only comparable between ragged and compacted, whose noise is
+    request-keyed; grouped waves draw batch noise.)"""
+    import json
+    slugs, cache_keys = [], []
+    for mode, kw in [("grouped", dict()), ("ragged", dict(ragged=True)),
+                     ("compacted", dict(compaction="full"))]:
+        store = SynthesisStore(tmp_path / mode)
+        eng = _engine(store=store, **kw)
+        for e, c, n, g, s in _REQS:
+            eng.submit(e, c, n, guidance=g, num_steps=s)
+        eng.run(jax.random.PRNGKey(4))
+        man = json.loads((tmp_path / mode / "manifest.json").read_text())
+        slugs.append(sorted(man["entries"].keys()))
+        cache_keys.append(sorted(eng._cache.keys()))
+    assert slugs[0] == slugs[1] == slugs[2]
+    assert cache_keys[0] == cache_keys[1] == cache_keys[2]
+    # and a compacted engine serves a ragged-warmed store with zero
+    # sampler calls, bit-identically
+    params, sched = _dm()
+    warm = _engine(ragged=True, store=SynthesisStore(tmp_path / "shared"))
+    rids = [warm.submit(e, c, n, guidance=g, num_steps=s)
+            for e, c, n, g, s in _REQS]
+    out_warm = warm.run(jax.random.PRNGKey(5))
+    cold = _engine(compaction="full",
+                   store=SynthesisStore(tmp_path / "shared"))
+    rids2 = [cold.submit(e, c, n, guidance=g, num_steps=s)
+             for e, c, n, g, s in _REQS]
+    out_cold = cold.run(jax.random.PRNGKey(99))
+    assert cold.stats["generated"] == 0
+    for a, b in zip(rids, rids2):
+        assert np.array_equal(out_warm[a], out_cold[b])
+
+
+def test_compacted_engine_stats_split_scheduled_vs_active():
+    """The honest accounting fix: one-shot ragged reports the frozen
+    riding in scheduled-vs-active; full compaction closes the gap to the
+    true sum of per-row steps."""
+    subs = [(_enc(50), 0, 4, 7.5, 3), (_enc(51), 1, 4, 1.5, 1)]
+    true_sum = sum(n * s for _, _, n, _, s in subs)
+    rag = _engine(ragged=True)
+    for e, c, n, g, s in subs:
+        rag.submit(e, c, n, guidance=g, num_steps=s)
+    rag.run(jax.random.PRNGKey(6))
+    assert rag.stats["row_iters_active"] == true_sum
+    assert rag.stats["row_iters_scheduled"] == 8 * 3   # wave rows x smax
+    cmp_ = _engine(compaction="full")
+    for e, c, n, g, s in subs:
+        cmp_.submit(e, c, n, guidance=g, num_steps=s)
+    cmp_.run(jax.random.PRNGKey(6))
+    assert (cmp_.stats["row_iters_scheduled"]
+            == cmp_.stats["row_iters_active"] == true_sum)
+    assert cmp_.stats["segments"] == 2
+    # grouped mode: no freezing, but alignment padding is still device
+    # work — active counts only the real rows' own steps, so every mode
+    # agrees on the workload's useful work
+    grp = _engine()
+    for e, c, n, g, s in subs:
+        grp.submit(e, c, n, guidance=g, num_steps=s)
+    grp.run(jax.random.PRNGKey(6))
+    assert grp.stats["row_iters_active"] == true_sum
+    assert (grp.stats["row_iters_scheduled"] - true_sum
+            == 4 * 3 + 4 * 1)                   # padded rows x group steps
+
+
+def test_segment_shape_bucket_cache_reused_across_drains():
+    """The second drain of an identical workload re-plans against the
+    shape-bucket cache: same geometries, no new compiled shapes."""
+    eng = _engine(compaction="auto", compaction_compile_cost=0)
+    for e, c, n, g, s in _REQS:
+        eng.submit(e, c, n, guidance=g, num_steps=s)
+    eng.run(jax.random.PRNGKey(7))
+    geoms = set(eng._segment_geoms)
+    shapes = eng.stats["compiled_shapes"]
+    eng2 = _engine(compaction="auto", compaction_compile_cost=0)
+    for e, c, n, g, s in _REQS:
+        eng2.submit(e, c, n, guidance=g, num_steps=s)
+    eng2.run(jax.random.PRNGKey(8))
+    assert eng2._segment_geoms == geoms
+    assert eng2.stats["compiled_shapes"] == shapes
+
+
+def test_compaction_knob_validation_and_threading():
+    eng = _engine()
+    assert eng.compaction is None and not eng.ragged
+    eng.set_compaction("full")
+    assert eng.compaction == "full" and eng.ragged       # implies ragged
+    eng.set_compaction(None)
+    assert eng.compaction == "full"                      # None = leave alone
+    eng.set_compaction("off")
+    assert eng.compaction is None
+    with pytest.raises(ValueError, match="compaction"):
+        eng.set_compaction(0)
+    with pytest.raises(ValueError, match="compaction"):
+        _engine(compaction="fastest")
+    svc_eng = _engine()
+    SynthesisService(svc_eng, compaction=3)
+    assert svc_eng.compaction == 3 and svc_eng.ragged
+
+
+def test_run_paths_thread_compaction():
+    from repro.core.oscar import synthesize
+    params, sched = _dm()
+    enc = np.stack([np.stack([_enc(60 + c) for c in range(3)])])
+    present = np.ones((1, 3), bool)
+    eng = _engine()
+    sx, _ = synthesize(jax.random.PRNGKey(0), params, DC, sched, enc,
+                       present, 2, image_size=H, engine=eng,
+                       compaction="full")
+    assert eng.compaction == "full" and eng.ragged
+    assert eng.stats["segments"] > 0
+    assert sx.shape == (6, H, H, 3)
+    # opt-in only: a later caller passing "off" must not force the shared
+    # engine's compaction back (disable directly via set_compaction)
+    synthesize(jax.random.PRNGKey(1), params, DC, sched, enc, present, 2,
+               image_size=H, engine=eng, compaction="off")
+    assert eng.compaction == "full"

@@ -78,6 +78,31 @@ def test_respaced_ts_rejects_more_steps_than_T():
         _respaced_ts(16, 20)
 
 
+@given(T=st.integers(2, 1000), frac=st.floats(0.001, 1.0))
+@settings(max_examples=40, deadline=None)
+def test_respaced_ts_invariants_fuzzed(T, frac):
+    """Property: EVERY admissible (T, num_steps) yields a strictly
+    decreasing trajectory from T-1 hitting 0 — the invariant the ragged
+    tables (and therefore every compaction segment) inherit per row."""
+    S = max(1, min(T, round(frac * T)))
+    ts = np.asarray(_respaced_ts(T, S))
+    assert ts.shape == (S,)
+    assert int(ts[0]) == T - 1
+    assert len(np.unique(ts)) == S                 # strictly decreasing
+    if S > 1:
+        assert bool(np.all(np.diff(ts) <= -1))
+        assert int(ts[-1]) == 0
+    assert bool(np.all((ts >= 0) & (ts < T)))
+
+
+@given(T=st.integers(2, 64), extra=st.integers(1, 16))
+@settings(max_examples=20, deadline=None)
+def test_respaced_ts_rejects_oversubscription_fuzzed(T, extra):
+    """Property: every num_steps > T refuses, at any scale."""
+    with pytest.raises(ValueError, match="cannot"):
+        _respaced_ts(T, T + extra)
+
+
 def test_dedupe_envelope_on_crafted_collisions():
     from repro.diffusion.guidance import _strictly_decreasing
     ts = jnp.array([15, 14, 13, 13, 12, 5, 5, 5, 1, 0])

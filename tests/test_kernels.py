@@ -166,6 +166,50 @@ def test_cfg_fuse_rowwise_inactive_rows_frozen(rng_key):
             assert jnp.array_equal(ref[b], x[b])
 
 
+@pytest.mark.parametrize("off,B,Bs", [(0, 4, 4), (0, 3, 8), (2, 3, 8),
+                                      (5, 3, 8), (3, 5, 8)])
+def test_cfg_fuse_rowwise_segment_offset(rng_key, off, B, Bs):
+    """Segment-offset scalar-prefetch path: the per-row scalar table
+    spans a full wave (Bs rows) while the launch updates a window of B
+    tensor rows starting at ``row_offset`` — tensor row b must read
+    scalar slot off+b, exactly the windowed oracle."""
+    ks = jax.random.split(rng_key, 4)
+    shape = (B, 8, 8, 3)
+    x, ec, eu, z = (jax.random.normal(k, shape) for k in ks)
+    s = jnp.linspace(0.0, 7.5, Bs)
+    ab_t = jnp.linspace(0.05, 0.9, Bs)
+    ab_prev = jnp.linspace(0.11, 0.95, Bs)
+    act = (jnp.arange(Bs) % 2 == 0).astype(jnp.float32)
+    out = cfg_ops.cfg_update_rowwise(x, ec, eu, s, ab_t, ab_prev, z, act,
+                                     row_offset=off)
+    ref = cfg_ref.cfg_update_rowwise_windowed(x, ec, eu, s, ab_t, ab_prev,
+                                              z, act, row_offset=off)
+    assert out.shape == shape
+    assert jnp.max(jnp.abs(out - ref)) < 1e-5
+    # and the window is bit-equal to slicing the scalars up front — the
+    # offset only changes addressing, never arithmetic
+    w = slice(off, off + B)
+    sliced = cfg_ops.cfg_update_rowwise(x, ec, eu, s[w], ab_t[w],
+                                        ab_prev[w], z, act[w])
+    assert jnp.array_equal(out, sliced)
+
+
+def test_cfg_fuse_rowwise_offset_out_of_range_refuses(rng_key):
+    """A window past the scalar table's rows must refuse loudly — serving
+    row b with another row's (ᾱ, s) would corrupt a whole trajectory."""
+    ks = jax.random.split(rng_key, 4)
+    x, ec, eu, z = (jax.random.normal(k, (4, 8, 8, 3)) for k in ks)
+    v = jnp.linspace(0.1, 0.9, 6)
+    with pytest.raises(ValueError, match="out of range"):
+        cfg_ops.cfg_update_rowwise(x, ec, eu, v, v, v, z, jnp.ones((6,)),
+                                   row_offset=3)
+    # negative offsets would silently wrap the scalar reads on CPU (and
+    # are out-of-bounds UB on TPU) — refuse them the same way
+    with pytest.raises(ValueError, match="out of range"):
+        cfg_ops.cfg_update_rowwise(x, ec, eu, v, v, v, z, jnp.ones((6,)),
+                                   row_offset=-2)
+
+
 def test_cfg_fuse_rowwise_bf16(rng_key):
     """bf16 rows: f32 accumulation, one rounding on store — within one
     bf16 ulp of the f32 oracle, dtype preserved."""

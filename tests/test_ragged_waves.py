@@ -13,6 +13,12 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ImportError:            # pragma: no cover - CI installs it
+    from _hypothesis_fallback import given, settings, st
+
 from repro.configs.oscar import DiffusionConfig
 from repro.diffusion.dit import init_dit
 from repro.diffusion.guidance import ragged_tables, respaced_ts
@@ -80,6 +86,65 @@ def test_ragged_tables_reject_undersized_ceiling(dm):
     _, sched = dm
     with pytest.raises(ValueError, match="max_steps"):
         ragged_tables(sched, np.array([4, 6]), 5)
+
+
+@given(seed=st.integers(0, 12), extra=st.integers(0, 4))
+@settings(max_examples=25, deadline=None)
+def test_ragged_tables_invariants_fuzzed(seed, extra):
+    """Property: for ANY per-row step vector and ceiling, every row's
+    table slice is its own strictly-decreasing ``respaced_ts`` verbatim,
+    right-aligned, with the frozen prefix holding the first real value —
+    the per-row contract ragged AND compacted scheduling both consume."""
+    from repro.diffusion.schedule import make_schedule
+    rng = np.random.default_rng(seed)
+    T = int(rng.integers(4, 33))
+    sched = make_schedule(T, "cosine")
+    B = int(rng.integers(1, 8))
+    steps = rng.integers(1, T + 1, B).astype(np.int32)
+    S = int(steps.max()) + extra
+    ts, ab_t, ab_prev, jloc = ragged_tables(sched, steps, S)
+    alpha_bar = np.asarray(sched.alpha_bar)
+    for b, k in enumerate(steps):
+        own = np.asarray(respaced_ts(T, int(k)))
+        assert bool(np.all(np.diff(own) <= -1)) if k > 1 else True
+        assert np.array_equal(ts[b, S - k:], own)        # verbatim slice
+        assert np.array_equal(jloc[b], np.arange(S) - (S - k))
+        assert np.array_equal(ab_t[b, S - k:], alpha_bar[own])
+        assert ab_prev[b, -1] == 1.0
+        # frozen prefix repeats the first real slot (finite masked lanes)
+        assert bool(np.all(ts[b, :S - k] == own[0]))
+        assert bool(np.all(np.isfinite(ab_t[b])) and np.all(ab_t[b] > 0))
+
+
+@given(k=st.integers(1, 16), B=st.integers(1, 6))
+@settings(max_examples=20, deadline=None)
+def test_ragged_tables_agreeing_rows_match_uniform_fuzzed(k, B, dm):
+    """Property: when every row agrees on its step count (and the ceiling
+    is tight) the ragged tables ARE the uniform trajectory broadcast over
+    rows — grouped and ragged waves see identical schedules."""
+    _, sched = dm
+    k = min(k, sched.T)
+    steps = np.full((B,), k, np.int32)
+    ts, ab_t, ab_prev, jloc = ragged_tables(sched, steps, k)
+    own = np.asarray(respaced_ts(sched.T, k))
+    ab = np.asarray(sched.alpha_bar)[own]
+    abp = np.concatenate([ab[1:], np.ones((1,), np.float32)])
+    assert np.array_equal(ts, np.broadcast_to(own, (B, k)))
+    assert np.array_equal(ab_t, np.broadcast_to(ab, (B, k)))
+    assert np.array_equal(ab_prev, np.broadcast_to(abp, (B, k)))
+    assert bool(np.all(jloc >= 0))                 # no frozen iterations
+
+
+@given(extra=st.integers(1, 8))
+@settings(max_examples=10, deadline=None)
+def test_ragged_tables_reject_oversubscribed_rows_fuzzed(extra, dm):
+    """Property: a row demanding more steps than the ceiling (ultimately
+    more than T distinct timesteps) refuses at any scale."""
+    _, sched = dm
+    with pytest.raises(ValueError, match="max_steps"):
+        ragged_tables(sched, np.array([2, 2 + extra]), 2)
+    with pytest.raises(ValueError, match="cannot"):
+        respaced_ts(sched.T, sched.T + extra)
 
 
 # ---------------------------------------------------------------------------

@@ -413,6 +413,106 @@ def test_store_evict_with_dirty_entries_keeps_manifest_consistent(tmp_path):
     assert cold.get(kc) is not None          # the freshest entry survived
 
 
+def test_store_evict_crash_between_manifest_and_unlink(dm, tmp_path,
+                                                       monkeypatch):
+    """Crash ordering: evict() rewrites the manifest BEFORE unlinking
+    shard files.  Simulate dying in that window — every unlink fails
+    after the manifest rename landed — and reopen cold: the store must
+    never reference a missing shard (victims left the manifest first)
+    and never lose a live entry (survivors load bit-exactly); the only
+    residue is orphaned shard files."""
+    from pathlib import Path
+    store_dir = tmp_path / "dsyn"
+    svc, outs = _fill_store(dm, store_dir, [150, 151, 152, 153])
+    store = svc.store
+    per = 2 * H * H * 3 * 4
+    live = {s: dict(e) for s, e in store._manifest["entries"].items()}
+
+    real_unlink = Path.unlink
+
+    def dying_unlink(self, *a, **kw):
+        if self.suffix == ".npz":
+            raise RuntimeError("crashed between manifest write and unlink")
+        return real_unlink(self, *a, **kw)
+
+    monkeypatch.setattr(Path, "unlink", dying_unlink)
+    with pytest.raises(RuntimeError, match="crashed"):
+        store.evict(2 * per)
+    monkeypatch.undo()
+
+    cold = SynthesisStore(store_dir)
+    assert len(cold) == 2                       # victims left the manifest
+    for slug, ent in cold._manifest["entries"].items():
+        assert (store_dir / ent["file"]).exists()
+        key = (ent["key"]["encoding_sha1"], ent["key"]["guidance"],
+               ent["key"]["steps"])
+        rows = cold.get(key)                    # every live entry loads
+        assert rows is not None and len(rows) == ent["count"]
+    # orphaned shard files remain (all 4 on disk) but none is referenced
+    # by the manifest — harmless residue, re-synthesis never needed for
+    # the survivors
+    assert len(list((store_dir / "shards").glob("*.npz"))) == 4
+    evicted = set(live) - set(cold._manifest["entries"])
+    assert len(evicted) == 2
+
+
+def test_store_evict_crash_partway_through_unlinks(dm, tmp_path,
+                                                   monkeypatch):
+    """Dying after SOME victim shards are unlinked is equally safe: the
+    manifest already dropped every victim, so a dangling entry can never
+    point at a deleted file."""
+    from pathlib import Path
+    store_dir = tmp_path / "dsyn"
+    svc, _ = _fill_store(dm, store_dir, [160, 161, 162, 163])
+    store = svc.store
+
+    real_unlink = Path.unlink
+    unlinked = []
+
+    def dying_unlink(self, *a, **kw):
+        if self.suffix == ".npz":
+            if unlinked:
+                raise RuntimeError("crashed mid-unlink")
+            unlinked.append(self.name)
+        return real_unlink(self, *a, **kw)
+
+    monkeypatch.setattr(Path, "unlink", dying_unlink)
+    with pytest.raises(RuntimeError, match="mid-unlink"):
+        store.evict(0)                          # evict everything
+    monkeypatch.undo()
+
+    cold = SynthesisStore(store_dir)
+    assert len(cold) == 0                       # manifest emptied first
+    # and the store still works: a new put/flush heals around the orphans
+    svc2, outs2 = _fill_store(dm, store_dir, [164], key=23)
+    cold2 = SynthesisStore(store_dir)
+    assert len(cold2) == 1
+    assert np.array_equal(cold2.get(_key_for(dm, 164)), outs2[164])
+
+
+def test_store_evict_crash_before_manifest_write_loses_nothing(dm, tmp_path,
+                                                               monkeypatch):
+    """Dying BEFORE the manifest rename (while victims were only chosen)
+    must leave the store exactly as it was: same entries, every shard
+    served."""
+    store_dir = tmp_path / "dsyn"
+    svc, outs = _fill_store(dm, store_dir, [170, 171, 172])
+    store = svc.store
+
+    def dying_write():
+        raise RuntimeError("crashed before manifest write")
+
+    monkeypatch.setattr(store, "_write_manifest", dying_write)
+    with pytest.raises(RuntimeError, match="before manifest"):
+        store.evict(0)
+    monkeypatch.undo()
+
+    cold = SynthesisStore(store_dir)
+    assert len(cold) == 3
+    for s in (170, 171, 172):
+        assert np.array_equal(cold.get(_key_for(dm, s)), outs[s])
+
+
 def test_service_store_budget_evicts_after_drain(dm, tmp_path):
     """store_max_bytes on the service keeps the persistent store under
     budget across drains — a long-lived server stops growing."""
