@@ -34,9 +34,18 @@ categories, k samples per (client, category) encoding.  Five runs:
   of per-row steps with 0 padded rows, and D_syn must be bit-identical
   to the one-shot ragged run — both ASSERTED, gating CI's smoke run.
 
+* ``multihost``    — the same mixed workload drained over ``--hosts``
+  SIMULATED HOSTS through the topology/placement layer
+  (``serve/topology.py``): per-host ingress queues, contiguous per-host
+  wave windows against one wave-resident scalar table (the segment-
+  offset ``cfg_fuse`` path).  ASSERTS D_syn is bit-identical to the
+  single-host drain (placement invariance) and that full compaction
+  schedules exactly its active row-iterations PER HOST — both gating
+  CI's smoke run.
+
 Writes ``results/BENCH_synthesis.json`` via the shared harness
-(``--mode ragged`` / ``--mode compacted`` re-run only the mixed-workload
-comparison and merge it into an existing results file).
+(``--mode ragged`` / ``--mode compacted`` / ``--mode multihost`` re-run
+only their comparison and merge it into an existing results file).
 """
 from __future__ import annotations
 
@@ -133,12 +142,7 @@ def _bench_mixed(params, dc, sched, enc, *, steps, k, compacted: bool):
     another step budget.  With ``compacted`` the same workload also runs
     through the iteration-compacted scheduler (``compaction="full"``) and
     its outputs are asserted BIT-IDENTICAL to the one-shot ragged run."""
-    R, C = enc.shape[:2]
-    half = max(steps // 2, 2)
-    combos = [(1.5, steps), (4.0, steps), (7.5, half), (1.5, half)]
-    reqs = [(r, c, *combos[i % len(combos)])
-            for i, (r, c) in enumerate((r, c) for r in range(R)
-                                       for c in range(C))]
+    reqs = _mixed_reqs(enc, steps)
     true_row_iters = sum(k * s for _, _, _, s in reqs)
 
     def run_mode(ragged, compaction=None):
@@ -154,7 +158,7 @@ def _bench_mixed(params, dc, sched, enc, *, steps, k, compacted: bool):
 
     t_grp, st_grp, _ = run_mode(False)
     t_rag, st_rag, out_rag = run_mode(True)
-    res = {"combos": len(combos),
+    res = {"combos": len({(g, s) for _, _, g, s in reqs}),
            "grouped_s": t_grp, "ragged_s": t_rag,
            "grouped_padded": st_grp["padded"],
            "ragged_padded": st_rag["padded"],
@@ -215,6 +219,79 @@ def _bench_mixed(params, dc, sched, enc, *, steps, k, compacted: bool):
     return res, comp
 
 
+def _mixed_reqs(enc, steps):
+    """The mixed (guidance, steps) request set every comparison serves:
+    R×C requests round-robin over four (guidance, steps) combos."""
+    R, C = enc.shape[:2]
+    half = max(steps // 2, 2)
+    combos = [(1.5, steps), (4.0, steps), (7.5, half), (1.5, half)]
+    return [(r, c, *combos[i % len(combos)])
+            for i, (r, c) in enumerate((r, c) for r in range(R)
+                                       for c in range(C))]
+
+
+def _bench_multihost(params, dc, sched, enc, *, steps, k, hosts: int):
+    """Topology-placed serving on the mixed workload: the same requests
+    drained single-host (ragged oracle) and over ``hosts`` simulated
+    hosts (ragged and compacted).  ASSERTS — gating CI's smoke run —
+    that D_syn is BIT-IDENTICAL across topologies (row noise is keyed by
+    request identity, so placement must be invisible), that the
+    compacted run schedules exactly its active row-iterations PER HOST,
+    and that the per-host breakdown sums to the global counters."""
+    reqs = _mixed_reqs(enc, steps)
+
+    def run_mode(**kw):
+        eng = SynthesisEngine(params, dc, sched, image_size=16, cache=False,
+                              granule=1, **kw)
+        rids = [eng.submit(enc[r, c], c, k, guidance=g, num_steps=s)
+                for r, c, g, s in reqs]
+        t0 = time.time()
+        out = eng.run(jax.random.PRNGKey(3))
+        return time.time() - t0, dict(eng.stats), [out[rid] for rid in rids]
+
+    t_one, _, out_one = run_mode(ragged=True)
+    t_rag, st_rag, out_rag = run_mode(ragged=True, hosts=hosts)
+    t_cmp, st_cmp, out_cmp = run_mode(compaction="full", hosts=hosts)
+    res = {"hosts": hosts, "single_host_s": t_one,
+           "multihost_ragged_s": t_rag, "multihost_compacted_s": t_cmp,
+           "per_host_rows": [p["rows"] for p in st_cmp["per_host"]],
+           "multihost_padded": st_cmp["padded"],
+           "row_iters_scheduled": st_cmp["row_iters_scheduled"],
+           "row_iters_active": st_cmp["row_iters_active"]}
+    # the placement-invariance gate: host count must change no output bit
+    for name, outs in (("ragged", out_rag), ("compacted", out_cmp)):
+        assert all(np.array_equal(a, b) for a, b in zip(out_one, outs)), (
+            f"{hosts}-host {name} D_syn differs from single-host — "
+            f"placement leaked into row values")
+    # per-host accounting: sums must equal the global counters, and full
+    # compaction must schedule exactly each host's active row-iterations
+    for st in (st_rag, st_cmp):
+        per = st["per_host"]
+        assert sum(p["rows"] + p["padded"] for p in per) == st["generated"]
+        assert sum(p["row_iters_scheduled"] for p in per) \
+            == st["row_iters_scheduled"]
+        assert sum(p["row_iters_active"] for p in per) \
+            == st["row_iters_active"]
+    for p in st_cmp["per_host"]:
+        assert p["row_iters_scheduled"] == p["row_iters_active"], (
+            f"host {p}: compacted scheduled != active — frozen rows are "
+            f"riding the denoiser under the topology")
+    return res
+
+
+def _print_multihost(mh: dict):
+    print_table(
+        f"Multi-host placed serving — {mh['hosts']} simulated hosts",
+        [{"mode": "single_host", "wall_s": mh["single_host_s"]},
+         {"mode": "multihost_ragged", "wall_s": mh["multihost_ragged_s"]},
+         {"mode": "multihost_compacted", "wall_s": mh["multihost_compacted_s"]}],
+        ["mode", "wall_s"])
+    print(f"  per-host rows {mh['per_host_rows']}, padded "
+          f"{mh['multihost_padded']}, scheduled==active "
+          f"{mh['row_iters_scheduled']}=={mh['row_iters_active']}, "
+          f"bit-identical across topologies")
+
+
 def _print_ragged(ragged: dict, compacted: dict | None = None):
     rows = [
         {"mode": "grouped", "wall_s": ragged["grouped_s"],
@@ -266,7 +343,22 @@ def _bench_store(params, dc, sched, enc, *, steps, k, store_dir):
             "store_hits": stats["store_hits"]}
 
 
-def run(preset: str = "paper", mode: str = "all"):
+def _merge_result(preset: str, updates: dict, drop: tuple = ()):
+    """Merge one mode's block into an existing BENCH_synthesis.json —
+    the single-mode CI steps must not clobber the full run's numbers —
+    never mixing presets in one file."""
+    path = RESULTS / "BENCH_synthesis.json"
+    res = json.loads(path.read_text()) if path.exists() else {}
+    if res.get("preset") != preset:
+        res = {"preset": preset}
+    res.update(updates)
+    for key in drop:
+        res.pop(key, None)
+    save_result("BENCH_synthesis", res)
+    return res
+
+
+def run(preset: str = "paper", mode: str = "all", hosts: int = 2):
     w = _workload(preset)
     dc, steps = w["dc"], w["steps"]
     R, C, k = w["R"], w["C"], w["k"]
@@ -282,6 +374,14 @@ def run(preset: str = "paper", mode: str = "all"):
     print(f"  workload: {R} clients x {C} categories x {k} samples "
           f"= {n} images, {steps} steps")
 
+    if mode == "multihost":
+        # topology regression only (the CI multi-host gate): merge into an
+        # existing results file rather than clobbering the full run
+        mh = _bench_multihost(params, dc, sched, enc, steps=steps, k=k,
+                              hosts=hosts)
+        _print_multihost(mh)
+        return _merge_result(preset, {"multihost": mh})
+
     if mode in ("ragged", "compacted"):
         # mixed-workload comparison only (the CI regression step): merge
         # into an existing results file rather than clobbering the full
@@ -290,19 +390,13 @@ def run(preset: str = "paper", mode: str = "all"):
         ragged, compacted = _bench_mixed(params, dc, sched, enc, steps=steps,
                                          k=k, compacted=mode == "compacted")
         _print_ragged(ragged, compacted)
-        path = RESULTS / "BENCH_synthesis.json"
-        res = json.loads(path.read_text()) if path.exists() else {}
-        if res.get("preset") != preset:
-            res = {"preset": preset}    # never mix presets in one file
-        res["ragged"] = ragged
         if compacted is not None:
-            res["compacted"] = compacted
-        else:
-            # a ragged-only refresh must not leave an older run's
-            # compacted block paired with the fresh numbers
-            res.pop("compacted", None)
-        save_result("BENCH_synthesis", res)
-        return res
+            return _merge_result(preset, {"ragged": ragged,
+                                          "compacted": compacted})
+        # a ragged-only refresh must not leave an older run's compacted
+        # block paired with the fresh numbers
+        return _merge_result(preset, {"ragged": ragged},
+                             drop=("compacted",))
 
     t0 = time.time()
     seed_out = _seed_loop(params, dc, sched, conds, key, steps=steps)
@@ -333,6 +427,8 @@ def run(preset: str = "paper", mode: str = "all"):
                              store_dir=store_dir)
     ragged, compacted = _bench_mixed(params, dc, sched, enc, steps=steps,
                                      k=k, compacted=True)
+    multihost = _bench_multihost(params, dc, sched, enc, steps=steps, k=k,
+                                 hosts=hosts)
 
     rows = [
         {"path": "seed_loop", "wall_s": t_seed, "img_per_s": n / t_seed},
@@ -347,6 +443,7 @@ def run(preset: str = "paper", mode: str = "all"):
     print_table("Synthesis throughput — engine waves vs seed chunk loops",
                 rows, ["path", "wall_s", "img_per_s"])
     _print_ragged(ragged, compacted)
+    _print_multihost(multihost)
     print(f"  streaming: padded {streaming['streaming_padded']} rows vs "
           f"{streaming['two_snapshots_padded']} snapshot-drained, "
           f"{streaming['streamed_requests']} requests admitted mid-drain")
@@ -360,6 +457,7 @@ def run(preset: str = "paper", mode: str = "all"):
            "speedup_warm": t_seed / max(t_warm, 1e-9),
            "engine_stats": dict(eng.stats),
            "ragged": ragged, "compacted": compacted,
+           "multihost": multihost,
            **streaming, **store}
     save_result("BENCH_synthesis", res)
     return res
@@ -370,14 +468,20 @@ def main():
     ap.add_argument("--preset", default="paper",
                     choices=("smoke", "quick", "paper"))
     ap.add_argument("--mode", default="all",
-                    choices=("all", "ragged", "compacted"),
+                    choices=("all", "ragged", "compacted", "multihost"),
                     help="'ragged' runs only the grouped-vs-ragged mixed-"
                          "workload comparison and merges it into an "
                          "existing BENCH_synthesis.json; 'compacted' adds "
                          "the iteration-compacted scheduler with its "
-                         "row_iters == true-sum and bit-parity asserts")
+                         "row_iters == true-sum and bit-parity asserts; "
+                         "'multihost' runs the topology-placed comparison "
+                         "(--hosts simulated hosts) gating single-host "
+                         "bit-parity and the per-host scheduled==active "
+                         "invariant")
+    ap.add_argument("--hosts", type=int, default=2,
+                    help="simulated host count for --mode multihost")
     args = ap.parse_args()
-    run(args.preset, args.mode)
+    run(args.preset, args.mode, args.hosts)
 
 
 if __name__ == "__main__":

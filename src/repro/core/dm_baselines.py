@@ -29,22 +29,28 @@ from repro.serve.synthesis import SynthesisEngine
 
 
 def _service(service, engine, ocfg, dm_params, sched, *,
-             ragged: bool = False, compaction: int | str | None = None):
+             ragged: bool = False, compaction: int | str | None = None,
+             topology=None, hosts: int | None = None):
     """Every baseline's D_syn generation routes through a service.  An
     explicitly-passed engine beats a shared service (same precedence as
     ``oscar.synthesize``); otherwise the shared service, else a fresh
     engine.  ``ragged=True`` opts the chosen engine into ragged waves,
-    ``compaction`` into iteration-compacted segments (opt-in only — they
-    never force a ragged/compacted shared engine back)."""
+    ``compaction`` into iteration-compacted segments, ``topology``/
+    ``hosts`` into multi-host placed drains (opt-in only — none of them
+    ever forces a shared engine's mode back)."""
     if engine is not None:
         return SynthesisService(engine.opt_in(ragged=ragged,
-                                              compaction=compaction))
+                                              compaction=compaction,
+                                              topology=topology,
+                                              hosts=hosts))
     if service is not None:
-        service.engine.opt_in(ragged=ragged, compaction=compaction)
+        service.engine.opt_in(ragged=ragged, compaction=compaction,
+                              topology=topology, hosts=hosts)
         return service
     return SynthesisService(SynthesisEngine(
         dm_params, ocfg.diffusion, sched, image_size=ocfg.data.image_size,
-        channels=ocfg.data.channels, ragged=ragged, compaction=compaction))
+        channels=ocfg.data.channels, ragged=ragged, compaction=compaction,
+        topology=topology, hosts=hosts))
 
 
 def run_fedcado(key, ocfg: OscarConfig, data, dm_params, sched, *,
@@ -53,7 +59,8 @@ def run_fedcado(key, ocfg: OscarConfig, data, dm_params, sched, *,
                 engine: SynthesisEngine | None = None,
                 service: SynthesisService | None = None,
                 ragged: bool = False,
-                compaction: int | str | None = None):
+                compaction: int | str | None = None,
+                topology=None, hosts: int | None = None):
     classifier = classifier or ocfg.classifier
     k_samples = samples_per_category or ocfg.samples_per_category
     R = data.client_images.shape[0]
@@ -80,7 +87,7 @@ def run_fedcado(key, ocfg: OscarConfig, data, dm_params, sched, *,
     # are threaded so a FedCADO run next to cfg traffic leaves the shared
     # engine configured.)
     svc = _service(service, engine, ocfg, dm_params, sched, ragged=ragged,
-                   compaction=compaction)
+                   compaction=compaction, topology=topology, hosts=hosts)
 
     def make_logprob(pr):
         def logprob(x, labels):
@@ -114,7 +121,8 @@ def run_feddisc(key, ocfg: OscarConfig, data, dm_params, sched, fm: FrozenFM,
                 engine: SynthesisEngine | None = None,
                 service: SynthesisService | None = None,
                 ragged: bool = False,
-                compaction: int | str | None = None):
+                compaction: int | str | None = None,
+                topology=None, hosts: int | None = None):
     classifier = classifier or ocfg.classifier
     k_samples = samples_per_category or ocfg.samples_per_category
     R = data.client_images.shape[0]
@@ -147,7 +155,7 @@ def run_feddisc(key, ocfg: OscarConfig, data, dm_params, sched, fm: FrozenFM,
     # different guidance scale, in one compiled trajectory, and
     # ``compaction`` skips the frozen iterations of that mixing).
     svc = _service(service, engine, ocfg, dm_params, sched, ragged=ragged,
-                   compaction=compaction)
+                   compaction=compaction, topology=topology, hosts=hosts)
     rng = np.random.default_rng(0)
     futs, labels = [], []
     for r in range(R):

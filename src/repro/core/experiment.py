@@ -31,7 +31,12 @@ class Experiment:
     invocations skip the pre-training, as the paper reuses frozen SD."""
 
     def __init__(self, ocfg: OscarConfig | None = None, *, verbose: bool = True,
-                 pretrain_steps: int | None = None, cache_dir: str | None = None):
+                 pretrain_steps: int | None = None, cache_dir: str | None = None,
+                 hosts: int | None = None):
+        """``hosts=H`` places every DM-assisted method's D_syn drains over
+        an H-host serving topology (simulated in-process; see
+        ``serve/topology.py``) — D_syn is bit-identical to any other host
+        count, so table rows do not depend on the serving layout."""
         self.ocfg = ocfg or OscarConfig()
         self.verbose = verbose
         key = jax.random.PRNGKey(self.ocfg.seed)
@@ -108,7 +113,8 @@ class Experiment:
         self.engine = SynthesisEngine(self.dm_params, self.ocfg.diffusion,
                                       self.sched,
                                       image_size=self.ocfg.data.image_size,
-                                      channels=self.ocfg.data.channels)
+                                      channels=self.ocfg.data.channels,
+                                      hosts=hosts)
         # the store root folds in the experiment seed: D_syn depends on
         # the drain keys (derived from ocfg.seed), so two seeds sharing a
         # store would silently collapse to one sample

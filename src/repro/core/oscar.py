@@ -53,7 +53,8 @@ def synthesize(key, dm_params, dc, sched, encodings, present, k_samples: int,
                *, image_size: int, channels: int = 3, guidance=None,
                use_pallas: bool = False, engine: SynthesisEngine | None = None,
                service: SynthesisService | None = None, wave_size: int = 128,
-               ragged: bool = False, compaction: int | str | None = None):
+               ragged: bool = False, compaction: int | str | None = None,
+               topology=None, hosts: int | None = None):
     """Step (3): server-side D_syn generation.  Returns (images, labels).
 
     Synthesis is embarrassingly parallel over (client × category × sample);
@@ -67,9 +68,10 @@ def synthesize(key, dm_params, dc, sched, encodings, present, k_samples: int,
     and step counts — one compiled trajectory across classifier-free
     groups; see ``SynthesisEngine``); ``compaction`` (implies ragged)
     further runs those waves as iteration-compacted nested segments, same
-    bits, fewer scheduled row-iterations.  Opt-in only: they switch a
-    shared engine ON but never force a ragged/compacted shared engine
-    back."""
+    bits, fewer scheduled row-iterations; ``topology``/``hosts`` places
+    drains over a multi-host topology (per-host ingress queues and wave
+    windows — same bits again, any host count).  Opt-in only: they switch
+    a shared engine ON but never force a shared engine's mode back."""
     R, C, dim = encodings.shape
     svc, eng = service, engine
     if eng is not None:
@@ -84,9 +86,11 @@ def synthesize(key, dm_params, dc, sched, encodings, present, k_samples: int,
         eng = SynthesisEngine(dm_params, dc, sched, image_size=image_size,
                               channels=channels, use_pallas=use_pallas,
                               wave_size=wave_size, ragged=ragged,
-                              compaction=compaction)
+                              compaction=compaction, topology=topology,
+                              hosts=hosts)
     else:
-        eng.opt_in(ragged=ragged, compaction=compaction)
+        eng.opt_in(ragged=ragged, compaction=compaction, topology=topology,
+                   hosts=hosts)
     if svc is None:
         svc = SynthesisService(eng)
     futs, cats = [], []
@@ -114,7 +118,8 @@ def run_oscar(key, ocfg: OscarConfig, data, dm_params, sched, fm: FrozenFM,
               engine: SynthesisEngine | None = None,
               service: SynthesisService | None = None,
               ragged: bool = False,
-              compaction: int | str | None = None) -> OscarResult:
+              compaction: int | str | None = None,
+              topology=None, hosts: int | None = None) -> OscarResult:
     classifier = classifier or ocfg.classifier
     k_samples = samples_per_category or ocfg.samples_per_category
     kenc, ksyn, kclf = jax.random.split(key, 3)
@@ -126,7 +131,8 @@ def run_oscar(key, ocfg: OscarConfig, data, dm_params, sched, fm: FrozenFM,
                               channels=ocfg.data.channels,
                               guidance=guidance, use_pallas=use_pallas,
                               engine=engine, service=service, ragged=ragged,
-                              compaction=compaction)
+                              compaction=compaction, topology=topology,
+                              hosts=hosts)
     if len(syn_x) == 0:
         # degenerate round: no (client, category) present anywhere — no
         # D_syn, so the broadcast model is the untrained init

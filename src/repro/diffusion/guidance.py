@@ -324,6 +324,96 @@ def reverse_sample_ragged(params, dc: DiffusionConfig, y, row_keys, guidance,
 
 
 # ---------------------------------------------------------------------------
+# windowed mode: per-host row windows of a wave-resident scalar table
+# ---------------------------------------------------------------------------
+#
+# Multi-host serving shards one merged wave into contiguous per-host windows
+# (serve/topology.py::WavePlacement).  The wave's per-row (ᾱ_t, ᾱ_prev, s,
+# active) scalars live in ONE wave-resident table; a host's scan updates
+# only its window's rows and reads row b's scalars at wave slot
+# ``row_offset + b`` through the segment-offset cfg_fuse path — no per-host
+# sliced copy of the table per step.  Because row noise is keyed by request
+# identity and the per-row arithmetic is independent across rows, a window
+# scan is bit-exact against the same rows inside the full-wave ragged scan.
+
+
+def _cfg_update_window(x, eps_c, eps_u, s, ab_t, ab_prev, noise, active,
+                       row_offset, eta, use_pallas):
+    if use_pallas:
+        from repro.kernels.cfg_fuse import ops as cfg_ops
+        return cfg_ops.cfg_update_rowwise(x, eps_c, eps_u, s, ab_t, ab_prev,
+                                          noise, active, eta,
+                                          row_offset=row_offset)
+    from repro.kernels.cfg_fuse import ref as cfg_ref
+    return cfg_ref.cfg_update_rowwise_windowed(x, eps_c, eps_u, s, ab_t,
+                                               ab_prev, noise, active,
+                                               row_offset=row_offset, eta=eta)
+
+
+def _ragged_scan_window(params, dc: DiffusionConfig, x, y2, row_keys,
+                        guidance, ts, jloc, ab_t, ab_prev, active, *,
+                        row_offset: int, eta: float, use_pallas: bool):
+    """The windowed per-row reverse scan: ``x`` holds only wave rows
+    ``[row_offset, row_offset + Bw)``.  ``guidance`` (B,) and
+    ``ab_t``/``ab_prev``/``active`` (B, S) span the FULL wave — the fused
+    update reads tensor row b's scalars at wave slot ``row_offset + b``
+    (``cfg_update_rowwise(row_offset=...)``) — while ``ts``/``jloc``
+    (Bw, S) are window-local (only this window's rows feed the denoiser
+    and the noise stream).  Per-row arithmetic is identical to
+    ``_ragged_scan``; only which rows this launch updates changes, which
+    is the substrate of the cross-topology bit-parity.  Returns x
+    UNCLIPPED."""
+    B, H, _, channels = x.shape
+
+    def step(x, inp):
+        t, j, abt, abp, act = inp         # t/j: (Bw,); abt/abp/act: (B,)
+        x2 = jnp.concatenate([x, x], axis=0)
+        t2 = jnp.concatenate([t, t])
+        eps2 = dit_apply(params, dc, x2, t2, y2)
+        eps_c, eps_u = eps2[:B], eps2[B:]
+        nk = jax.vmap(jax.random.fold_in)(row_keys,
+                                          jnp.maximum(j, 0) + 1)
+        noise = jax.vmap(lambda k: jax.random.normal(k, (H, H, channels)))(nk)
+        noise = noise * (t > 0)[:, None, None, None]
+        x = _cfg_update_window(x, eps_c, eps_u, guidance, abt, abp, noise,
+                               act, row_offset, eta, use_pallas)
+        return x, None
+
+    x, _ = jax.lax.scan(step, x,
+                        (jnp.asarray(ts).T, jnp.asarray(jloc).T,
+                         jnp.asarray(ab_t).T, jnp.asarray(ab_prev).T,
+                         jnp.asarray(active).T))
+    return x
+
+
+def reverse_sample_window(params, dc: DiffusionConfig, x, y, row_keys,
+                          guidance, ts, jloc, ab_t, ab_prev, active, *,
+                          row_offset: int, image_size: int, channels: int = 3,
+                          eta: float = 1.0, use_pallas: bool = False):
+    """One segment of one host window: advance the carried rows, admit
+    the new.  ``x`` is the previous segment's output (the first
+    ``x.shape[0]`` rows of this segment); rows ``x.shape[0]:`` activate
+    here — their x_T is drawn from ``fold_in(row_keys[b], 0)``, the same
+    draw every other schedule makes for that row.  ``y``/``row_keys`` and
+    the ``ts``/``jloc`` tables are window-local slices;
+    ``guidance``/``ab_t``/``ab_prev``/``active`` span the full wave (see
+    ``_ragged_scan_window``).  Returns x UNCLIPPED (the trajectory may
+    continue into the next segment; the caller clips once at the end)."""
+    n_prev = x.shape[0]
+    H = image_size
+    kx = jax.vmap(lambda k: jax.random.fold_in(k, 0))(row_keys[n_prev:])
+    x_new = jax.vmap(lambda k: jax.random.normal(k, (H, H, channels)))(kx)
+    x = jnp.concatenate([x, x_new], axis=0)
+    B = x.shape[0]
+    null = jnp.broadcast_to(params["null_y"], (B, dc.cond_dim))
+    y2 = jnp.concatenate([y, null], axis=0)
+    return _ragged_scan_window(params, dc, x, y2, row_keys,
+                               jnp.asarray(guidance, jnp.float32), ts, jloc,
+                               ab_t, ab_prev, active, row_offset=row_offset,
+                               eta=eta, use_pallas=use_pallas)
+
+
+# ---------------------------------------------------------------------------
 # compacted mode: iteration-compacted nested waves (compute-skipping ragged)
 # ---------------------------------------------------------------------------
 #

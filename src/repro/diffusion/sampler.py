@@ -27,7 +27,8 @@ from repro.diffusion.guidance import (ClassifierFree, ClassifierGuided,
                                       ragged_tables, reverse_sample,
                                       reverse_sample_compacted,
                                       reverse_sample_ragged,
-                                      reverse_sample_segment)
+                                      reverse_sample_segment,
+                                      reverse_sample_window)
 from repro.diffusion.guidance import respaced_ts as _respaced_ts  # noqa: F401
 from repro.diffusion.schedule import NoiseSchedule
 
@@ -151,6 +152,65 @@ def sample_cfg_compacted(params, dc: DiffusionConfig, sched: NoiseSchedule,
         epochs=epochs, order=order, image_size=image_size or 16,
         channels=channels, eta=eta, use_pallas=use_pallas,
         segment_fn=_compacted_segment)
+
+
+@partial(jax.jit, static_argnames=("dc", "row_offset", "image_size",
+                                   "channels", "eta", "use_pallas"))
+def _window_segment(params, dc, x, y, row_keys, guidance, ts, jloc, ab_t,
+                    ab_prev, active, *, row_offset, image_size, channels,
+                    eta, use_pallas):
+    """One host-window segment, jitted: the executable specializes on
+    (wave width, row_offset, carried rows, window rows, iterations) — the
+    same window geometry recurring across waves or drains reuses one
+    compile.  The wave-resident scalar tables are traced operands, so the
+    same geometry at different schedule values shares the executable."""
+    return reverse_sample_window(params, dc, x, y, row_keys, guidance,
+                                 ts, jloc, ab_t, ab_prev, active,
+                                 row_offset=row_offset,
+                                 image_size=image_size, channels=channels,
+                                 eta=eta, use_pallas=use_pallas)
+
+
+def sample_cfg_window(params, dc: DiffusionConfig, sched: NoiseSchedule,
+                      y, row_keys, guidance, num_steps, *, row_offset: int,
+                      window_rows: int | None = None,
+                      max_steps: int | None = None,
+                      image_size: int | None = None, channels: int = 3,
+                      eta: float = 1.0, use_pallas: bool = False):
+    """One host's window of a placed ragged wave.
+
+    ``guidance`` (B,) and ``num_steps`` (B,) span the FULL merged wave —
+    they are the wave-resident scalar table — while ``y`` and
+    ``row_keys`` carry only the window's rows
+    ``[row_offset, row_offset + window_rows)`` (a host never holds
+    another host's conditioning).  The fused cfg update reads each tensor
+    row's scalars out of the wave table at ``row_offset + b`` (the
+    segment-offset ``cfg_fuse`` path).  Row results are bit-identical to
+    the same rows inside ``sample_cfg_ragged`` over the whole wave — row
+    noise is keyed per row, and the per-row arithmetic never crosses
+    rows — which is what makes host count and placement invisible in
+    D_syn.
+    """
+    steps = np.asarray(num_steps, np.int32).reshape(-1)
+    S = int(max_steps if max_steps is not None else steps.max())
+    Bw = int(window_rows if window_rows is not None else y.shape[0])
+    if y.shape[0] != Bw or row_keys.shape[0] != Bw:
+        raise ValueError(f"window carries {Bw} rows; y has {y.shape[0]} "
+                         f"and row_keys {row_keys.shape[0]}")
+    if row_offset < 0 or row_offset + Bw > len(steps):
+        raise ValueError(f"window [{row_offset}, {row_offset + Bw}) is out "
+                         f"of range for a {len(steps)}-row wave")
+    ts, ab_t, ab_prev, jloc = ragged_tables(sched, steps, S)
+    w = slice(row_offset, row_offset + Bw)
+    x = _window_segment(params, dc,
+                        jnp.zeros((0, image_size or 16, image_size or 16,
+                                   channels)),
+                        jnp.asarray(y), jnp.asarray(row_keys),
+                        jnp.asarray(guidance, jnp.float32),
+                        ts[w], jloc[w], ab_t, ab_prev, jloc >= 0,
+                        row_offset=row_offset, image_size=image_size or 16,
+                        channels=channels, eta=eta, use_pallas=use_pallas)
+    return jnp.clip(x, -1.0, 1.0)
 
 
 @partial(jax.jit, static_argnames=("dc", "num", "num_steps", "eta",

@@ -2,3 +2,4 @@ from repro.serve.service import SynthesisFuture, SynthesisService
 from repro.serve.steps import make_prefill_step, make_serve_step
 from repro.serve.store import SynthesisStore
 from repro.serve.synthesis import SynthesisEngine, SynthesisRequest
+from repro.serve.topology import HostTopology, HostWindow, WavePlacement

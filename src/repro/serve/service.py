@@ -74,6 +74,7 @@ class SynthesisService:
                  store: SynthesisStore | str | None = None,
                  ragged: bool | None = None,
                  compaction: int | str | None = None,
+                 topology=None, hosts: int | None = None,
                  store_max_bytes: int | None = None):
         """``ragged`` (opt-in) switches the engine to ragged waves: every
         classifier-free group shares one compiled per-row (guidance,
@@ -88,6 +89,12 @@ class SynthesisService:
         wrapping a shared engine never forces its mode back — disable
         directly via ``engine.set_compaction("off")``.
 
+        ``topology`` (a ``serve/topology.py::HostTopology``) or ``hosts``
+        (an int H) places drains over a multi-host topology: per-host
+        ingress queues, per-host wave windows against one wave-resident
+        scalar table, per-host stats — with D_syn bit-identical to any
+        other host count or placement.  Opt-in only, like the other two.
+
         ``store_max_bytes`` is the persistent store's size budget: after
         every drain the least-recently-used shards are evicted until the
         store fits (a long-lived server stops growing without bound).
@@ -96,7 +103,8 @@ class SynthesisService:
             store = SynthesisStore(store)
         if store is not None:
             engine.store = store
-        engine.opt_in(ragged=ragged, compaction=compaction)
+        engine.opt_in(ragged=ragged, compaction=compaction,
+                      topology=topology, hosts=hosts)
         self.engine = engine
         self.store = engine.store
         self.store_max_bytes = store_max_bytes

@@ -68,6 +68,27 @@ the engine's shape-bucket cache of already-compiled segment geometries
 (``(carried, rows, iterations)``) so a split that reuses an executable
 from an earlier wave or drain is free.
 
+TOPOLOGY (``topology=HostTopology(...)`` or ``hosts=H``): the drain is
+placed over H hosts instead of one monolithic packer
+(``serve/topology.py``).  Every classifier-free request is routed to a
+host's INGRESS QUEUE by its identity (``rid % H``); each host packs its
+own contiguous WINDOW of every wave locally (padding is per-window), and
+the wave's per-row (ᾱ_t, ᾱ_prev, s, active) scalars live in ONE
+wave-resident table that each window's scan reads through the
+segment-offset ``cfg_fuse`` path (``cfg_update_rowwise(row_offset=
+window.offset)``) — no per-host sliced copies.  Under a topology every
+cfg wave (grouped OR ragged) samples row-keyed, so D_syn is
+BIT-IDENTICAL regardless of host count, placement, or arrival order —
+and identical to a plain ``ragged=True`` engine serving the same
+requests.  Compaction composes per window: each host activation-sorts
+and epoch-plans its own window, so its segments stay contiguous
+row-windows of the wave table.  Multi-host is SIMULATED in one process
+(host partitions of the local device set); per-host device placement on
+a real pod hangs off ``HostTopology.mesh`` / ``host_submesh``.
+Classifier-guided and unconditional groups keep the single-host path (a
+classifier closure cannot be sharded by rows).  Per-host accounting
+lands in ``stats["per_host"]``.
+
 Requests stay on the queue until their results are produced: an
 exception mid-drain (a failing sampler, an interrupted process) leaves
 every unserved request queued for the next ``run``.
@@ -86,11 +107,12 @@ from jax.sharding import NamedSharding
 from jax.sharding import PartitionSpec as P
 
 from repro.configs.oscar import DiffusionConfig
-from repro.diffusion.guidance import plan_epochs
-from repro.diffusion.sampler import (sample_cfg, sample_cfg_compacted,
-                                     sample_cfg_ragged,
+from repro.diffusion.guidance import plan_epochs, ragged_tables
+from repro.diffusion.sampler import (_window_segment, sample_cfg,
+                                     sample_cfg_compacted, sample_cfg_ragged,
                                      sample_classifier_guided, sample_uncond)
 from repro.diffusion.schedule import NoiseSchedule
+from repro.serve.topology import HostTopology, WavePlacement
 
 
 def _encoding_hash(encoding: np.ndarray) -> str:
@@ -174,6 +196,22 @@ class _GroupQueue:
         return parts
 
 
+class _ShardedGroup:
+    """Per-host ingress for one wave group under a topology: one live
+    ``_GroupQueue`` per host, so each host packs its window of a placed
+    wave from its own queue (and streams its own late arrivals)."""
+
+    def __init__(self, head: SynthesisRequest, num_hosts: int):
+        self.head = head
+        self.queues = [_GroupQueue(head) for _ in range(num_hosts)]
+
+    def push(self, p: _Pending, host: int):
+        self.queues[host].push(p)
+
+    def rows_available(self) -> int:
+        return sum(q.rows_available() for q in self.queues)
+
+
 class SynthesisEngine:
     """Wave-based batched diffusion synthesis over a frozen DM."""
 
@@ -183,7 +221,9 @@ class SynthesisEngine:
                  cache: bool = True, granule: int = 8, store=None,
                  async_waves: bool = True, ragged: bool = False,
                  compaction: int | str | None = None,
-                 compaction_compile_cost: int = 256):
+                 compaction_compile_cost: int = 256,
+                 topology: HostTopology | None = None,
+                 hosts: int | None = None):
         self.dm_params, self.dc, self.sched = dm_params, dc, sched
         self.image_size, self.channels = image_size, channels
         self.eta, self.use_pallas = eta, use_pallas
@@ -206,6 +246,13 @@ class SynthesisEngine:
         self.compaction_compile_cost = compaction_compile_cost
         if compaction is not None:
             self.set_compaction(compaction)
+        self.topology = None
+        # per-(window offset, wave width) shape buckets of compiled window-
+        # segment geometries: a window executable additionally specializes
+        # on its offset and the wave's table width, so "auto" free-split
+        # hits must be keyed per window, not pooled with _segment_geoms
+        self._window_geoms: dict[tuple, set] = {}
+        self._host_shardings: dict[int, Optional[dict]] = {}
         self._cache: dict[tuple, np.ndarray] = {}
         self._queue: list[SynthesisRequest] = []
         self._next_rid = 0
@@ -220,6 +267,45 @@ class SynthesisEngine:
                       "streamed": 0, "merged_waves": 0, "compiled_shapes": 0,
                       "segments": 0,
                       "row_iters_scheduled": 0, "row_iters_active": 0}
+        if topology is not None or hosts is not None:
+            self.set_topology(topology if topology is not None else hosts)
+
+    def set_topology(self, topology):
+        """Normalize + apply the placement knob.  ``None`` leaves the
+        topology alone; an int H builds one — from the engine's mesh when
+        it has one (H host partitions of the data axes), otherwise H
+        simulated hosts whose windows round to the engine granule.  Sets
+        up the per-host stats breakdown (``stats["per_host"]``); the
+        cross-host sums of rows/padded/row_iters equal the global
+        counters for every placed (classifier-free) wave.  Re-applying
+        an EQUAL topology is a no-op (a shared engine's ``opt_in`` runs
+        once per entry point and must not wipe accumulated per-host
+        counters); switching to a different topology resets the
+        breakdown — counters from another layout cannot be merged."""
+        if topology is None:
+            return
+        if isinstance(topology, bool) or not isinstance(
+                topology, (int, HostTopology)):
+            raise ValueError(
+                f"topology={topology!r}: expected a HostTopology or an "
+                f"int host count")
+        if isinstance(topology, int):
+            topology = (HostTopology.from_mesh(self.mesh, topology)
+                        if self.mesh is not None else
+                        HostTopology.simulated(topology,
+                                               granule=self.granule))
+        if topology == self.topology:
+            return            # re-threading the same placement (a shared
+                              # engine's opt_in runs once per entry point)
+                              # must not wipe the per-host accounting
+        self.topology = topology
+        self._host_shardings = {}
+        self.stats["hosts"] = topology.num_hosts
+        self.stats["per_host"] = [
+            {"rows": 0, "padded": 0, "waves": 0,
+             "row_iters_scheduled": 0, "row_iters_active": 0,
+             "queue_depth_at_start": 0}
+            for _ in range(topology.num_hosts)]
 
     def set_compaction(self, compaction):
         """Normalize + apply the compaction knob.  ``None`` leaves the
@@ -240,19 +326,23 @@ class SynthesisEngine:
         self.compaction = compaction
         self.ragged = True
 
-    def opt_in(self, *, ragged: bool | None = None, compaction=None):
+    def opt_in(self, *, ragged: bool | None = None, compaction=None,
+               topology=None, hosts: int | None = None):
         """Thread scheduling knobs from a run entry point, OPT-IN ONLY:
-        ``ragged=True`` switches this engine to ragged waves and
+        ``ragged=True`` switches this engine to ragged waves,
         ``compaction`` (``"full"``/``"auto"``/int K) enables compacted
-        scheduling, but neither ever forces a shared engine's mode back —
-        ``ragged=False``/``None`` and ``compaction="off"``/``None`` leave
-        it alone here (disable directly via the attribute or
-        ``set_compaction``).  This is THE contract every runner and the
-        service constructor share; keep them on this helper."""
+        scheduling, and ``topology``/``hosts`` places drains over a host
+        topology — but none of them ever forces a shared engine's mode
+        back: ``ragged=False``/``None``, ``compaction="off"``/``None``,
+        and ``topology=None``/``hosts=None`` leave it alone here (disable
+        directly via the attribute or the ``set_*`` helpers).  This is
+        THE contract every runner and the service constructor share; keep
+        them on this helper."""
         if ragged:
             self.ragged = True
         if compaction != "off":
             self.set_compaction(compaction)
+        self.set_topology(topology if topology is not None else hosts)
         return self
 
     # -- submission -------------------------------------------------------
@@ -492,6 +582,9 @@ class SynthesisEngine:
         st.on_result = on_result
         self._admit_new(st, results)
         st.started = True             # later admissions count as streamed
+        if self.topology is not None:
+            for h, q in enumerate(self._host_depths(st)):
+                self.stats["per_host"][h]["queue_depth_at_start"] += q
         while True:
             live = sorted(g for g, q in st.groups.items()
                           if q.rows_available())
@@ -500,10 +593,24 @@ class SynthesisEngine:
                     self._admit_new(st, results)
                     continue
                 break
-            self._drain_group(st.groups[live[0]], st, key, results,
-                              poll=poll, stream=stream)
+            grp = st.groups[live[0]]
+            if isinstance(grp, _ShardedGroup):
+                self._drain_group_placed(grp, st, key, results, poll=poll,
+                                         stream=stream)
+            else:
+                self._drain_group(grp, st, key, results,
+                                  poll=poll, stream=stream)
         # any still-unresolved waiters are covered by rows generated above
         self._serve_waiters(st, results)
+
+    def _host_depths(self, st: "_DrainState") -> list[int]:
+        """Rows waiting on each host's ingress queues right now."""
+        depths = [0] * self.topology.num_hosts
+        for grp in st.groups.values():
+            if isinstance(grp, _ShardedGroup):
+                for h, q in enumerate(grp.queues):
+                    depths[h] += q.rows_available()
+        return depths
 
     def _admit_new(self, st: "_DrainState", results):
         """Admission: serve full cache hits, compute top-up ``fresh`` row
@@ -540,9 +647,19 @@ class SynthesisEngine:
                 st.planned[r.cache_key] = (st.planned.get(r.cache_key, 0)
                                            + fresh)
             gk = self._group_key(r)
+            placed = self.topology is not None and r.mode == "cfg"
             if gk not in st.groups:
-                st.groups[gk] = _GroupQueue(r)
-            st.groups[gk].push(_Pending(r, fresh))
+                st.groups[gk] = (_ShardedGroup(r, self.topology.num_hosts)
+                                 if placed else _GroupQueue(r))
+            if placed:
+                # ingress routing keyed by request IDENTITY, not arrival
+                # order: a replayed trace lands every request on the same
+                # host (and any routing is value-invisible anyway — row
+                # noise is keyed by the row, not its host)
+                st.groups[gk].push(_Pending(r, fresh),
+                                   self.topology.assign(r.rid))
+            else:
+                st.groups[gk].push(_Pending(r, fresh))
 
     def _drain_group(self, q: _GroupQueue, st: "_DrainState", key, results,
                      *, poll, stream):
@@ -638,6 +755,224 @@ class SynthesisEngine:
                 self._retire(st, results, x, parts, got)
         if inflight is not None:
             self._retire(st, results, *inflight)
+
+    def _drain_group_placed(self, grp: _ShardedGroup, st: "_DrainState", key,
+                            results, *, poll, stream):
+        """Placement-aware drain of one cfg group over the engine's
+        topology, double-buffered like ``_drain_group``: each host packs
+        its contiguous window of every wave locally from its own ingress
+        queue (per-window padding, per-window compaction plans), and the
+        wave's per-row scalars live in one wave-resident table that every
+        window reads through the segment-offset ``cfg_fuse`` path.
+        Placed drains quota-pack in BOTH snapshot and streaming mode (the
+        per-host quota split replaces ``_plan_waves``' near-uniform
+        shapes); admission still runs at every wave boundary, so late
+        arrivals stream into open windows either way.  Row noise stays
+        keyed by request identity, so outputs are bit-identical for ANY
+        topology, placement, or arrival order."""
+        topo = self.topology
+        quotas = topo.wave_quotas(self.wave_size)
+        smax = 0                         # running step ceiling (see above)
+        inflight = None                  # (xs, invs, placement, parts_h)
+        while True:
+            if poll is not None:
+                poll()
+            self._admit_new(st, results)
+            parts_h = [q.take(quotas[h]) for h, q in enumerate(grp.queues)]
+            got = sum(t for parts in parts_h for _, t, _ in parts)
+            if got == 0:
+                break
+            if got < sum(quotas):
+                # open wave: give late arrivals one chance to fill the
+                # hosts' windows before padding them
+                if poll is not None:
+                    poll()
+                self._admit_new(st, results)
+                for h, q in enumerate(grp.queues):
+                    have = sum(t for _, t, _ in parts_h[h])
+                    if have < quotas[h]:
+                        parts_h[h] += q.take(quotas[h] - have)
+                got = sum(t for parts in parts_h for _, t, _ in parts)
+            placement = WavePlacement.plan(
+                [sum(t for _, t, _ in parts) for parts in parts_h],
+                topo.granules)
+            st.wave_i += 1
+            deep = max(p.req.num_steps
+                       for parts in parts_h for p, _, _ in parts)
+            smax = max(smax, deep)
+            xs, invs, host_stats = self._sample_wave_placed(
+                parts_h, placement, key, smax)
+            self.stats["waves"] += 1
+            if self.ragged:
+                self.stats["merged_waves"] += 1
+            self.stats["generated"] += placement.total_rows
+            self.stats["padded"] += placement.padded
+            for w, hs in zip(placement.windows, host_stats):
+                ph = self.stats["per_host"][w.host]
+                ph["rows"] += w.real
+                ph["padded"] += w.rows - w.real
+                ph["waves"] += 1
+                ph["row_iters_scheduled"] += hs["scheduled"]
+                ph["row_iters_active"] += hs["active"]
+                self.stats["row_iters_scheduled"] += hs["scheduled"]
+                self.stats["row_iters_active"] += hs["active"]
+            if inflight is not None:
+                self._retire_placed(st, results, *inflight)
+            if self.async_waves:
+                inflight = (xs, invs, placement, parts_h)
+            else:
+                self._retire_placed(st, results, xs, invs, placement,
+                                    parts_h)
+        if inflight is not None:
+            self._retire_placed(st, results, *inflight)
+
+    def _sample_wave_placed(self, parts_h, placement: WavePlacement, key,
+                            max_steps: int):
+        """Sample one placed wave window by window.
+
+        Assembles the merged wave in window order — each window's rows,
+        meta, and per-window padding, activation-sorted per window when
+        compaction is on so its epoch segments stay contiguous prefixes —
+        builds ONE wave-resident set of per-row tables
+        (``ragged_tables`` over the whole wave), then runs each host's
+        window as jitted segments whose fused update reads the wave table
+        at ``row_offset = window.offset``.  Returns per-window device
+        outputs (still in sorted order), the per-window inverse
+        permutations, and per-window scheduled/active row-iteration
+        counts."""
+        win_rows, win_meta, win_inv, win_plans, host_stats = [], [], [], [], []
+        for w in placement.windows:
+            parts = parts_h[w.host]
+            rows = np.concatenate([p.row_block(t, s) for p, t, s in parts])
+            # (guidance, steps, rid, absolute row index) — identical row
+            # identity to the single-host packers, so any engine serving
+            # these requests draws the same noise streams
+            meta = [(p.req.guidance, p.req.num_steps, p.req.rid,
+                     p.req.count - p.fresh + s + i)
+                    for p, t, s in parts for i in range(t)]
+            if w.rows > w.real:
+                # per-window padding duplicates the window's OWN last row
+                # (same identity → a discarded bit-identical copy)
+                rows = np.concatenate(
+                    [rows, np.repeat(rows[-1:], w.rows - w.real, axis=0)])
+                meta += [meta[-1]] * (w.rows - w.real)
+            # useful work: each REAL row's own step count, pre-sort
+            active = int(sum(m[1] for m in meta[:w.real]))
+            steps_w = np.array([m[1] for m in meta], np.int32)
+            if self.compaction is not None:
+                seg_granule = (self.topology.granules[w.host]
+                               if self.mesh is not None else 1)
+                geoms = self._window_geoms.setdefault(
+                    (w.offset, placement.total_rows), set())
+                order, epochs = plan_epochs(
+                    steps_w, max_steps, compaction=self.compaction,
+                    granule=seg_granule, geoms=geoms,
+                    compile_cost=self.compaction_compile_cost)
+                rows = rows[order]
+                meta = [meta[i] for i in order]
+                inv = np.empty_like(order)
+                inv[order] = np.arange(len(order))
+            else:
+                # one segment spanning the whole scan: right-aligned rows
+                # ride frozen, exactly like the one-shot ragged wave
+                epochs, inv = ((w.rows, 0, max_steps),), None
+            win_rows.append(rows)
+            win_meta.append(meta)
+            win_inv.append(inv)
+            win_plans.append(epochs)
+            host_stats.append({"active": active,
+                               "scheduled": sum(r * (e - b)
+                                                for r, b, e in epochs)})
+        meta_wave = [m for ms in win_meta for m in ms]
+        cond = np.concatenate(win_rows)
+        g = jnp.asarray([m[0] for m in meta_wave], jnp.float32)
+        steps = np.array([m[1] for m in meta_wave], np.int32)
+        row_keys = self._row_keys(meta_wave, key)
+        ts, ab_t, ab_prev, jloc = ragged_tables(self.sched, steps, max_steps)
+        act = jloc >= 0
+        y = jnp.asarray(cond)
+        B = placement.total_rows
+        xs = []
+        for w, epochs in zip(placement.windows, win_plans):
+            lo = w.offset
+            sh = self._window_shardings(w.host)
+            x = jnp.zeros((0, self.image_size, self.image_size,
+                           self.channels))
+            prev = 0
+            for rows, begin, end in epochs:
+                # full executable key: a window segment specializes on
+                # (wave width, offset, carried, live, iterations)
+                self._note_shape(("cfg-win", B, lo, prev, rows, end - begin))
+                if self.compaction is not None:
+                    self._window_geoms[(lo, B)].add((prev, rows, end - begin))
+                    self.stats["segments"] += 1
+                hi = lo + rows
+                args = dict(y=y[lo:hi], rk=row_keys[lo:hi], g=g,
+                            ts=ts[lo:hi, begin:end],
+                            jloc=jloc[lo:hi, begin:end],
+                            ab_t=ab_t[:, begin:end],
+                            ab_prev=ab_prev[:, begin:end],
+                            act=act[:, begin:end])
+                if sh is not None:
+                    # the row-window layout (wave_window_specs): window
+                    # rows shard over the host submesh's data axes, the
+                    # wave-resident tables replicate onto that submesh
+                    args = {k: jax.device_put(v, sh[k])
+                            for k, v in args.items()}
+                x = _window_segment(self.dm_params, self.dc, x, args["y"],
+                                    args["rk"], args["g"], args["ts"],
+                                    args["jloc"], args["ab_t"],
+                                    args["ab_prev"], args["act"],
+                                    row_offset=lo,
+                                    image_size=self.image_size,
+                                    channels=self.channels, eta=self.eta,
+                                    use_pallas=self.use_pallas)
+                prev = rows
+            xs.append(jnp.clip(x, -1.0, 1.0))
+        return xs, win_inv, host_stats
+
+    def _window_shardings(self, host: int) -> Optional[dict]:
+        """Per-argument shardings for host ``host``'s window segments —
+        the ``sharding/rules.py::wave_window_specs`` layout instantiated
+        on the host's compute mesh (``HostTopology.host_mesh``), cached
+        per host.  None for a simulated (mesh-less) topology: windows run
+        wherever the local devices are."""
+        if host in self._host_shardings:
+            return self._host_shardings[host]
+        sub = self.topology.host_mesh(host)
+        sh = None
+        if sub is not None:
+            from repro.launch.mesh import mesh_axes
+            from repro.sharding.rules import wave_window_specs
+            specs = wave_window_specs(mesh_axes(sub))
+            sh = {"y": NamedSharding(sub, specs["cond"]),
+                  "rk": NamedSharding(sub, specs["row_keys"]),
+                  "ts": NamedSharding(sub, specs["cond"]),
+                  "jloc": NamedSharding(sub, specs["cond"]),
+                  "g": NamedSharding(sub, specs["guidance"]),
+                  "ab_t": NamedSharding(sub, specs["scalar_table"]),
+                  "ab_prev": NamedSharding(sub, specs["scalar_table"]),
+                  "act": NamedSharding(sub, specs["scalar_table"])}
+        self._host_shardings[host] = sh
+        return sh
+
+    def _retire_placed(self, st: "_DrainState", results, xs, invs,
+                       placement: WavePlacement, parts_h):
+        """Fence on every window, unsort compacted windows back to pack
+        order, strip per-window padding, scatter rows to requests."""
+        for x in xs:
+            jax.block_until_ready(x)
+        for w, x, inv in zip(placement.windows, xs, invs):
+            arr = np.asarray(x)
+            if inv is not None:
+                arr = arr[inv]
+            outs = arr[:w.real]
+            off = 0
+            for p, t, _ in parts_h[w.host]:
+                p.chunks.append(outs[off:off + t])
+                off += t
+                if p.done_rows() == p.fresh:
+                    self._finalize(st, p, results)
 
     def _retire(self, st: "_DrainState", results, x, parts, n_real):
         """Fence on the wave's device computation, scatter rows back to

@@ -206,6 +206,28 @@ def cache_specs(cfg: ModelConfig, shape: InputShape, ax: MeshAxes,
     return {k: spec_tree(v) for k, v in caches_sds.items()}
 
 
+def wave_window_specs(ax: MeshAxes) -> dict:
+    """Specs for one HOST WINDOW of a placed synthesis wave (the
+    multi-host serving path — ``serve/topology.py``).
+
+    The window's image-shaped tensors (x / ε / noise, batch-leading 4-D)
+    and its conditioning rows shard their batch dim over the host's data
+    axes — a window is granule-rounded so this always divides — while the
+    wave-resident scalar table (the (4, B_wave) per-row ᾱ_t/ᾱ_prev/s/
+    active stack) and the wave-wide guidance vector are REPLICATED: every
+    device reads its rows' scalar slots through the ``cfg_fuse``
+    ``row_offset`` indexing instead of resharding a sliced copy of the
+    table per host per step."""
+    D = ax.all_data
+    return {
+        "window": P(D, None, None, None),    # x / eps_c / eps_u / noise
+        "cond": P(D, None),                  # window conditioning rows
+        "row_keys": P(D),                    # per-row noise keys
+        "scalar_table": P(None, None),       # wave-resident (4, B_wave)
+        "guidance": P(None),                 # wave-wide (B_wave,)
+    }
+
+
 def to_shardings(spec_tree, mesh):
     return jax.tree.map(
         lambda s: NamedSharding(mesh, s), spec_tree,

@@ -32,6 +32,21 @@ def test_dryrun_subprocess_single_pair(tmp_path, arch, shape):
     assert res["roofline"]["t_compute"] < 1e-3
 
 
+def test_train_launcher_smoke_in_process(monkeypatch, capsys):
+    """The production training launcher end to end on a 1x1 host mesh:
+    builds the mesh, shards the train state per the partition rules, and
+    steps the jitted train step (in-process — unlike the dry-run it has
+    no device-count requirement, so the tier-1 coverage gate sees it)."""
+    from repro.launch import train as launch_train
+    monkeypatch.setattr(sys, "argv", [
+        "train", "--arch", "xlstm-125m", "--smoke", "--steps", "2",
+        "--batch", "2", "--seq", "16"])
+    launch_train.main()
+    out = capsys.readouterr().out
+    assert "step    0 loss" in out
+    assert "2 steps in" in out
+
+
 def test_dryrun_records_documented_skip(tmp_path):
     out = tmp_path / "dr.json"
     proc = subprocess.run(

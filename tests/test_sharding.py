@@ -80,3 +80,58 @@ def test_norm_scales_replicated():
     for path, spec in tree_paths(param_specs(sds, AX)):
         if path.endswith("norm1/scale") or path.endswith("final_norm/scale"):
             assert all(e is None for e in spec) or len(spec) == 0
+
+
+# ---------------------------------------------------------------------------
+# mesh construction: fail fast with actionable errors off-TPU
+# ---------------------------------------------------------------------------
+
+def test_production_mesh_refuses_undersized_device_set():
+    """Off-TPU the production shapes must refuse up front with a message
+    naming the shortfall and the local alternatives — not crash deep
+    inside jax.make_mesh."""
+    from repro.launch.mesh import make_production_mesh, make_serving_mesh
+    if jax.device_count() >= 256:          # pragma: no cover - TPU pod only
+        pytest.skip("enough devices for the production mesh")
+    with pytest.raises(ValueError, match="devices.*make_host_mesh"):
+        make_production_mesh()
+    with pytest.raises(ValueError, match="devices"):
+        make_production_mesh(multi_pod=True)
+    with pytest.raises(ValueError, match="devices"):
+        make_serving_mesh(hosts=2, data=256, model=16)
+
+
+def test_serving_mesh_and_host_submesh():
+    from repro.launch.mesh import (host_submesh, make_host_mesh,
+                                   make_serving_mesh, mesh_axes)
+    mesh = make_serving_mesh(hosts=1, data=jax.device_count(), model=1)
+    assert mesh.axis_names == ("hosts", "data", "model")
+    # the hosts axis is placement, never a sharding axis
+    ax = mesh_axes(mesh)
+    assert ax.data == ("data",) and ax.model == "model"
+    sub = host_submesh(mesh, 0)
+    assert sub.axis_names == ("data", "model")
+    assert sub.devices.size == mesh.devices.size      # 1 host owns all
+    with pytest.raises(ValueError, match="out of range"):
+        host_submesh(mesh, 1)
+    with pytest.raises(ValueError, match="hosts"):
+        host_submesh(make_host_mesh(1, 1), 0)
+    with pytest.raises(ValueError, match=">= 1"):
+        make_serving_mesh(hosts=0)
+
+
+def test_wave_window_specs_shard_rows_replicate_scalar_table():
+    """The row-window sharding rule: a host window's image rows shard
+    over the host data axes; the wave-resident scalar table and the
+    wave-wide guidance vector replicate (the kernel's row_offset
+    indexing replaces per-host resharding)."""
+    from repro.sharding.rules import wave_window_specs
+    specs = wave_window_specs(AX)
+    assert specs["window"] == P("data", None, None, None)
+    assert specs["cond"] == P("data", None)
+    assert specs["row_keys"] == P("data")
+    assert all(e is None for e in specs["scalar_table"])
+    assert all(e is None for e in specs["guidance"])
+    # multi-axis data meshes fold every data axis into the batch dim
+    multi = wave_window_specs(MeshAxes(data=("pod", "data"), model="model"))
+    assert multi["window"][0] == ("pod", "data")

@@ -1,0 +1,477 @@
+"""Topology-aware serving: HostTopology/WavePlacement and the placed
+multi-host drain.
+
+The load-bearing contract is PLACEMENT INVARIANCE: row noise is keyed by
+request identity, so D_syn is bit-identical regardless of host count,
+placement, packing mode (grouped/ragged/compacted), or arrival order —
+a topology only decides WHERE a row is computed, never what it is.  The
+oracle throughout is the plain single-host ragged engine.  The second
+acceptance property is that any H>1 topology drives the segment-offset
+``cfg_fuse`` row-window path (``row_offset = window.offset``) against
+one wave-resident scalar table.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ImportError:            # pragma: no cover - CI installs it
+    from _hypothesis_fallback import given, settings, st
+
+from repro.configs.oscar import DiffusionConfig
+from repro.diffusion.dit import init_dit
+from repro.diffusion.schedule import make_schedule
+from repro.serve import (HostTopology, HostWindow, SynthesisEngine,
+                         SynthesisService, SynthesisStore, WavePlacement)
+
+DC = DiffusionConfig(d_model=32, num_layers=1, num_heads=2,
+                     sample_timesteps=3, train_timesteps=16)
+H = 8
+
+_DM = None
+
+
+def _dm():
+    global _DM
+    if _DM is None:
+        key = jax.random.PRNGKey(0)
+        params = init_dit(key, DC, H, 3)
+        leaves, treedef = jax.tree.flatten(params)
+        keys = jax.random.split(jax.random.PRNGKey(1), len(leaves))
+        params = jax.tree.unflatten(treedef, [
+            a + 0.05 * jax.random.normal(k, a.shape, a.dtype)
+            for a, k in zip(leaves, keys)])
+        _DM = params, make_schedule(DC.train_timesteps, DC.schedule)
+    return _DM
+
+
+def _enc(seed):
+    e = np.random.default_rng(seed).normal(size=(DC.cond_dim,))
+    return (e / np.linalg.norm(e)).astype(np.float32)
+
+
+def _engine(**kw):
+    params, sched = _dm()
+    kw.setdefault("image_size", H)
+    kw.setdefault("wave_size", 8)
+    return SynthesisEngine(params, DC, sched, **kw)
+
+
+def _mixed_requests(seed):
+    """A random mixed (guidance, steps) classifier-free request set."""
+    rng = np.random.default_rng(seed)
+    subs = []
+    for i in range(int(rng.integers(1, 5))):
+        subs.append((_enc(100 * seed + i), int(rng.integers(0, 3)),
+                     int(rng.integers(1, 6)),
+                     float(rng.choice([1.5, 4.0, 7.5])),
+                     int(rng.integers(1, 4))))
+    return subs
+
+
+def _run(subs, key, **kw):
+    eng = _engine(**kw)
+    rids = [eng.submit(e, c, n, guidance=g, num_steps=s)
+            for e, c, n, g, s in subs]
+    out = eng.run(key)
+    return [out[r] for r in rids], eng
+
+
+# ---------------------------------------------------------------------------
+# HostTopology / WavePlacement units
+# ---------------------------------------------------------------------------
+
+def test_simulated_topology_shape():
+    t = HostTopology.simulated(3, granule=4)
+    assert t.num_hosts == 3
+    assert t.device_counts == (1, 1, 1) and t.granules == (4, 4, 4)
+    assert [t.assign(r) for r in range(5)] == [0, 1, 2, 0, 1]
+    assert t.wave_quotas(24) == (8, 8, 8)
+    # shares never drop below one granule
+    assert t.wave_quotas(2) == (4, 4, 4)
+
+
+@pytest.mark.parametrize("bad", [0, -1, True, "2"])
+def test_simulated_topology_rejects_bad_host_count(bad):
+    with pytest.raises(ValueError, match="hosts"):
+        HostTopology.simulated(bad)
+
+
+def test_topology_validates_fields():
+    with pytest.raises(ValueError, match="at least one host"):
+        HostTopology(device_counts=(), granules=())
+    with pytest.raises(ValueError, match="granules"):
+        HostTopology(device_counts=(1, 1), granules=(1,))
+    with pytest.raises(ValueError, match=">= 1"):
+        HostTopology(device_counts=(1, 0), granules=(1, 1))
+
+
+def test_topology_from_mesh_partitions_data_axis():
+    from repro.launch.mesh import make_host_mesh
+    mesh = make_host_mesh(jax.device_count(), 1)
+    t = HostTopology.from_mesh(mesh, 1)
+    assert t.num_hosts == 1 and t.mesh is mesh
+    # more hosts than data-parallel devices: actionable refusal
+    with pytest.raises(ValueError, match="hosts must divide"):
+        HostTopology.from_mesh(mesh, 2)
+    with pytest.raises(ValueError, match="hosts"):
+        HostTopology.from_mesh(mesh)           # host count required
+
+
+def test_wave_placement_windows_tile_the_wave():
+    p = WavePlacement.plan([3, 0, 5], granules=[4, 4, 4])
+    assert [w.host for w in p.windows] == [0, 2]   # empty host: no window
+    assert [(w.offset, w.rows, w.real) for w in p.windows] == \
+        [(0, 4, 3), (4, 8, 5)]
+    assert p.total_rows == 12 and p.real_rows == 8 and p.padded == 4
+    with pytest.raises(ValueError, match="granules"):
+        WavePlacement.plan([1, 2], granules=[1])
+
+
+def test_wave_placement_rejects_gapped_windows():
+    with pytest.raises(ValueError, match="contiguously"):
+        WavePlacement(windows=(HostWindow(0, 0, 4, 4),
+                               HostWindow(1, 8, 4, 4)))
+    with pytest.raises(ValueError, match="real"):
+        HostWindow(0, 0, 4, 5)
+
+
+# ---------------------------------------------------------------------------
+# placement invariance: the acceptance property
+# ---------------------------------------------------------------------------
+
+@given(seed=st.integers(0, 6), hosts=st.sampled_from([1, 2, 4]),
+       mode=st.sampled_from(["grouped", "ragged", "compacted"]))
+@settings(max_examples=12, deadline=None)
+def test_placed_drain_bit_identical_to_single_host_fuzzed(seed, hosts, mode):
+    """Property: ANY WavePlacement of a random mixed (guidance, steps)
+    request set over H ∈ {1, 2, 4} simulated hosts — grouped, ragged, or
+    compacted — is bit-identical to the plain single-host ragged engine
+    on the same requests and drain key."""
+    subs = _mixed_requests(seed)
+    key = jax.random.PRNGKey(1000 + seed)
+    oracle, _ = _run(subs, key, ragged=True)
+    kw = {"grouped": dict(ragged=False), "ragged": dict(ragged=True),
+          "compacted": dict(compaction="full")}[mode]
+    outs, eng = _run(subs, key, hosts=hosts, **kw)
+    assert eng.topology is not None and eng.topology.num_hosts == hosts
+    for a, b in zip(oracle, outs):
+        assert np.array_equal(a, b)
+
+
+@given(seed=st.integers(0, 4), hosts=st.sampled_from([2, 4]))
+@settings(max_examples=8, deadline=None)
+def test_placed_streaming_matches_upfront_trace_fuzzed(seed, hosts):
+    """Property: requests streamed into a placed drain mid-flight land on
+    the same hosts (identity routing) and produce the same bits as the
+    whole trace submitted up front."""
+    subs = _mixed_requests(seed) + _mixed_requests(seed + 50)
+    key = jax.random.PRNGKey(2000 + seed)
+    upfront, _ = _run(subs, key, hosts=hosts, ragged=True)
+
+    params, sched = _dm()
+    svc = SynthesisService(_engine(ragged=True, hosts=hosts))
+    half = max(len(subs) // 2, 1)
+    futs = [svc.submit(e, c, n, guidance=g, num_steps=s)
+            for e, c, n, g, s in subs[:half]]
+    trace = list(subs[half:])
+
+    def poll():
+        if not trace:
+            return False
+        e, c, n, g, s = trace.pop(0)
+        futs.append(svc.submit(e, c, n, guidance=g, num_steps=s))
+        return True
+
+    svc.drain(key, poll=poll)
+    for a, f in zip(upfront, futs):
+        assert np.array_equal(a, f.result())
+
+
+def test_warm_store_replay_crosses_topologies():
+    """A store warmed by a single-host ragged drain serves every
+    topology/mode with ZERO sampler calls, bit-identically — cache and
+    store keys do not know the serving layout."""
+    import tempfile
+    subs = _mixed_requests(3)
+    key = jax.random.PRNGKey(33)
+    root = tempfile.mkdtemp(prefix="dsyn_topo_")
+    warm = SynthesisService(_engine(ragged=True), store=SynthesisStore(root))
+    futs = [warm.submit(e, c, n, guidance=g, num_steps=s)
+            for e, c, n, g, s in subs]
+    outs = warm.gather(futs, key)
+    for hosts, kw in [(2, dict(ragged=True)), (4, dict(compaction="full")),
+                      (2, dict(ragged=False))]:
+        cold = SynthesisService(_engine(hosts=hosts, **kw),
+                                store=SynthesisStore(root))
+        fc = [cold.submit(e, c, n, guidance=g, num_steps=s)
+              for e, c, n, g, s in subs]
+        got = cold.gather(fc, key)
+        assert cold.stats["generated"] == 0, "warm store must skip sampling"
+        for a, b in zip(outs, got):
+            assert np.array_equal(a, b)
+
+
+def test_multi_host_drives_row_window_kernel_path(monkeypatch):
+    """Acceptance: under any H>1 topology the production cfg_fuse path is
+    the segment-offset row-window variant — every window reads the
+    wave-resident scalar table at ``row_offset = window.offset``, and at
+    least one window sits at a non-zero offset."""
+    from repro.kernels.cfg_fuse import ref as cfg_ref
+    offsets = []
+    real = cfg_ref.cfg_update_rowwise_windowed
+
+    def spy(x, eps_c, eps_u, s, ab_t, ab_prev, noise, active,
+            row_offset=0, eta=1.0):
+        offsets.append(int(row_offset))
+        return real(x, eps_c, eps_u, s, ab_t, ab_prev, noise, active,
+                    row_offset=row_offset, eta=eta)
+
+    monkeypatch.setattr(cfg_ref, "cfg_update_rowwise_windowed", spy)
+    # geometry unique to this test (wave_size 12, granule 3): the jitted
+    # window segments must TRACE here, not hit another test's executable
+    subs = [(_enc(900), 0, 5, 7.5, 3), (_enc(901), 1, 4, 1.5, 2),
+            (_enc(902), 2, 3, 4.0, 3)]
+    outs, eng = _run(subs, jax.random.PRNGKey(77), hosts=2, ragged=True,
+                     wave_size=12, granule=3)
+    assert offsets, "H=2 drain never hit the row-window cfg_fuse path"
+    assert any(o > 0 for o in offsets), \
+        f"all windows sampled at offset 0: {offsets}"
+    oracle, _ = _run(subs, jax.random.PRNGKey(77), ragged=True,
+                     wave_size=12, granule=3)
+    for a, b in zip(oracle, outs):
+        assert np.array_equal(a, b)
+
+
+def test_compacted_windows_drive_row_window_kernel_path(monkeypatch):
+    """Compaction composes with placement: each host's activation-sorted
+    window epoch-plans locally, and its SEGMENTS still read the wave
+    table through their window's non-zero row offset."""
+    from repro.kernels.cfg_fuse import ref as cfg_ref
+    offsets = []
+    real = cfg_ref.cfg_update_rowwise_windowed
+
+    def spy(x, eps_c, eps_u, s, ab_t, ab_prev, noise, active,
+            row_offset=0, eta=1.0):
+        offsets.append(int(row_offset))
+        return real(x, eps_c, eps_u, s, ab_t, ab_prev, noise, active,
+                    row_offset=row_offset, eta=eta)
+
+    monkeypatch.setattr(cfg_ref, "cfg_update_rowwise_windowed", spy)
+    subs = [(_enc(910), 0, 5, 7.5, 3), (_enc(911), 1, 5, 1.5, 1),
+            (_enc(912), 2, 4, 4.0, 2)]
+    outs, eng = _run(subs, jax.random.PRNGKey(78), hosts=2,
+                     compaction="full", wave_size=14, granule=7)
+    assert any(o > 0 for o in offsets), \
+        f"compacted windows never used a non-zero offset: {offsets}"
+    assert eng.stats["segments"] > 0
+    oracle, _ = _run(subs, jax.random.PRNGKey(78), ragged=True,
+                     wave_size=14, granule=7)
+    for a, b in zip(oracle, outs):
+        assert np.array_equal(a, b)
+
+
+def test_sample_cfg_window_matches_full_wave_slice():
+    """Sampler-level contract: a window of a ragged wave — window-local
+    conditioning/keys against the wave-wide (guidance, steps) scalar
+    table — reproduces the same rows of the full-wave scan bit-exactly,
+    at any offset."""
+    from repro.diffusion.sampler import sample_cfg_ragged, sample_cfg_window
+    params, sched = _dm()
+    B = 6
+    y = jax.random.normal(jax.random.PRNGKey(21), (B, DC.cond_dim))
+    rk = jax.vmap(lambda i: jax.random.fold_in(jax.random.PRNGKey(22), i))(
+        jnp.arange(B, dtype=jnp.uint32))
+    g = jnp.array([7.5, 1.5, 4.0, 7.5, 1.5, 4.0], jnp.float32)
+    steps = np.array([3, 2, 3, 1, 2, 3], np.int32)
+    full = sample_cfg_ragged(params, DC, sched, y, rk, g, steps,
+                             image_size=H)
+    for off, rows in [(0, 2), (2, 3), (5, 1), (0, 6)]:
+        win = sample_cfg_window(params, DC, sched, y[off:off + rows],
+                                rk[off:off + rows], g, steps,
+                                row_offset=off, image_size=H)
+        assert np.array_equal(np.asarray(full[off:off + rows]),
+                              np.asarray(win))
+    with pytest.raises(ValueError, match="out of range"):
+        sample_cfg_window(params, DC, sched, y[4:], rk[4:], g, steps,
+                          row_offset=5, image_size=H)
+    with pytest.raises(ValueError, match="rows"):
+        sample_cfg_window(params, DC, sched, y[:2], rk[:3], g, steps,
+                          row_offset=0, image_size=H)
+
+
+# ---------------------------------------------------------------------------
+# per-host observability
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("mode", [dict(ragged=True),
+                                  dict(compaction="full"),
+                                  dict(ragged=False)])
+def test_per_host_stats_sum_to_global_counters(mode):
+    subs = _mixed_requests(7)
+    svc = SynthesisService(_engine(hosts=2, **mode))
+    futs = [svc.submit(e, c, n, guidance=g, num_steps=s)
+            for e, c, n, g, s in subs]
+    svc.gather(futs, jax.random.PRNGKey(9))
+    s = svc.stats
+    assert s["hosts"] == 2 and len(s["per_host"]) == 2
+    per = s["per_host"]
+    assert sum(p["rows"] + p["padded"] for p in per) == s["generated"]
+    assert sum(p["padded"] for p in per) == s["padded"]
+    assert sum(p["row_iters_scheduled"] for p in per) \
+        == s["row_iters_scheduled"]
+    assert sum(p["row_iters_active"] for p in per) == s["row_iters_active"]
+    # identity routing fills the ingress queues before the first wave
+    assert sum(p["queue_depth_at_start"] for p in per) \
+        == sum(n for _, _, n, _, _ in subs)
+    # useful work is the workload's own step sum, host split or not
+    assert s["row_iters_active"] == sum(n * st_ for _, _, n, _, st_ in subs)
+
+
+def test_full_compaction_schedules_exactly_active_per_host():
+    subs = [(_enc(30), 0, 4, 7.5, 3), (_enc(31), 1, 4, 1.5, 2),
+            (_enc(32), 2, 4, 4.0, 1), (_enc(33), 0, 4, 1.5, 3)]
+    _, eng = _run(subs, jax.random.PRNGKey(41), hosts=2, compaction="full",
+                  granule=1, wave_size=8)
+    for p in eng.stats["per_host"]:
+        assert p["row_iters_scheduled"] == p["row_iters_active"]
+    assert eng.stats["padded"] == 0
+
+
+# ---------------------------------------------------------------------------
+# knob threading + opt-in contract
+# ---------------------------------------------------------------------------
+
+def test_topology_opt_in_contract():
+    eng = _engine()
+    assert eng.topology is None
+    SynthesisService(eng, hosts=2)
+    assert eng.topology is not None and eng.topology.num_hosts == 2
+    # opt-in only: constructing without the knob leaves it alone
+    SynthesisService(eng)
+    assert eng.topology.num_hosts == 2
+    with pytest.raises(ValueError, match="topology"):
+        eng.set_topology(True)
+    t = HostTopology.simulated(3)
+    eng2 = _engine(topology=t)
+    assert eng2.topology is t
+
+
+def test_reapplied_topology_keeps_per_host_stats():
+    """A shared engine's opt_in re-threads the same hosts= knob on every
+    entry point; an EQUAL topology must be a no-op, not a counter wipe —
+    the per-host sums stay equal to the global counters across runs."""
+    eng = _engine(hosts=2, ragged=True)
+    subs = _mixed_requests(11)
+    for e, c, n, g, s in subs:
+        eng.submit(e, c, n, guidance=g, num_steps=s)
+    eng.run(jax.random.PRNGKey(1))
+    rows_before = [p["rows"] for p in eng.stats["per_host"]]
+    assert sum(rows_before) > 0
+    eng.opt_in(ragged=True, hosts=2)        # a second entry point
+    SynthesisService(eng, hosts=2)          # and a service wrap
+    assert [p["rows"] for p in eng.stats["per_host"]] == rows_before
+    assert sum(p["rows"] + p["padded"] for p in eng.stats["per_host"]) \
+        == eng.stats["generated"]
+
+
+def test_mesh_backed_topology_places_windows_on_host_submesh():
+    """A topology derived from a serving mesh routes every window's
+    tensors through the row-window sharding rule (wave_window_specs on
+    the host submesh) — and the placed outputs still match the plain
+    ragged oracle bit for bit."""
+    from repro.launch.mesh import make_serving_mesh
+    mesh = make_serving_mesh(hosts=1, data=jax.device_count(), model=1)
+    subs = _mixed_requests(13)
+    key = jax.random.PRNGKey(55)
+    oracle, _ = _run(subs, key, ragged=True)
+    outs, eng = _run(subs, key, ragged=True, mesh=mesh, hosts=1)
+    assert eng.topology.mesh is mesh
+    sub = eng.topology.host_mesh(0)
+    assert sub.axis_names == ("data", "model")
+    sh = eng._window_shardings(0)
+    assert sh is not None and sh["y"].mesh.axis_names == ("data", "model")
+    for a, b in zip(oracle, outs):
+        assert np.array_equal(a, b)
+    # a plain (data, model) mesh partitions its leading data axis
+    from repro.launch.mesh import make_host_mesh
+    plain = HostTopology.from_mesh(make_host_mesh(jax.device_count(), 1), 1)
+    assert plain.host_mesh(0).axis_names == ("data", "model")
+    with pytest.raises(ValueError, match="out of range"):
+        plain.host_mesh(1)
+    # simulated topologies have no meshes to place on
+    assert HostTopology.simulated(2).host_mesh(0) is None
+
+
+def test_run_paths_thread_hosts_knob():
+    from repro.core.oscar import synthesize
+    params, sched = _dm()
+    enc = np.stack([np.stack([_enc(60 + c) for c in range(3)])])
+    present = np.ones((1, 3), bool)
+    eng = _engine()
+    sx, sy = synthesize(jax.random.PRNGKey(0), params, DC, sched, enc,
+                        present, 2, image_size=H, engine=eng, ragged=True,
+                        hosts=2)
+    assert eng.topology is not None and eng.topology.num_hosts == 2
+    assert sx.shape == (6, H, H, 3)
+    assert eng.stats["per_host"][0]["rows"] + \
+        eng.stats["per_host"][1]["rows"] == 6
+
+
+def test_clf_and_uncond_groups_keep_single_host_path():
+    """Topology shards classifier-free traffic only; clf/uncond groups
+    still serve correctly (single-host waves) next to placed cfg waves."""
+    eng = _engine(hosts=2, ragged=True)
+    rc = eng.submit(_enc(20), 0, 3, guidance=7.5, num_steps=3)
+    rl = eng.submit_classifier_guided(
+        lambda x, labels: -jnp.sum(x ** 2, axis=(1, 2, 3)), 1, 3,
+        group="client0")
+    ru = eng.submit_unconditional(3)
+    out = eng.run(jax.random.PRNGKey(6))
+    assert out[rc].shape == out[rl].shape == out[ru].shape == (3, H, H, 3)
+    # only the cfg rows land in the per-host breakdown
+    assert sum(p["rows"] for p in eng.stats["per_host"]) == 3
+
+
+def test_cache_topup_under_topology():
+    """(encoding-hash, guidance, steps) caching is unchanged under a
+    topology: resubmission hits, larger counts top up the cached prefix,
+    2-D encodings stay single entries."""
+    eng = _engine(hosts=2, ragged=True)
+    enc = _enc(300)
+    ra = eng.submit(enc, 0, 4, guidance=7.5)
+    first = eng.run(jax.random.PRNGKey(3))[ra]
+    waves = eng.stats["waves"]
+    rb = eng.submit(enc, 0, 4, guidance=7.5)
+    assert np.array_equal(eng.run(jax.random.PRNGKey(99))[rb], first)
+    assert eng.stats["waves"] == waves             # pure cache hit
+    rc = eng.submit(enc, 0, 7, guidance=7.5)
+    more = eng.run(jax.random.PRNGKey(4))[rc]
+    assert more.shape[0] == 7 and np.array_equal(more[:4], first)
+    mat = np.stack([_enc(310 + i) for i in range(4)])
+    rd = eng.submit(mat, 0, guidance=1.5, num_steps=2)
+    out = eng.run(jax.random.PRNGKey(5))[rd]
+    assert out.shape == (4, H, H, 3)
+
+
+def test_per_host_store_handles_merge_into_one_root():
+    """H hosts flushing concurrently into one store root is the
+    tombstoned-manifest-merge contract: every host's handle keeps the
+    entries the others flushed, and a cold reader serves them all."""
+    import tempfile
+    root = tempfile.mkdtemp(prefix="dsyn_hosts_")
+    handles = [SynthesisStore(root) for _ in range(3)]    # one per host
+    rows = {h: np.full((2, 4, 4, 3), float(h), np.float32)
+            for h in range(3)}
+    keys = {h: (f"enc{h}", 7.5, 3) for h in range(3)}
+    for h, store in enumerate(handles):
+        store.put(keys[h], rows[h])
+    for store in handles:                                  # any flush order
+        store.flush()
+    cold = SynthesisStore(root)
+    assert len(cold) == 3
+    for h in range(3):
+        assert np.array_equal(cold.get(keys[h]), rows[h])
