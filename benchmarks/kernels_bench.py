@@ -1,8 +1,14 @@
 """Kernel micro-benchmarks: wall time of the Pallas interpret path vs the
 jnp oracle (CPU — correctness/parity harness; TPU timings are the perf
-story in EXPERIMENTS.md §Perf, derived structurally from the dry-run)."""
+story in EXPERIMENTS.md §Perf, derived structurally from the dry-run).
+
+``--only denoiser`` runs just the fused-vs-naive denoiser block — the CI
+parity smoke: it ASSERTS ``dit_apply(use_pallas=True)`` matches the naive
+reference within tolerance before timing anything.
+"""
 from __future__ import annotations
 
+import argparse
 import time
 
 import jax
@@ -10,10 +16,12 @@ import jax.numpy as jnp
 
 from benchmarks.common import print_table, save_result
 
+DENOISER_TOL = 2e-5
+
 
 def _time(fn, *args, iters=5):
-    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
-        jax.block_until_ready(fn(*args))
+    out = fn(*args)                    # warm up / compile exactly once
+    jax.block_until_ready(out)         # works on arrays and pytrees alike
     t0 = time.perf_counter()
     for _ in range(iters):
         out = fn(*args)
@@ -21,7 +29,17 @@ def _time(fn, *args, iters=5):
     return (time.perf_counter() - t0) / iters * 1e6
 
 
-def run():
+def _perturb(params, key, scale=0.05):
+    """adaLN-zero init zeroes the output head — perturb so the denoiser
+    block's parity assert is not vacuously 0 == 0."""
+    leaves, treedef = jax.tree.flatten(params)
+    keys = jax.random.split(key, len(leaves))
+    return jax.tree.unflatten(treedef, [
+        a + scale * jax.random.normal(k, a.shape, a.dtype)
+        for a, k in zip(leaves, keys)])
+
+
+def run_micro():
     key = jax.random.PRNGKey(0)
     rows = []
 
@@ -49,6 +67,17 @@ def run():
                  "us_per_call": _time(jax.jit(rn_ref.rmsnorm), x, s),
                  "derived": "same"})
 
+    from repro.kernels.adaln_norm import ops as an_ops, ref as an_ref
+    xa = jax.random.normal(key, (64, 257, 128))
+    sa = jax.random.normal(key, (64, 128)) * 0.1
+    ba = jax.random.normal(key, (64, 128)) * 0.1
+    rows.append({"name": "adaln_norm_interp",
+                 "us_per_call": _time(an_ops.adaln_norm, xa, sa, ba),
+                 "derived": "(64,257,128)"})
+    rows.append({"name": "adaln_norm_ref_jit",
+                 "us_per_call": _time(jax.jit(an_ref.adaln_norm), xa, sa, ba),
+                 "derived": "same"})
+
     from repro.kernels.cfg_fuse import ops as cfg_ops, ref as cfg_ref
     shape = (64, 16, 16, 3)
     ks = jax.random.split(key, 4)
@@ -63,17 +92,70 @@ def run():
                      jax.jit(lambda *a: cfg_ref.cfg_update(*a[:3], 7.5, 0.3, 0.5, a[3])),
                      *xs),
                  "derived": "same"})
+    return rows
 
+
+def run_denoiser():
+    """Fused vs naive ``dit_apply`` block: parity gate, then wall-clock.
+
+    CPU wall-clock compares the interpret-mode harness against the jitted
+    naive denoiser — a correctness/overhead check, not the speed story
+    (that is ``roofline.py``'s denoiser section).
+    """
+    from repro.configs.oscar import DiffusionConfig
+    from repro.diffusion.dit import dit_apply, init_dit
+
+    dc = DiffusionConfig()                           # paper-scale DiT
+    key = jax.random.PRNGKey(0)
+    B, img, C = 8, 16, 3
+    params = _perturb(init_dit(key, dc, img, C), jax.random.fold_in(key, 1))
+    x = jax.random.normal(jax.random.fold_in(key, 2), (B, img, img, C))
+    t = jax.random.randint(jax.random.fold_in(key, 3), (B,), 0,
+                           dc.train_timesteps)
+    y = jax.random.normal(jax.random.fold_in(key, 4), (B, dc.cond_dim))
+
+    naive = jax.jit(lambda x, t, y: dit_apply(params, dc, x, t, y))
+    fused = jax.jit(lambda x, t, y: dit_apply(params, dc, x, t, y,
+                                              use_pallas=True))
+    a, b = naive(x, t, y), fused(x, t, y)
+    err = float(jnp.max(jnp.abs(a - b)))
+    ref_scale = float(jnp.max(jnp.abs(a)))
+    assert ref_scale > 1e-3, "parity check is vacuous (zero denoiser output)"
+    assert err < DENOISER_TOL, (
+        f"fused denoiser parity FAILED: max|Δ|={err:.2e} >= {DENOISER_TOL}")
+    print(f"denoiser parity OK: max|Δ|={err:.2e} (tol {DENOISER_TOL}, "
+          f"ref scale {ref_scale:.2f})")
+
+    shape = f"B={B} {img}px d={dc.d_model} L={dc.num_layers}"
+    return [
+        {"name": "dit_naive_jit", "us_per_call": _time(naive, x, t, y),
+         "derived": shape},
+        {"name": "dit_fused_interp", "us_per_call": _time(fused, x, t, y),
+         "derived": "same (parity asserted)"},
+    ]
+
+
+def run(only: str = "all"):
+    rows = []
+    if only in ("all", "micro"):
+        rows += run_micro()
+    if only in ("all", "denoiser"):
+        rows += run_denoiser()
     print_table("Kernel microbench (CPU; Pallas interpret vs jnp oracle)",
                 rows, ["name", "us_per_call", "derived"])
     for r in rows:
         print(f"{r['name']},{r['us_per_call']:.1f},{r['derived']}")
-    save_result("kernels_bench", rows)
+    if only == "all":
+        save_result("kernels_bench", rows)
     return rows
 
 
-def main():
-    run()
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--only", choices=["all", "micro", "denoiser"],
+                    default="all")
+    args = ap.parse_args(argv)
+    run(args.only)
 
 
 if __name__ == "__main__":

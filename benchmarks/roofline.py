@@ -1,9 +1,14 @@
 """§Roofline report: per (arch × shape × mesh) compute/memory/collective
-terms from the dry-run compile cache (benchmarks/results/dryrun*.json).
+terms from the dry-run compile cache (benchmarks/results/dryrun*.json),
+plus the DENOISER roofline — ``dit_apply`` before vs after Pallas fusion
+(``hlo_analysis.denoiser_cost``), the position the fused-denoiser PR
+moves.
 
-The cache is produced by ``PYTHONPATH=src python -m repro.launch.dryrun
---all [--multi-pod]`` (a subprocess because it forces 512 host devices).
-This module only aggregates — it never imports repro.launch.dryrun.
+The dry-run cache is produced by ``PYTHONPATH=src python -m
+repro.launch.dryrun --all [--multi-pod]`` (a subprocess because it forces
+512 host devices).  This module only aggregates — it never imports
+repro.launch.dryrun.  The denoiser section needs no cache: it is the
+structural model evaluated at serving shapes.
 """
 from __future__ import annotations
 
@@ -64,9 +69,43 @@ def run(pod: str = "1pod"):
     return rows
 
 
+def run_denoiser(batch: int = 256):
+    """Denoiser roofline before/after fusion at serving shapes.
+
+    ``batch=256`` is one paper-scale classifier-free wave (128 rows,
+    cond/uncond stacked).  Shapes: the repo's scaled 16 px DiT (S=17) and
+    the same config at the paper's 224 px (S=3137), where the naive
+    path's materialised (B, h, S², ) attention dominates HBM traffic.
+    """
+    from repro.configs.oscar import DiffusionConfig
+    from repro.launch.hlo_analysis import (denoiser_cost, dominant_term,
+                                           roofline_terms)
+    dc = DiffusionConfig()
+    rows = []
+    for image_size in (16, 224):
+        for variant, kw in (("naive", {}), ("fused", dict(fused=True)),
+                            ("fused_bf16", dict(fused=True, bf16=True))):
+            c = denoiser_cost(dc, batch, image_size, **kw)
+            t = roofline_terms(c["flops"], c["bytes"], 0.0)
+            rows.append({
+                "shape": f"{image_size}px_B{batch}", "variant": variant,
+                "gflops": c["flops"] / 1e9, "mbytes": c["bytes"] / 1e6,
+                "intensity": c["intensity"],
+                "t_compute_us": t["t_compute"] * 1e6,
+                "t_memory_us": t["t_memory"] * 1e6,
+                "bottleneck": dominant_term(t),
+            })
+    print_table(f"Denoiser roofline (one dit_apply call, B={batch})", rows,
+                ["shape", "variant", "gflops", "mbytes", "intensity",
+                 "t_compute_us", "t_memory_us", "bottleneck"])
+    save_result("roofline_denoiser", rows)
+    return rows
+
+
 def main():
     run("1pod")
     run("2pod")
+    run_denoiser()
 
 
 if __name__ == "__main__":

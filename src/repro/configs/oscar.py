@@ -48,6 +48,15 @@ class DiffusionConfig:
     batch_size: int = 128
     lr: float = 3e-4
     schedule: str = "cosine"
+    # Fused denoiser (opt-in): route dit_apply's attention through the
+    # Pallas flash-attention kernel and its three LN+modulation sites
+    # through kernels/adaln_norm.  fp32 fused output matches the naive
+    # denoiser within float tolerance (online softmax reorders sums);
+    # the default (False) path stays bit-exact with prior releases.
+    use_pallas: bool = False
+    # Under the fused path only: run the QKV/MLP matmuls with bf16
+    # activations and fp32 accumulation (MXU-native mixed precision).
+    bf16_act: bool = False
 
 
 @dataclass(frozen=True)

@@ -75,6 +75,27 @@ def _dense(p, x):
     return y
 
 
+def _dense_act(p, x, bf16: bool):
+    """_dense with optional bf16 activations/weights, fp32 accumulation."""
+    if not bf16:
+        return _dense(p, x)
+    y = jax.lax.dot_general(
+        x.astype(jnp.bfloat16), p["w"].astype(jnp.bfloat16),
+        (((x.ndim - 1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    if "b" in p:
+        y = y + p["b"]
+    return y
+
+
+def _modulated_ln(x, scale, shift, fused: bool):
+    """One DiT modulation site: LayerNorm + adaLN ``(1+scale)·x̂+shift``."""
+    if fused:
+        from repro.kernels.adaln_norm import ops as an_ops
+        return an_ops.adaln_norm(x, scale, shift)
+    return _ln(x) * (1 + scale[:, None]) + shift[:, None]
+
+
 def patchify(x, p: int):
     B, H, W, C = x.shape
     x = x.reshape(B, H // p, p, W // p, p, C)
@@ -89,9 +110,19 @@ def unpatchify(tok, p: int, H: int, W: int, C: int):
     return x.reshape(B, H, W, C)
 
 
-def dit_apply(params, dc: DiffusionConfig, x_t, t, y, *, heads: int | None = None):
+def dit_apply(params, dc: DiffusionConfig, x_t, t, y, *,
+              heads: int | None = None, use_pallas: bool = False):
     """ε-prediction.  x_t: (B,H,W,C); t: (B,) int32; y: (B, cond_dim) or
-    None (→ null embedding Ø)."""
+    None (→ null embedding Ø).
+
+    ``use_pallas`` (or ``dc.use_pallas``) swaps the attention einsum chain
+    for ``kernels.flash_attention`` (non-causal, S = n_tok+1) and the three
+    LN+modulation sites for ``kernels.adaln_norm``; fp32 output matches the
+    naive path within float tolerance.  ``dc.bf16_act`` additionally runs
+    the QKV/MLP matmuls with bf16 activations + fp32 accumulation (fused
+    path only).  The default path is untouched and stays bit-exact."""
+    fused = use_pallas or getattr(dc, "use_pallas", False)
+    bf16 = fused and getattr(dc, "bf16_act", False)
     B, H, W, C = x_t.shape
     p = dc.patch
     nh = heads or dc.num_heads
@@ -112,19 +143,24 @@ def dit_apply(params, dc: DiffusionConfig, x_t, t, y, *, heads: int | None = Non
     for blk in params["blocks"]:
         mod = _dense(blk["mod"], c)                       # (B, 6d)
         sa_shift, sa_scale, sa_gate, ml_shift, ml_scale, ml_gate = jnp.split(mod, 6, -1)
-        h = _ln(tok) * (1 + sa_scale[:, None]) + sa_shift[:, None]
-        qkv = _dense(blk["wqkv"], h).reshape(B, -1, 3, nh, hd)
+        h = _modulated_ln(tok, sa_scale, sa_shift, fused)
+        qkv = _dense_act(blk["wqkv"], h, bf16).reshape(B, -1, 3, nh, hd)
         q, k, v = qkv[:, :, 0], qkv[:, :, 1], qkv[:, :, 2]
-        logits = jnp.einsum("bqhd,bkhd->bhqk", q, k) * hd ** -0.5
-        attn = jax.nn.softmax(logits, axis=-1)
-        o = jnp.einsum("bhqk,bkhd->bqhd", attn, v).reshape(B, -1, d)
-        tok = tok + sa_gate[:, None] * _dense(blk["wo"], o)
-        h = _ln(tok) * (1 + ml_scale[:, None]) + ml_shift[:, None]
-        h = _dense(blk["w_down"], jax.nn.gelu(_dense(blk["w_up"], h)))
+        if fused:
+            from repro.kernels.flash_attention import ops as fa_ops
+            o = fa_ops.flash_attention(q, k, v, causal=False).reshape(B, -1, d)
+        else:
+            logits = jnp.einsum("bqhd,bkhd->bhqk", q, k) * hd ** -0.5
+            attn = jax.nn.softmax(logits, axis=-1)
+            o = jnp.einsum("bhqk,bkhd->bqhd", attn, v).reshape(B, -1, d)
+        tok = tok + sa_gate[:, None] * _dense_act(blk["wo"], o, bf16)
+        h = _modulated_ln(tok, ml_scale, ml_shift, fused)
+        h = _dense_act(blk["w_down"],
+                       jax.nn.gelu(_dense_act(blk["w_up"], h, bf16)), bf16)
         tok = tok + ml_gate[:, None] * h
 
     tok = tok[:, 1:]   # drop the conditioning token
     shift, scale = jnp.split(_dense(params["out_mod"], c), 2, -1)
-    tok = _ln(tok) * (1 + scale[:, None]) + shift[:, None]
+    tok = _modulated_ln(tok, scale, shift, fused)
     eps = _dense(params["patch_out"], tok)
     return unpatchify(eps, p, H, W, C)

@@ -83,7 +83,8 @@ class GuidanceStrategy:
     def prepare(self, params, dc: DiffusionConfig):
         return None
 
-    def eps(self, params, dc: DiffusionConfig, x, t, ab_t, aux):
+    def eps(self, params, dc: DiffusionConfig, x, t, ab_t, aux,
+            use_pallas: bool = False):
         raise NotImplementedError
 
 
@@ -103,11 +104,11 @@ class ClassifierFree(GuidanceStrategy):
         null = jnp.broadcast_to(params["null_y"], (B, dc.cond_dim))
         return jnp.concatenate([self.y, null], axis=0)
 
-    def eps(self, params, dc, x, t, ab_t, y2):
+    def eps(self, params, dc, x, t, ab_t, y2, use_pallas=False):
         B = x.shape[0]
         x2 = jnp.concatenate([x, x], axis=0)
         t2 = jnp.full((2 * B,), t, jnp.int32)
-        eps2 = dit_apply(params, dc, x2, t2, y2)
+        eps2 = dit_apply(params, dc, x2, t2, y2, use_pallas=use_pallas)
         return eps2[:B], eps2[B:], self.scale
 
 
@@ -122,10 +123,11 @@ class ClassifierGuided(GuidanceStrategy):
     def batch(self) -> int:
         return self.labels.shape[0]
 
-    def eps(self, params, dc, x, t, ab_t, aux):
+    def eps(self, params, dc, x, t, ab_t, aux, use_pallas=False):
         B = x.shape[0]
         tb = jnp.full((B,), t, jnp.int32)
-        eps_u = dit_apply(params, dc, x, tb, None)      # unconditional score
+        eps_u = dit_apply(params, dc, x, tb, None,      # unconditional score
+                          use_pallas=use_pallas)
         sigma_t = jnp.sqrt(1.0 - ab_t)
 
         # classifier gradient taken at the x̂₀ prediction; the ∂x̂₀/∂x_t
@@ -151,10 +153,11 @@ class Unconditional(GuidanceStrategy):
     def batch(self) -> int:
         return self.num
 
-    def eps(self, params, dc, x, t, ab_t, aux):
+    def eps(self, params, dc, x, t, ab_t, aux, use_pallas=False):
         B = x.shape[0]
         tb = jnp.full((B,), t, jnp.int32)
-        return dit_apply(params, dc, x, tb, None), None, 0.0
+        return (dit_apply(params, dc, x, tb, None, use_pallas=use_pallas),
+                None, 0.0)
 
 
 def reverse_sample(params, dc: DiffusionConfig, sched: NoiseSchedule,
@@ -181,7 +184,8 @@ def reverse_sample(params, dc: DiffusionConfig, sched: NoiseSchedule,
         x, key = carry
         t, abt, abp = inp
         key, kn = jax.random.split(key)
-        eps_c, eps_u, s = strategy.eps(params, dc, x, t, abt, aux)
+        eps_c, eps_u, s = strategy.eps(params, dc, x, t, abt, aux,
+                                       use_pallas=use_pallas)
         noise = jax.random.normal(kn, x.shape) * (t > 0)
         if eps_u is None:
             from repro.kernels.cfg_fuse import ref as cfg_ref
@@ -279,7 +283,7 @@ def _ragged_scan(params, dc: DiffusionConfig, x, y2, row_keys, guidance,
         active = j >= 0
         x2 = jnp.concatenate([x, x], axis=0)
         t2 = jnp.concatenate([t, t])
-        eps2 = dit_apply(params, dc, x2, t2, y2)
+        eps2 = dit_apply(params, dc, x2, t2, y2, use_pallas=use_pallas)
         eps_c, eps_u = eps2[:B], eps2[B:]
         nk = jax.vmap(jax.random.fold_in)(row_keys,
                                           jnp.maximum(j, 0) + 1)
@@ -369,7 +373,7 @@ def _ragged_scan_window(params, dc: DiffusionConfig, x, y2, row_keys,
         t, j, abt, abp, act = inp         # t/j: (Bw,); abt/abp/act: (B,)
         x2 = jnp.concatenate([x, x], axis=0)
         t2 = jnp.concatenate([t, t])
-        eps2 = dit_apply(params, dc, x2, t2, y2)
+        eps2 = dit_apply(params, dc, x2, t2, y2, use_pallas=use_pallas)
         eps_c, eps_u = eps2[:B], eps2[B:]
         nk = jax.vmap(jax.random.fold_in)(row_keys,
                                           jnp.maximum(j, 0) + 1)

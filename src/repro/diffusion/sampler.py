@@ -50,7 +50,8 @@ def sample_classifier_guided(params, dc: DiffusionConfig, sched: NoiseSchedule,
                              clf_logprob_fn, labels, key, *,
                              image_size: int | None = None, channels: int = 3,
                              num_steps: int | None = None,
-                             guidance: float | None = None, eta: float = 1.0):
+                             guidance: float | None = None, eta: float = 1.0,
+                             use_pallas: bool = False):
     """Classifier-guided sampling (Eq. 4) — the FedCADO mechanism.
 
     ``clf_logprob_fn(x, labels) -> (B,)`` log p(y|x); gradients are taken
@@ -62,7 +63,7 @@ def sample_classifier_guided(params, dc: DiffusionConfig, sched: NoiseSchedule,
     strat = ClassifierGuided(logprob_fn=clf_logprob_fn, labels=labels, scale=s)
     return reverse_sample(params, dc, sched, strat, key,
                           image_size=image_size, channels=channels,
-                          num_steps=num_steps, eta=eta)
+                          num_steps=num_steps, eta=eta, use_pallas=use_pallas)
 
 
 @partial(jax.jit, static_argnames=("dc", "image_size", "channels", "eta",
@@ -214,12 +215,12 @@ def sample_cfg_window(params, dc: DiffusionConfig, sched: NoiseSchedule,
 
 
 @partial(jax.jit, static_argnames=("dc", "num", "num_steps", "eta",
-                                   "image_size", "channels"))
+                                   "image_size", "channels", "use_pallas"))
 def sample_uncond(params, dc: DiffusionConfig, sched: NoiseSchedule,
                   num: int, key, *, image_size: int | None = None,
                   channels: int = 3, num_steps: int | None = None,
-                  eta: float = 1.0):
+                  eta: float = 1.0, use_pallas: bool = False):
     """Unconditional sampling: ``num`` draws from the DM's p(x)."""
     return reverse_sample(params, dc, sched, Unconditional(num=num), key,
                           image_size=image_size, channels=channels,
-                          num_steps=num_steps, eta=eta)
+                          num_steps=num_steps, eta=eta, use_pallas=use_pallas)

@@ -1,0 +1,24 @@
+"""Pure-jnp oracle for the fused adaLN LayerNorm kernel.
+
+Matches the DiT modulation sites in ``repro.diffusion.dit``: a
+mean-subtracting LayerNorm (no learned gain/bias) followed by the
+adaLN-zero modulation ``(1 + scale)·x̂ + shift`` with a per-batch-row
+(d,)-vector scale/shift (``(1+scale)`` convention, like
+``kernels.rmsnorm``)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def adaln_norm(x, scale, shift, eps: float = 1e-6):
+    """x: (B, N, d) tokens; scale/shift: (B, d) per-row modulation."""
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    xc = xf - mu
+    var = jnp.mean(jnp.square(xc), axis=-1, keepdims=True)
+    y = xc * jax.lax.rsqrt(var + eps)
+    y = y * (1.0 + scale.astype(jnp.float32))[:, None] \
+        + shift.astype(jnp.float32)[:, None]
+    return y.astype(dt)

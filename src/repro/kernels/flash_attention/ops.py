@@ -22,8 +22,12 @@ def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
     qt = q.transpose(0, 2, 1, 3)
     kt = k.transpose(0, 2, 1, 3)
     vt = v.transpose(0, 2, 1, 3)
-    blk_q = min(K.DEFAULT_BLOCK_Q, max(8, Sq))
-    blk_k = min(K.DEFAULT_BLOCK_K, max(8, Sk))
+    # Blocks rounded up to the 8-row sublane multiple: an S = n_tok+1
+    # sequence (odd by construction — e.g. 17, 65 from the DiT's prepended
+    # conditioning token) pads to an aligned block instead of launching a
+    # misaligned one; the kernel masks the padded K rows via true_sk.
+    blk_q = min(K.DEFAULT_BLOCK_Q, max(8, -(-Sq // 8) * 8))
+    blk_k = min(K.DEFAULT_BLOCK_K, max(8, -(-Sk // 8) * 8))
     pad_q = (-Sq) % blk_q
     pad_k = (-Sk) % blk_k
     if pad_q:

@@ -413,3 +413,74 @@ def dominant_term(terms: dict) -> str:
     key = max(("t_compute", "t_memory", "t_collective"), key=lambda k: terms[k])
     return {"t_compute": "compute", "t_memory": "memory",
             "t_collective": "collective"}[key]
+
+
+# ---------------------------------------------------------------------------
+# structural denoiser roofline (fused vs naive dit_apply)
+# ---------------------------------------------------------------------------
+
+def denoiser_cost(dc, batch: int, image_size: int, channels: int = 3, *,
+                  fused: bool = False, bf16: bool = False) -> dict:
+    """Structural FLOP/byte model of ONE ``dit_apply`` call.
+
+    Counts the documented dominant terms — matmul traffic, attention
+    traffic, and the LN+modulation sites — for the naive einsum denoiser
+    vs the Pallas-fused one (kernels/flash_attention + kernels/adaln_norm).
+    FLOPs are identical across the two (fusion changes WHERE intermediates
+    live, not the arithmetic); bytes differ:
+
+    * attention — naive materialises the (B, h, S, S) logits and probs in
+      HBM (logits write + softmax read/write + prob read for the PV
+      matmul = 4 S² passes, fp32); fused streams K/V blocks through VMEM
+      with online softmax, so only q/k/v reads and the o write remain;
+    * LN sites — naive takes ~3 HBM passes over the (B, S, d) tokens per
+      site (stats read, normalise read, modulated write); the fused
+      kernel takes 2 (read + write), one VMEM pass;
+    * ``bf16`` halves the QKV/MLP matmul operand traffic (activations and
+      weights move as bf16; accumulation stays fp32 on the MXU).
+
+    Residual adds, patchify/unpatchify reshapes and the tiny conditioning
+    MLP are identical on both paths and omitted.  Returns
+    ``{"flops", "bytes", "intensity"}`` (global, one call).
+    """
+    B, d, L = batch, dc.d_model, dc.num_layers
+    h, p = dc.num_heads, dc.patch
+    n_tok = (image_size // p) ** 2
+    S = n_tok + 1
+    pd = p * p * channels
+    ff = 4 * d
+    f32 = 4
+    act = 2 if (fused and bf16) else 4
+
+    # -- FLOPs (2·M·N·K per matmul; same fused or naive) --
+    flops = 2.0 * B * n_tok * pd * d                  # patch_in
+    flops += 2.0 * B * (2 * d * d + 2 * dc.cond_dim * d)  # cond MLP + y maps
+    per_layer = (2.0 * B * d * 6 * d                  # adaLN modulation
+                 + 2.0 * B * S * d * 3 * d            # qkv
+                 + 2.0 * 2 * B * S * S * d            # qk^T + pv
+                 + 2.0 * B * S * d * d                # wo
+                 + 2.0 * 2 * B * S * d * ff)          # mlp up + down
+    flops += L * per_layer
+    flops += 2.0 * B * d * 2 * d + 2.0 * B * n_tok * d * pd  # out head
+
+    # -- HBM bytes --
+    tok = B * S * d                                   # one token tensor
+    # matmul operand/result traffic (per layer)
+    mm = ((tok + 3 * d * d + 3 * tok)                 # qkv
+          + (tok + d * d + tok)                       # wo
+          + (tok + 4 * d * d + 4 * tok)               # mlp up
+          + (4 * tok + 4 * d * d + tok)) * act        # mlp down
+    mm += (B * d + 6 * d * d + 6 * B * d) * f32       # modulation (fp32)
+    # attention traffic
+    attn_io = (3 * tok + tok) * f32                   # q/k/v read + o write
+    s2 = B * h * S * S * f32
+    attn = attn_io + (0 if fused else 4 * s2)
+    # LN+modulation sites: 2 per layer (+1 final, counted below)
+    ln_passes = 2 if fused else 3
+    ln = 2 * ln_passes * tok * f32
+    bytes_ = L * (mm + attn + ln)
+    bytes_ += ln_passes * B * n_tok * d * f32         # final LN site
+    bytes_ += (B * n_tok * pd + pd * d + B * n_tok * d) * f32   # patch_in
+    bytes_ += (B * n_tok * d + d * pd + B * n_tok * pd) * f32   # patch_out
+    return {"flops": flops, "bytes": float(bytes_),
+            "intensity": flops / bytes_}

@@ -570,11 +570,13 @@ class SynthesisEngine:
                 self.dm_params, self.dc, self.sched, grp_head.logprob_fn,
                 self._shard(jnp.asarray(cond_rows, jnp.int32)), key,
                 image_size=H, channels=C, num_steps=grp_head.num_steps,
-                guidance=grp_head.guidance, eta=self.eta)
+                guidance=grp_head.guidance, eta=self.eta,
+                use_pallas=self.use_pallas)
         self._note_shape(("uncond", len(cond_rows), grp_head.num_steps))
         return sample_uncond(self.dm_params, self.dc, self.sched,
                              len(cond_rows), key, image_size=H, channels=C,
-                             num_steps=grp_head.num_steps, eta=self.eta)
+                             num_steps=grp_head.num_steps, eta=self.eta,
+                             use_pallas=self.use_pallas)
 
     # -- drain machinery --------------------------------------------------
     def _drain(self, key, results, *, poll, stream, on_result=None):

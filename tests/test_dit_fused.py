@@ -1,0 +1,267 @@
+"""Fused denoiser: ``dit_apply(use_pallas=True)`` parity gate.
+
+The fused path swaps the DiT's attention einsum chain for the Pallas
+flash-attention kernel and its three LN+modulation sites for
+``kernels/adaln_norm`` (CPU runs both under interpret).  The gate has two
+layers: (1) fp32 fused output matches the naive denoiser within a tight
+float tolerance (online softmax reorders the accumulation, so bit
+equality is not expected ACROSS the flag); (2) under ONE flag setting the
+whole serving stack — grouped/ragged/compacted/multi-host, warm stores —
+produces bit-identical D_syn regardless of packing and placement, because
+every mode runs the same ``dit_apply`` and row noise is keyed by request
+identity.
+
+NOTE: params are perturbed away from ``init_dit`` everywhere — adaLN-zero
+initialisation zeroes the modulation/gates/output head, which would make
+the denoiser output identically 0 and the parity trivially vacuous.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ImportError:            # pragma: no cover - CI installs it
+    from _hypothesis_fallback import given, settings, st
+
+from repro.configs.oscar import DiffusionConfig
+from repro.diffusion.dit import dit_apply, init_dit
+from repro.diffusion.sampler import (sample_cfg, sample_cfg_compacted,
+                                     sample_cfg_ragged, sample_cfg_window,
+                                     sample_classifier_guided, sample_uncond)
+from repro.diffusion.schedule import make_schedule
+from repro.serve import SynthesisEngine, SynthesisService, SynthesisStore
+
+TOL = 2e-5       # fp32 fused-vs-naive, single dit_apply call
+TOL_E2E = 2e-4   # ...compounded over a multi-step reverse trajectory
+
+
+def _perturb(params, seed=1, scale=0.05):
+    leaves, treedef = jax.tree.flatten(params)
+    keys = jax.random.split(jax.random.PRNGKey(seed), len(leaves))
+    return jax.tree.unflatten(treedef, [
+        a + scale * jax.random.normal(k, a.shape, a.dtype)
+        for a, k in zip(leaves, keys)])
+
+
+def _setup(dc, image_size, B, seed=0, channels=3):
+    key = jax.random.PRNGKey(seed)
+    params = _perturb(init_dit(key, dc, image_size, channels))
+    x = jax.random.normal(jax.random.fold_in(key, 1),
+                          (B, image_size, image_size, channels))
+    t = jax.random.randint(jax.random.fold_in(key, 2), (B,), 0,
+                           dc.train_timesteps)
+    y = jax.random.normal(jax.random.fold_in(key, 3), (B, dc.cond_dim))
+    return params, x, t, y
+
+
+# ---------------------------------------------------------------------------
+# single-call fp32 parity across geometries
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("B,image_size,patch,heads", [
+    (2, 16, 4, 4),    # production shape: 4x4 grid, S=17
+    (1, 16, 2, 2),    # 8x8 grid, S=65
+    (3, 8, 2, 4),     # small image
+    (2, 8, 4, 1),     # single head
+])
+def test_dit_fused_matches_reference(B, image_size, patch, heads):
+    dc = DiffusionConfig(d_model=64, num_layers=2, num_heads=heads,
+                         patch=patch)
+    params, x, t, y = _setup(dc, image_size, B)
+    ref = dit_apply(params, dc, x, t, y)
+    out = dit_apply(params, dc, x, t, y, use_pallas=True)
+    assert float(jnp.max(jnp.abs(ref))) > 1e-3, "vacuous parity"
+    assert float(jnp.max(jnp.abs(out - ref))) < TOL
+
+
+def test_dit_fused_null_embedding_broadcast():
+    """y=None routes through the learned null embedding Ø on both paths."""
+    dc = DiffusionConfig(d_model=64, num_layers=2, num_heads=4)
+    params, x, t, _ = _setup(dc, 16, 3)
+    ref = dit_apply(params, dc, x, t, None)
+    out = dit_apply(params, dc, x, t, None, use_pallas=True)
+    assert float(jnp.max(jnp.abs(ref))) > 1e-3, "vacuous parity"
+    assert float(jnp.max(jnp.abs(out - ref))) < TOL
+
+
+def test_dit_fused_dc_flag_matches_kwarg():
+    """``dc.use_pallas=True`` and the kwarg select the same code path."""
+    dc = DiffusionConfig(d_model=64, num_layers=1, num_heads=4)
+    dcf = DiffusionConfig(d_model=64, num_layers=1, num_heads=4,
+                          use_pallas=True)
+    params, x, t, y = _setup(dc, 16, 2)
+    a = dit_apply(params, dc, x, t, y, use_pallas=True)
+    b = dit_apply(params, dcf, x, t, y)
+    assert jnp.array_equal(a, b)
+
+
+def test_dit_bf16_act_opt_in():
+    """bf16 activations (fp32 accumulation) stay within bf16 tolerance of
+    the fp32 reference — and the flag is inert without ``use_pallas``."""
+    kw = dict(d_model=64, num_layers=2, num_heads=4)
+    dc = DiffusionConfig(**kw)
+    dcb = DiffusionConfig(**kw, use_pallas=True, bf16_act=True)
+    dc_inert = DiffusionConfig(**kw, bf16_act=True)   # no use_pallas
+    params, x, t, y = _setup(dc, 16, 2)
+    ref = dit_apply(params, dc, x, t, y)
+    out = dit_apply(params, dcb, x, t, y)
+    assert out.dtype == ref.dtype == jnp.float32
+    scale = float(jnp.max(jnp.abs(ref)))
+    assert float(jnp.max(jnp.abs(out - ref))) < 2e-2 * max(scale, 1.0)
+    assert jnp.array_equal(dit_apply(params, dc_inert, x, t, y), ref)
+
+
+@given(image_size=st.sampled_from([8, 16]), patch=st.sampled_from([2, 4]),
+       heads=st.sampled_from([1, 2, 4]), B=st.integers(1, 3))
+@settings(max_examples=10, deadline=None)
+def test_dit_fused_parity_fuzz(image_size, patch, heads, B):
+    """Property: fused==naive (fp32, tight tol) over random geometry."""
+    dc = DiffusionConfig(d_model=32, num_layers=1, num_heads=heads,
+                         patch=patch)
+    params, x, t, y = _setup(dc, image_size, B,
+                             seed=7 * image_size + patch + heads + B)
+    ref = dit_apply(params, dc, x, t, y)
+    out = dit_apply(params, dc, x, t, y, use_pallas=True)
+    assert float(jnp.max(jnp.abs(out - ref))) < TOL
+
+
+# ---------------------------------------------------------------------------
+# end-to-end: every reverse core under the flag
+# ---------------------------------------------------------------------------
+
+DC = DiffusionConfig(d_model=32, num_layers=1, num_heads=2,
+                     sample_timesteps=3, train_timesteps=16)
+H = 8
+
+
+def _dm(seed=0):
+    params = _perturb(init_dit(jax.random.PRNGKey(seed), DC, H, 3))
+    return params, make_schedule(DC.train_timesteps, DC.schedule)
+
+
+def _wave(B=4, seed=0):
+    key = jax.random.PRNGKey(100 + seed)
+    y = jax.random.normal(key, (B, DC.cond_dim))
+    row_keys = jax.random.split(jax.random.fold_in(key, 1), B)
+    guidance = np.array([1.5, 7.5, 2.0, 4.0], np.float32)[:B]
+    steps = np.array([1, 3, 2, 3], np.int32)[:B]
+    return y, row_keys, guidance, steps
+
+
+def test_reverse_uniform_fused_parity():
+    params, sched = _dm()
+    y, _, _, _ = _wave()
+    key = jax.random.PRNGKey(5)
+    naive = sample_cfg(params, DC, sched, y, key, image_size=H)
+    fused = sample_cfg(params, DC, sched, y, key, image_size=H,
+                       use_pallas=True)
+    assert float(jnp.max(jnp.abs(fused - naive))) < TOL_E2E
+
+
+def test_reverse_ragged_window_compacted_fused_parity():
+    """Fused vs naive within float tolerance in the ragged core — and the
+    three row-keyed wave modes (ragged / windowed / compacted) stay
+    BIT-identical to each other under the fused flag."""
+    params, sched = _dm()
+    y, row_keys, guidance, steps = _wave()
+    kw = dict(image_size=H)
+    naive = sample_cfg_ragged(params, DC, sched, y, row_keys, guidance,
+                              steps, **kw)
+    fused = sample_cfg_ragged(params, DC, sched, y, row_keys, guidance,
+                              steps, use_pallas=True, **kw)
+    assert float(jnp.max(jnp.abs(fused - naive))) < TOL_E2E
+    comp = sample_cfg_compacted(params, DC, sched, y, row_keys, guidance,
+                                steps, use_pallas=True, **kw)
+    assert jnp.array_equal(comp, fused)
+    win = sample_cfg_window(params, DC, sched, y, row_keys, guidance,
+                            steps, row_offset=0, use_pallas=True, **kw)
+    assert jnp.array_equal(win, fused)
+
+
+def test_reverse_uncond_and_clf_fused_parity():
+    params, sched = _dm()
+    key = jax.random.PRNGKey(9)
+    nu = sample_uncond(params, DC, sched, 3, key, image_size=H)
+    fu = sample_uncond(params, DC, sched, 3, key, image_size=H,
+                       use_pallas=True)
+    assert float(jnp.max(jnp.abs(fu - nu))) < TOL_E2E
+
+    def logprob(x, labels):
+        return -0.01 * jnp.sum(x ** 2, axis=(1, 2, 3))
+
+    labels = jnp.zeros((3,), jnp.int32)
+    nc = sample_classifier_guided(params, DC, sched, logprob, labels, key,
+                                  image_size=H)
+    fc = sample_classifier_guided(params, DC, sched, logprob, labels, key,
+                                  image_size=H, use_pallas=True)
+    assert float(jnp.max(jnp.abs(fc - nc))) < TOL_E2E
+
+
+# ---------------------------------------------------------------------------
+# serving stack: D_syn bit-invariance under one flag setting
+# ---------------------------------------------------------------------------
+
+def _enc(seed):
+    e = np.random.default_rng(seed).normal(size=(DC.cond_dim,))
+    return (e / np.linalg.norm(e)).astype(np.float32)
+
+
+_SUBS = [(_enc(i), c, n, g, s) for i, (c, n, g, s) in enumerate([
+    (0, 2, 7.5, 3), (1, 1, 1.5, 1), (2, 2, 4.0, 2), (0, 1, 2.0, 3)])]
+
+
+def _run_engine(key, **kw):
+    params, sched = _dm()
+    kw.setdefault("image_size", H)
+    kw.setdefault("wave_size", 8)
+    eng = SynthesisEngine(params, DC, sched, **kw)
+    rids = [eng.submit(e, c, n, guidance=g, num_steps=s)
+            for e, c, n, g, s in _SUBS]
+    out = eng.run(key)
+    return [np.asarray(out[r]) for r in rids]
+
+
+@pytest.mark.parametrize("kw", [
+    dict(compaction="full"),
+    dict(ragged=True, hosts=2),
+    dict(ragged=False, hosts=2),           # grouped, placed
+    dict(compaction="full", hosts=4),
+])
+def test_engine_dsyn_bit_invariant_under_fused_flag(kw):
+    """Acceptance: with ``use_pallas=True`` everywhere, D_syn is
+    bit-identical across grouped/ragged/compacted/multi-host packings —
+    and float-close to the naive engine."""
+    key = jax.random.PRNGKey(77)
+    oracle = _run_engine(key, ragged=True, use_pallas=True)
+    naive = _run_engine(key, ragged=True)
+    outs = _run_engine(key, use_pallas=True, **kw)
+    for a, b, n in zip(oracle, outs, naive):
+        assert np.array_equal(a, b)
+        assert float(np.max(np.abs(a - n))) < TOL_E2E
+
+
+def test_warm_store_crosses_fused_flag(tmp_path):
+    """A store warmed by a FUSED drain replays bit-identically into a
+    naive engine (stores hold bits; the flag only affects generation)."""
+    params, sched = _dm()
+    key = jax.random.PRNGKey(42)
+    warm = SynthesisService(
+        SynthesisEngine(params, DC, sched, image_size=H, wave_size=8,
+                        ragged=True, use_pallas=True),
+        store=SynthesisStore(str(tmp_path)))
+    futs = [warm.submit(e, c, n, guidance=g, num_steps=s)
+            for e, c, n, g, s in _SUBS]
+    outs = warm.gather(futs, key)
+    cold = SynthesisService(
+        SynthesisEngine(params, DC, sched, image_size=H, wave_size=8,
+                        ragged=True),
+        store=SynthesisStore(str(tmp_path)))
+    fc = [cold.submit(e, c, n, guidance=g, num_steps=s)
+          for e, c, n, g, s in _SUBS]
+    got = cold.gather(fc, key)
+    assert cold.stats["generated"] == 0, "warm store must skip sampling"
+    for a, b in zip(outs, got):
+        assert np.array_equal(a, b)

@@ -58,3 +58,47 @@ def test_dus_counts_slice_not_buffer():
     # traffic should be O(slice + copy of buffer at entry), not O(2 buffers
     # per update); allow the one-time entry copy
     assert cost.bytes < 3 * 4096 * 256 * 4
+
+
+# ---------------------------------------------------------------------------
+# structural denoiser cost model (fused vs naive dit_apply)
+# ---------------------------------------------------------------------------
+
+def test_denoiser_cost_fusion_saves_bytes_not_flops():
+    """Fusion changes WHERE intermediates live, not the arithmetic: equal
+    FLOPs, strictly fewer HBM bytes, higher arithmetic intensity."""
+    from repro.configs.oscar import DiffusionConfig
+    dc = DiffusionConfig()
+    naive = hlo.denoiser_cost(dc, 256, 16)
+    fused = hlo.denoiser_cost(dc, 256, 16, fused=True)
+    assert naive["flops"] == fused["flops"]
+    assert fused["bytes"] < naive["bytes"]
+    assert fused["intensity"] > naive["intensity"]
+    bf16 = hlo.denoiser_cost(dc, 256, 16, fused=True, bf16=True)
+    assert bf16["bytes"] < fused["bytes"]
+    assert bf16["flops"] == fused["flops"]
+
+
+def test_denoiser_cost_s2_term_scales_quadratically():
+    """The naive-vs-fused byte gap is the materialised (B, h, S, S)
+    attention plus the extra LN passes; the S² part must dominate its
+    growth when the image (hence S) scales up."""
+    from repro.configs.oscar import DiffusionConfig
+    dc = DiffusionConfig()
+
+    def gap(img):
+        n = hlo.denoiser_cost(dc, 8, img)["bytes"]
+        f = hlo.denoiser_cost(dc, 8, img, fused=True)["bytes"]
+        return n - f
+
+    # 16px → 64px: n_tok ×16, S² ×~256; the gap must grow far superlinearly
+    assert gap(64) > 50 * gap(16)
+
+
+def test_denoiser_cost_roofline_terms_compose():
+    from repro.configs.oscar import DiffusionConfig
+    dc = DiffusionConfig()
+    c = hlo.denoiser_cost(dc, 256, 224, fused=True)
+    t = hlo.roofline_terms(c["flops"], c["bytes"], 0.0)
+    assert t["t_compute"] > 0 and t["t_memory"] > 0
+    assert hlo.dominant_term(t) in ("compute", "memory")

@@ -244,3 +244,89 @@ def test_cfg_fuse_bf16(rng_key, shape):
     # bound: one bf16 ulp of the f32 result (outputs reach ~±30 at s=7.5)
     err = jnp.abs(out.astype(jnp.float32) - ref)
     assert bool(jnp.all(err <= 2.0 ** -8 * jnp.maximum(jnp.abs(ref), 1.0)))
+
+
+# ---------------------------------------------------------------------------
+# non-causal S = n_tok + 1 (the DiT's prepended conditioning token)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("S,Hq,Hkv", [
+    (65, 4, 4),     # 8x8 patch grid + cond token
+    (65, 4, 2),     # ...with GQA
+    (17, 4, 4),     # 4x4 patch grid + cond token
+])
+def test_flash_attention_noncausal_token_plus_one(rng_key, S, Hq, Hkv):
+    """Encoder-mode attention at the DiT's odd sequence length: S=n_tok+1
+    rounds the blocks up to the sublane multiple, so this shape MUST take
+    the pad_q/pad_k path (padded K rows masked via true_sk).  Covers GQA
+    and the softcap=0 branch explicitly."""
+    blk = min(128, max(8, -(-S // 8) * 8))
+    assert (-S) % blk, "shape no longer exercises the padding path"
+    ks = jax.random.split(rng_key, 3)
+    q = jax.random.normal(ks[0], (2, S, Hq, 32))
+    k = jax.random.normal(ks[1], (2, S, Hkv, 32))
+    v = jax.random.normal(ks[2], (2, S, Hkv, 32))
+    out = fa_ops.flash_attention(q, k, v, causal=False, softcap=0.0)
+    ref = fa_ref.attention(q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+                           v.transpose(0, 2, 1, 3), causal=False,
+                           softcap=0.0).transpose(0, 2, 1, 3)
+    assert jnp.max(jnp.abs(out - ref)) < 2e-5
+
+
+# ---------------------------------------------------------------------------
+# fused adaLN LayerNorm (kernels/adaln_norm)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("shape,dt", [
+    ((2, 17, 128), jnp.float32),    # DiT wave: n_tok+1 (forces row pad)
+    ((4, 65, 64), jnp.float32),
+    ((3, 256, 128), jnp.float32),   # no padding needed
+    ((2, 17, 128), jnp.bfloat16),
+])
+def test_adaln_norm_matches_oracle(rng_key, shape, dt):
+    from repro.kernels.adaln_norm import ops as an_ops
+    from repro.kernels.adaln_norm import ref as an_ref
+    ks = jax.random.split(rng_key, 3)
+    B, _, d = shape
+    x = jax.random.normal(ks[0], shape, dt)
+    scale = jax.random.normal(ks[1], (B, d), dt) * 0.5
+    shift = jax.random.normal(ks[2], (B, d), dt) * 0.5
+    out = an_ops.adaln_norm(x, scale, shift)
+    assert out.dtype == dt
+    ref = an_ref.adaln_norm(x, scale, shift)
+    if dt == jnp.bfloat16:
+        err = jnp.abs(out.astype(jnp.float32) - ref.astype(jnp.float32))
+        assert bool(jnp.all(err <= 2.0 ** -8 *
+                            jnp.maximum(jnp.abs(ref.astype(jnp.float32)),
+                                        1.0)))
+    else:
+        assert jnp.max(jnp.abs(out - ref)) < 2e-5
+
+
+def test_adaln_norm_matches_dit_inline_site(rng_key):
+    """The kernel must reproduce the DiT's hand-rolled modulation site
+    ``_ln(x)·(1+scale)+shift`` — the expression it replaces."""
+    from repro.diffusion.dit import _ln
+    from repro.kernels.adaln_norm import ops as an_ops
+    ks = jax.random.split(rng_key, 3)
+    x = jax.random.normal(ks[0], (3, 17, 64))
+    scale = jax.random.normal(ks[1], (3, 64)) * 0.1
+    shift = jax.random.normal(ks[2], (3, 64)) * 0.1
+    inline = _ln(x) * (1 + scale[:, None]) + shift[:, None]
+    out = an_ops.adaln_norm(x, scale, shift)
+    assert jnp.max(jnp.abs(out - inline)) < 2e-6
+
+
+def test_adaln_norm_per_row_modulation(rng_key):
+    """Each batch row is modulated by ITS OWN (scale, shift): permuting
+    the modulation rows must permute the outputs identically."""
+    from repro.kernels.adaln_norm import ops as an_ops
+    ks = jax.random.split(rng_key, 3)
+    x = jax.random.normal(ks[0], (1, 24, 32))
+    x3 = jnp.broadcast_to(x, (3, 24, 32))
+    scale = jax.random.normal(ks[1], (3, 32))
+    shift = jax.random.normal(ks[2], (3, 32))
+    out = an_ops.adaln_norm(x3, scale, shift)
+    perm = jnp.array([2, 0, 1])
+    out_p = an_ops.adaln_norm(x3, scale[perm], shift[perm])
+    assert jnp.array_equal(out[perm], out_p)
