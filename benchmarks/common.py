@@ -15,6 +15,15 @@ RESULTS.mkdir(exist_ok=True)
 _EXPERIMENT = {}
 
 
+def _timed(fn, *args, **kw):
+    """Run ``fn(*args, **kw)`` and return ``(seconds, result)`` measured
+    on the monotonic ``time.perf_counter`` clock — wall timings must
+    never ride ``time.time()``, which steps under NTP adjustments."""
+    t0 = time.perf_counter()
+    out = fn(*args, **kw)
+    return time.perf_counter() - t0, out
+
+
 def get_experiment(preset: str = "paper"):
     """Cached Experiment (data + pre-trained frozen DM)."""
     from repro.configs.oscar import (DataConfig, DiffusionConfig, OscarConfig)

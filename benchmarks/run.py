@@ -30,7 +30,7 @@ def main():
     args = ap.parse_args()
     which = args.only.split(",") if args.only else list(ALL)
 
-    t0 = time.time()
+    t0 = time.perf_counter()
     print(f"== repro benchmarks (preset={args.preset}) ==", flush=True)
 
     table1_res = None
@@ -68,7 +68,7 @@ def main():
         rates = (1.0, 0.5) if args.preset == "quick" else dropout_robustness.RATES
         dropout_robustness.run(args.preset, rates=rates)
 
-    print(f"\n== done in {time.time()-t0:.0f}s ==")
+    print(f"\n== done in {time.perf_counter()-t0:.0f}s ==")
 
 
 if __name__ == "__main__":

@@ -49,27 +49,36 @@ categories, k samples per (client, category) encoding.  Five runs:
   fp32 parity gates: fused ragged == fused compacted bit-identically,
   and fused vs naive within float tolerance — gating CI's smoke run.
 
+* ``trace``        — the mixed workload drained once UNTRACED and once
+  under a live span ``Tracer`` in every scheduling mode (grouped /
+  ragged / compacted / multihost), reporting per-request e2e p50/p99
+  next to wall-clock.  ASSERTS — gating CI's smoke run — that D_syn is
+  BIT-IDENTICAL with tracing on vs off in every mode (observability must
+  never touch computation) and that the exported Chrome trace passes the
+  schema gate with one timeline track per simulated host.  ``--trace
+  out.json`` writes the Perfetto-loadable timeline (+ metrics dump).
+
 Writes ``results/BENCH_synthesis.json`` via the shared harness
 (``--mode ragged`` / ``--mode compacted`` / ``--mode multihost`` /
-``--mode fused`` re-run only their comparison and merge it into an
-existing results file).
+``--mode fused`` / ``--mode trace`` re-run only their comparison and
+merge it into an existing results file).
 """
 from __future__ import annotations
 
 import argparse
 import json
 import tempfile
-import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import RESULTS, print_table, save_result
+from benchmarks.common import RESULTS, _timed, print_table, save_result
 from repro.configs.oscar import DiffusionConfig
 from repro.diffusion.dit import init_dit
 from repro.diffusion.sampler import sample_cfg
 from repro.diffusion.schedule import make_schedule
+from repro.obs import Tracer, chrome_trace, validate_chrome_trace, write_trace
 from repro.serve import SynthesisEngine, SynthesisService, SynthesisStore
 
 SEED_CHUNK = 512          # the pre-refactor chunk stride (core/oscar.py)
@@ -113,13 +122,15 @@ def _bench_streaming(params, dc, sched, enc, *, steps, k):
     snap = fresh_service()
     for r, c in upfront:
         snap.submit(enc[r, c], c, k, num_steps=steps)
-    t0 = time.time()
-    snap.drain()
-    for client in late_clients:
-        for r, c in client:
-            snap.submit(enc[r, c], c, k, num_steps=steps)
-    snap.drain()
-    t_snap = time.time() - t0
+
+    def snap_drains():
+        snap.drain()
+        for client in late_clients:
+            for r, c in client:
+                snap.submit(enc[r, c], c, k, num_steps=steps)
+        snap.drain()
+
+    t_snap, _ = _timed(snap_drains)
 
     strm = fresh_service()
     for r, c in upfront:
@@ -133,9 +144,7 @@ def _bench_streaming(params, dc, sched, enc, *, steps, k):
             strm.submit(enc[r, c], c, k, num_steps=steps)
         return True
 
-    t0 = time.time()
-    strm.drain(poll=poll)
-    t_strm = time.time() - t0
+    t_strm, _ = _timed(strm.drain, poll=poll)
     return {"two_snapshots_s": t_snap, "streaming_s": t_strm,
             "two_snapshots_padded": snap.stats["padded"],
             "streaming_padded": strm.stats["padded"],
@@ -157,9 +166,7 @@ def _bench_mixed(params, dc, sched, enc, *, steps, k, compacted: bool):
                               ragged=ragged, compaction=compaction)
         rids = [eng.submit(enc[r, c], c, k, guidance=g, num_steps=s)
                 for r, c, g, s in reqs]
-        t0 = time.time()
-        out = eng.run(jax.random.PRNGKey(2))
-        wall = time.time() - t0
+        wall, out = _timed(eng.run, jax.random.PRNGKey(2))
         assert all(out[rid].shape[0] == k for rid in rids)
         return wall, dict(eng.stats), [out[rid] for rid in rids]
 
@@ -262,9 +269,8 @@ def _bench_fused(params, dc, sched, enc, *, steps, k):
                               use_pallas=use_pallas)
         rids = [eng.submit(enc[r, c], c, k, guidance=g, num_steps=s)
                 for r, c, g, s in reqs]
-        t0 = time.time()
-        out = eng.run(jax.random.PRNGKey(4))
-        return time.time() - t0, [out[rid] for rid in rids]
+        wall, out = _timed(eng.run, jax.random.PRNGKey(4))
+        return wall, [out[rid] for rid in rids]
 
     t_nr, out_nr = run_mode(False)
     t_fr, out_fr = run_mode(True)
@@ -323,9 +329,8 @@ def _bench_multihost(params, dc, sched, enc, *, steps, k, hosts: int):
                               granule=1, **kw)
         rids = [eng.submit(enc[r, c], c, k, guidance=g, num_steps=s)
                 for r, c, g, s in reqs]
-        t0 = time.time()
-        out = eng.run(jax.random.PRNGKey(3))
-        return time.time() - t0, dict(eng.stats), [out[rid] for rid in rids]
+        wall, out = _timed(eng.run, jax.random.PRNGKey(3))
+        return wall, dict(eng.stats), [out[rid] for rid in rids]
 
     t_one, _, out_one = run_mode(ragged=True)
     t_rag, st_rag, out_rag = run_mode(ragged=True, hosts=hosts)
@@ -400,25 +405,110 @@ def _print_ragged(ragged: dict, compacted: dict | None = None):
 
 def _bench_store(params, dc, sched, enc, *, steps, k, store_dir):
     """Warm an on-disk store, then serve the workload from a cold process
-    (fresh engine + fresh store handle): zero sampler calls."""
+    (fresh engine + fresh store handle): zero sampler calls.  Both runs
+    are traced, so per-request e2e latency histograms fall out — and the
+    warm path's p99 must sit STRICTLY below the cold path's p50 (gated:
+    if serving from disk is not categorically faster than synthesising,
+    the store regressed)."""
     R, C = enc.shape[:2]
 
     def run_cold():
         eng = SynthesisEngine(params, dc, sched, image_size=16)
-        svc = SynthesisService(eng, key=1, store=SynthesisStore(store_dir))
+        svc = SynthesisService(eng, key=1, store=SynthesisStore(store_dir),
+                               tracer=Tracer())
         futs = [svc.submit(enc[r, c], c, k, num_steps=steps)
                 for r in range(R) for c in range(C)]
-        t0 = time.time()
-        outs = svc.gather(futs)
-        return time.time() - t0, outs, svc.stats
+        wall, outs = _timed(svc.gather, futs)
+        e2e = svc.engine.metrics.get("request.e2e_latency", default=None)
+        return wall, outs, svc.stats, e2e
 
-    t_cold, outs1, _ = run_cold()                 # generates + spills
-    t_warm, outs2, stats = run_cold()             # fresh process, warm disk
+    t_cold, outs1, _, e2e_cold = run_cold()       # generates + spills
+    t_warm, outs2, stats, e2e_warm = run_cold()   # fresh process, warm disk
     assert stats["generated"] == 0, "warm store must skip the sampler"
     assert all(np.array_equal(a, b) for a, b in zip(outs1, outs2))
+    assert e2e_cold["count"] == e2e_warm["count"] == R * C
+    # the latency gate: every warm request (p99) beats the cold median
+    assert e2e_warm["p99"] < e2e_cold["p50"], (
+        f"warm-store p99 e2e {e2e_warm['p99']:.4f}s >= cold p50 "
+        f"{e2e_cold['p50']:.4f}s — store serving lost its latency edge")
     return {"store_cold_s": t_cold, "store_warm_s": t_warm,
             "store_warm_generated": stats["generated"],
-            "store_hits": stats["store_hits"]}
+            "store_hits": stats["store_hits"],
+            "cold_e2e_p50_s": e2e_cold["p50"],
+            "cold_e2e_p99_s": e2e_cold["p99"],
+            "warm_e2e_p50_s": e2e_warm["p50"],
+            "warm_e2e_p99_s": e2e_warm["p99"]}
+
+
+def _bench_trace(params, dc, sched, enc, *, steps, k, hosts: int,
+                 trace_path=None):
+    """The observability gate: the mixed workload drained untraced and
+    under a live ``Tracer`` in every scheduling mode.  ASSERTS D_syn is
+    BIT-IDENTICAL with tracing on vs off (spans and lifecycle stamps
+    observe the drain; they must never key noise or order work) and that
+    the multihost run's exported Chrome trace passes the schema gate
+    with one timeline track per simulated host.  Reports per-request e2e
+    p50/p99 next to wall-clock for every mode; ``trace_path`` writes the
+    Perfetto-loadable timeline + metrics dump."""
+    reqs = _mixed_reqs(enc, steps)
+    modes = {"grouped": {},
+             "ragged": {"ragged": True},
+             "compacted": {"compaction": "full"},
+             "multihost": {"compaction": "full", "hosts": hosts,
+                           "granule": 1}}
+    res = {}
+    mh_tracer = mh_svc = None
+    for name, kw in modes.items():
+
+        def run_mode(tracer):
+            eng = SynthesisEngine(params, dc, sched, image_size=16,
+                                  cache=False, **kw)
+            svc = SynthesisService(eng, key=5, tracer=tracer)
+            futs = [svc.submit(enc[r, c], c, k, guidance=g, num_steps=s)
+                    for r, c, g, s in reqs]
+            wall, outs = _timed(svc.gather, futs)
+            return wall, outs, svc
+
+        t_off, out_off, _ = run_mode(None)
+        tracer = Tracer()
+        t_on, out_on, svc = run_mode(tracer)
+        # the determinism gate: tracing must be value-invisible
+        assert all(np.array_equal(a, b)
+                   for a, b in zip(out_off, out_on)), (
+            f"{name}: D_syn with tracing enabled differs from disabled — "
+            f"observability leaked into computation")
+        e2e = svc.engine.metrics.get("request.e2e_latency", default=None)
+        qw = svc.engine.metrics.get("request.queue_wait", default=None)
+        res[name] = {"wall_untraced_s": t_off, "wall_traced_s": t_on,
+                     "spans": len(tracer.spans),
+                     "requests": e2e["count"],
+                     "e2e_p50_s": e2e["p50"], "e2e_p99_s": e2e["p99"]}
+        if qw:
+            res[name]["queue_wait_p50_s"] = qw["p50"]
+            res[name]["queue_wait_p99_s"] = qw["p99"]
+        if name == "multihost":
+            mh_tracer, mh_svc = tracer, svc
+    # the export gate: the multihost timeline must validate with one
+    # track per simulated host (written to --trace when requested)
+    if trace_path is not None:
+        obj = write_trace(trace_path, mh_tracer,
+                          registry=mh_svc.engine.metrics, hosts=hosts)
+        res["trace_file"] = str(trace_path)
+    else:
+        obj = chrome_trace(mh_tracer, hosts=hosts)
+    res["trace_events"] = validate_chrome_trace(obj, require_hosts=hosts)
+    return res
+
+
+def _print_trace(tr: dict):
+    rows = [{"mode": name, "wall_s": b["wall_traced_s"],
+             "spans": b["spans"], "e2e_p50_ms": b["e2e_p50_s"] * 1e3,
+             "e2e_p99_ms": b["e2e_p99_s"] * 1e3}
+            for name, b in tr.items() if isinstance(b, dict)]
+    print_table("Traced drains — tracing on, bit-identical to off", rows,
+                ["mode", "wall_s", "spans", "e2e_p50_ms", "e2e_p99_ms"])
+    print(f"  exported trace: {tr.get('trace_file', '(not written)')} "
+          f"({tr['trace_events']} events, schema-validated)")
 
 
 def _merge_result(preset: str, updates: dict, drop: tuple = ()):
@@ -436,7 +526,8 @@ def _merge_result(preset: str, updates: dict, drop: tuple = ()):
     return res
 
 
-def run(preset: str = "paper", mode: str = "all", hosts: int = 2):
+def run(preset: str = "paper", mode: str = "all", hosts: int = 2,
+        trace_path=None):
     w = _workload(preset)
     dc, steps = w["dc"], w["steps"]
     R, C, k = w["R"], w["C"], w["k"]
@@ -467,6 +558,15 @@ def run(preset: str = "paper", mode: str = "all", hosts: int = 2):
         _print_multihost(mh)
         return _merge_result(preset, {"multihost": mh})
 
+    if mode == "trace":
+        # observability regression only (the CI trace gate): tracing
+        # on/off bit-parity + schema-validated export, merged into an
+        # existing results file rather than clobbering the full run
+        tr = _bench_trace(params, dc, sched, enc, steps=steps, k=k,
+                          hosts=hosts, trace_path=trace_path)
+        _print_trace(tr)
+        return _merge_result(preset, {"trace": tr})
+
     if mode in ("ragged", "compacted"):
         # mixed-workload comparison only (the CI regression step): merge
         # into an existing results file rather than clobbering the full
@@ -483,9 +583,8 @@ def run(preset: str = "paper", mode: str = "all", hosts: int = 2):
         return _merge_result(preset, {"ragged": ragged},
                              drop=("compacted",))
 
-    t0 = time.time()
-    seed_out = _seed_loop(params, dc, sched, conds, key, steps=steps)
-    t_seed = time.time() - t0
+    t_seed, seed_out = _timed(_seed_loop, params, dc, sched, conds, key,
+                              steps=steps)
 
     eng = SynthesisEngine(params, dc, sched, image_size=16)
 
@@ -493,16 +592,14 @@ def run(preset: str = "paper", mode: str = "all", hosts: int = 2):
         return [eng.submit(enc[r, c], c, k, num_steps=steps)
                 for r in range(R) for c in range(C)]
 
-    t0 = time.time()
-    rids = submit_all()
-    out = eng.run(key)
-    t_cold = time.time() - t0
+    def cold_drain():
+        return submit_all(), eng.run(key)
+
+    t_cold, (rids, out) = _timed(cold_drain)
     assert sum(out[rid].shape[0] for rid in rids) == n == len(seed_out)
 
     rids2 = submit_all()
-    t0 = time.time()
-    out2 = eng.run(jax.random.PRNGKey(1))
-    t_warm = time.time() - t0
+    t_warm, out2 = _timed(eng.run, jax.random.PRNGKey(1))
     assert all(np.array_equal(out2[b], out[a])
                for a, b in zip(rids, rids2))
 
@@ -515,6 +612,8 @@ def run(preset: str = "paper", mode: str = "all", hosts: int = 2):
     multihost = _bench_multihost(params, dc, sched, enc, steps=steps, k=k,
                                  hosts=hosts)
     fused = _bench_fused(params, dc, sched, enc, steps=steps, k=k)
+    trace = _bench_trace(params, dc, sched, enc, steps=steps, k=k,
+                         hosts=hosts, trace_path=trace_path)
 
     rows = [
         {"path": "seed_loop", "wall_s": t_seed, "img_per_s": n / t_seed},
@@ -531,6 +630,7 @@ def run(preset: str = "paper", mode: str = "all", hosts: int = 2):
     _print_ragged(ragged, compacted)
     _print_multihost(multihost)
     _print_fused(fused)
+    _print_trace(trace)
     print(f"  streaming: padded {streaming['streaming_padded']} rows vs "
           f"{streaming['two_snapshots_padded']} snapshot-drained, "
           f"{streaming['streamed_requests']} requests admitted mid-drain")
@@ -544,7 +644,7 @@ def run(preset: str = "paper", mode: str = "all", hosts: int = 2):
            "speedup_warm": t_seed / max(t_warm, 1e-9),
            "engine_stats": dict(eng.stats),
            "ragged": ragged, "compacted": compacted,
-           "multihost": multihost, "fused": fused,
+           "multihost": multihost, "fused": fused, "trace": trace,
            **streaming, **store}
     save_result("BENCH_synthesis", res)
     return res
@@ -556,7 +656,7 @@ def main():
                     choices=("smoke", "quick", "paper"))
     ap.add_argument("--mode", default="all",
                     choices=("all", "ragged", "compacted", "multihost",
-                             "fused"),
+                             "fused", "trace"),
                     help="'ragged' runs only the grouped-vs-ragged mixed-"
                          "workload comparison and merges it into an "
                          "existing BENCH_synthesis.json; 'compacted' adds "
@@ -567,11 +667,16 @@ def main():
                          "bit-parity and the per-host scheduled==active "
                          "invariant; 'fused' runs the fused-vs-naive "
                          "denoiser comparison (ragged+compacted) with its "
-                         "fp32 parity gates")
+                         "fp32 parity gates; 'trace' runs every mode "
+                         "traced vs untraced, gating tracing bit-parity "
+                         "and the exported Chrome trace schema")
     ap.add_argument("--hosts", type=int, default=2,
-                    help="simulated host count for --mode multihost")
+                    help="simulated host count for --mode multihost/trace")
+    ap.add_argument("--trace", default=None, metavar="OUT_JSON",
+                    help="write the Perfetto-loadable Chrome trace (+ "
+                         "metrics dump) of the traced multihost drain here")
     args = ap.parse_args()
-    run(args.preset, args.mode, args.hosts)
+    run(args.preset, args.mode, args.hosts, trace_path=args.trace)
 
 
 if __name__ == "__main__":

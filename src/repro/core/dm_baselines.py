@@ -30,7 +30,7 @@ from repro.serve.synthesis import SynthesisEngine
 
 def _service(service, engine, ocfg, dm_params, sched, *,
              ragged: bool = False, compaction: int | str | None = None,
-             topology=None, hosts: int | None = None):
+             topology=None, hosts: int | None = None, tracer=None):
     """Every baseline's D_syn generation routes through a service.  An
     explicitly-passed engine beats a shared service (same precedence as
     ``oscar.synthesize``); otherwise the shared service, else a fresh
@@ -42,15 +42,15 @@ def _service(service, engine, ocfg, dm_params, sched, *,
         return SynthesisService(engine.opt_in(ragged=ragged,
                                               compaction=compaction,
                                               topology=topology,
-                                              hosts=hosts))
+                                              hosts=hosts, tracer=tracer))
     if service is not None:
         service.engine.opt_in(ragged=ragged, compaction=compaction,
-                              topology=topology, hosts=hosts)
+                              topology=topology, hosts=hosts, tracer=tracer)
         return service
     return SynthesisService(SynthesisEngine(
         dm_params, ocfg.diffusion, sched, image_size=ocfg.data.image_size,
         channels=ocfg.data.channels, ragged=ragged, compaction=compaction,
-        topology=topology, hosts=hosts))
+        topology=topology, hosts=hosts, tracer=tracer))
 
 
 def run_fedcado(key, ocfg: OscarConfig, data, dm_params, sched, *,
@@ -60,7 +60,7 @@ def run_fedcado(key, ocfg: OscarConfig, data, dm_params, sched, *,
                 service: SynthesisService | None = None,
                 ragged: bool = False,
                 compaction: int | str | None = None,
-                topology=None, hosts: int | None = None):
+                topology=None, hosts: int | None = None, tracer=None):
     classifier = classifier or ocfg.classifier
     k_samples = samples_per_category or ocfg.samples_per_category
     R = data.client_images.shape[0]
@@ -87,7 +87,8 @@ def run_fedcado(key, ocfg: OscarConfig, data, dm_params, sched, *,
     # are threaded so a FedCADO run next to cfg traffic leaves the shared
     # engine configured.)
     svc = _service(service, engine, ocfg, dm_params, sched, ragged=ragged,
-                   compaction=compaction, topology=topology, hosts=hosts)
+                   compaction=compaction, topology=topology, hosts=hosts,
+                   tracer=tracer)
 
     def make_logprob(pr):
         def logprob(x, labels):
@@ -122,7 +123,7 @@ def run_feddisc(key, ocfg: OscarConfig, data, dm_params, sched, fm: FrozenFM,
                 service: SynthesisService | None = None,
                 ragged: bool = False,
                 compaction: int | str | None = None,
-                topology=None, hosts: int | None = None):
+                topology=None, hosts: int | None = None, tracer=None):
     classifier = classifier or ocfg.classifier
     k_samples = samples_per_category or ocfg.samples_per_category
     R = data.client_images.shape[0]
@@ -155,7 +156,8 @@ def run_feddisc(key, ocfg: OscarConfig, data, dm_params, sched, fm: FrozenFM,
     # different guidance scale, in one compiled trajectory, and
     # ``compaction`` skips the frozen iterations of that mixing).
     svc = _service(service, engine, ocfg, dm_params, sched, ragged=ragged,
-                   compaction=compaction, topology=topology, hosts=hosts)
+                   compaction=compaction, topology=topology, hosts=hosts,
+                   tracer=tracer)
     rng = np.random.default_rng(0)
     futs, labels = [], []
     for r in range(R):

@@ -32,11 +32,15 @@ class Experiment:
 
     def __init__(self, ocfg: OscarConfig | None = None, *, verbose: bool = True,
                  pretrain_steps: int | None = None, cache_dir: str | None = None,
-                 hosts: int | None = None):
+                 hosts: int | None = None, tracer=None):
         """``hosts=H`` places every DM-assisted method's D_syn drains over
         an H-host serving topology (simulated in-process; see
         ``serve/topology.py``) — D_syn is bit-identical to any other host
-        count, so table rows do not depend on the serving layout."""
+        count, so table rows do not depend on the serving layout.
+
+        ``tracer`` (an ``obs/trace.py::Tracer``) records the shared
+        service's drain timelines and per-request latencies; export with
+        ``obs/export.py::write_trace``.  Tracing never changes D_syn."""
         self.ocfg = ocfg or OscarConfig()
         self.verbose = verbose
         key = jax.random.PRNGKey(self.ocfg.seed)
@@ -114,7 +118,7 @@ class Experiment:
                                       self.sched,
                                       image_size=self.ocfg.data.image_size,
                                       channels=self.ocfg.data.channels,
-                                      hosts=hosts)
+                                      hosts=hosts, tracer=tracer)
         # the store root folds in the experiment seed: D_syn depends on
         # the drain keys (derived from ocfg.seed), so two seeds sharing a
         # store would silently collapse to one sample
@@ -122,6 +126,7 @@ class Experiment:
             self.engine, key=jax.random.fold_in(self.key, 0xD5),
             store=SynthesisStore(
                 cache_dir / f"{tag}_dsyn_s{self.ocfg.seed}"))
+        self.tracer = self.engine.tracer
 
     def _clf_params(self, name):
         from repro.models.classifiers import (classifier_param_count,

@@ -54,7 +54,7 @@ def synthesize(key, dm_params, dc, sched, encodings, present, k_samples: int,
                use_pallas: bool = False, engine: SynthesisEngine | None = None,
                service: SynthesisService | None = None, wave_size: int = 128,
                ragged: bool = False, compaction: int | str | None = None,
-               topology=None, hosts: int | None = None):
+               topology=None, hosts: int | None = None, tracer=None):
     """Step (3): server-side D_syn generation.  Returns (images, labels).
 
     Synthesis is embarrassingly parallel over (client × category × sample);
@@ -70,8 +70,10 @@ def synthesize(key, dm_params, dc, sched, encodings, present, k_samples: int,
     further runs those waves as iteration-compacted nested segments, same
     bits, fewer scheduled row-iterations; ``topology``/``hosts`` places
     drains over a multi-host topology (per-host ingress queues and wave
-    windows — same bits again, any host count).  Opt-in only: they switch
-    a shared engine ON but never force a shared engine's mode back."""
+    windows — same bits again, any host count).  ``tracer`` (an
+    ``obs/trace.py::Tracer``) records the drain timeline and per-request
+    latencies without touching D_syn.  Opt-in only: they switch a shared
+    engine ON but never force a shared engine's mode back."""
     R, C, dim = encodings.shape
     svc, eng = service, engine
     if eng is not None:
@@ -87,10 +89,10 @@ def synthesize(key, dm_params, dc, sched, encodings, present, k_samples: int,
                               channels=channels, use_pallas=use_pallas,
                               wave_size=wave_size, ragged=ragged,
                               compaction=compaction, topology=topology,
-                              hosts=hosts)
+                              hosts=hosts, tracer=tracer)
     else:
         eng.opt_in(ragged=ragged, compaction=compaction, topology=topology,
-                   hosts=hosts)
+                   hosts=hosts, tracer=tracer)
     if svc is None:
         svc = SynthesisService(eng)
     futs, cats = [], []
@@ -119,7 +121,8 @@ def run_oscar(key, ocfg: OscarConfig, data, dm_params, sched, fm: FrozenFM,
               service: SynthesisService | None = None,
               ragged: bool = False,
               compaction: int | str | None = None,
-              topology=None, hosts: int | None = None) -> OscarResult:
+              topology=None, hosts: int | None = None,
+              tracer=None) -> OscarResult:
     classifier = classifier or ocfg.classifier
     k_samples = samples_per_category or ocfg.samples_per_category
     kenc, ksyn, kclf = jax.random.split(key, 3)
@@ -132,7 +135,7 @@ def run_oscar(key, ocfg: OscarConfig, data, dm_params, sched, fm: FrozenFM,
                               guidance=guidance, use_pallas=use_pallas,
                               engine=engine, service=service, ragged=ragged,
                               compaction=compaction, topology=topology,
-                              hosts=hosts)
+                              hosts=hosts, tracer=tracer)
     if len(syn_x) == 0:
         # degenerate round: no (client, category) present anywhere — no
         # D_syn, so the broadcast model is the untrained init

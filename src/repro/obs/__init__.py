@@ -1,0 +1,9 @@
+"""Observability for the serving stack: span tracing (``obs/trace.py``),
+typed metrics with latency quantiles (``obs/metrics.py``), and
+Perfetto-loadable timeline export (``obs/export.py``)."""
+from repro.obs.export import (chrome_trace, metrics_json,
+                              validate_chrome_trace, write_trace)
+from repro.obs.metrics import (Counter, Gauge, Histogram, MetricsRegistry,
+                               default_buckets)
+from repro.obs.trace import (LIFECYCLE_STAGES, FakeClock, Span, Tracer,
+                             NULL_SPAN)

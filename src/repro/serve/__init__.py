@@ -1,3 +1,4 @@
+from repro.obs import MetricsRegistry, Tracer, write_trace
 from repro.serve.service import SynthesisFuture, SynthesisService
 from repro.serve.steps import make_prefill_step, make_serve_step
 from repro.serve.store import SynthesisStore

@@ -25,6 +25,7 @@ from repro.configs.base import ModelConfig
 from repro.models.moe import Parallel
 from repro.models.transformer import forward
 from repro.models.attention import KVCache
+from repro.obs.metrics import MetricsRegistry
 from repro.serve.steps import make_serve_step
 
 
@@ -40,15 +41,24 @@ class Request:
 class ServeEngine:
     """Wave-based batched generation."""
 
+    _STAT_KEYS = ("waves", "prefilled", "decoded")
+
     def __init__(self, cfg: ModelConfig, params, *, max_len: int = 256,
-                 par: Parallel = Parallel()):
+                 par: Parallel = Parallel(),
+                 metrics: MetricsRegistry | None = None):
         assert cfg.supports_decode, f"{cfg.name} is encoder-only"
         self.cfg, self.params, self.par = cfg, params, par
         self.max_len = max_len
         self._decode = jax.jit(make_serve_step(cfg, par))
         self._queue: list[Request] = []
         self._next_rid = 0
-        self.stats = {"waves": 0, "prefilled": 0, "decoded": 0}
+        self.metrics = metrics if metrics is not None else MetricsRegistry()
+
+    @property
+    def stats(self) -> dict:
+        """Legacy dict view over the metrics registry (same keys the
+        pre-registry engine kept by hand)."""
+        return {k: self.metrics.get(k) for k in self._STAT_KEYS}
 
     def submit(self, prompt, max_new: int = 32, eos: int | None = None) -> int:
         rid = self._next_rid
@@ -87,8 +97,8 @@ class ServeEngine:
         logits, _, caches = forward(self.params, self.cfg, {"tokens": toks},
                                     self.par, mode="prefill")
         caches = self._pad_caches(caches, L)
-        self.stats["waves"] += 1
-        self.stats["prefilled"] += len(wave)
+        self.metrics.inc("waves")
+        self.metrics.inc("prefilled", len(wave))
         cur = jnp.argmax(logits[:, -1, :self.cfg.vocab_size], -1)[:, None]
         cur = cur.astype(jnp.int32)
         done = [False] * len(wave)
@@ -97,7 +107,7 @@ class ServeEngine:
         for i in range(budget - 1):
             cur, _, caches = self._decode(self.params, cur, caches,
                                           jnp.int32(L + i))
-            self.stats["decoded"] += len(wave)
+            self.metrics.inc("decoded", len(wave))
             toks_np = np.asarray(cur[:, 0]) % self.cfg.vocab_size
             for j, (r, t) in enumerate(zip(wave, toks_np)):
                 if done[j]:

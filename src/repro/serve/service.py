@@ -34,6 +34,7 @@ from typing import Any, Callable, Optional
 import jax
 import numpy as np
 
+from repro.obs.trace import Tracer
 from repro.serve.store import SynthesisStore
 from repro.serve.synthesis import SynthesisEngine
 
@@ -75,7 +76,8 @@ class SynthesisService:
                  ragged: bool | None = None,
                  compaction: int | str | None = None,
                  topology=None, hosts: int | None = None,
-                 store_max_bytes: int | None = None):
+                 store_max_bytes: int | None = None,
+                 tracer: Tracer | None = None):
         """``ragged`` (opt-in) switches the engine to ragged waves: every
         classifier-free group shares one compiled per-row (guidance,
         steps) trajectory — see ``SynthesisEngine``.  Cache and store
@@ -98,17 +100,23 @@ class SynthesisService:
         ``store_max_bytes`` is the persistent store's size budget: after
         every drain the least-recently-used shards are evicted until the
         store fits (a long-lived server stops growing without bound).
+
+        ``tracer`` (an ``obs/trace.py::Tracer``) records every drain's
+        span timeline and request lifecycle; the service derives
+        ``request.queue_wait`` / ``request.e2e_latency`` histograms from
+        the stamps after each drain.  Opt-in only, like the other knobs.
         """
         if store is not None and not isinstance(store, SynthesisStore):
             store = SynthesisStore(store)
         if store is not None:
             engine.store = store
         engine.opt_in(ragged=ragged, compaction=compaction,
-                      topology=topology, hosts=hosts)
+                      topology=topology, hosts=hosts, tracer=tracer)
         self.engine = engine
         self.store = engine.store
         self.store_max_bytes = store_max_bytes
         self._evicted_entries = 0
+        self._observed: set[int] = set()   # rids whose latencies are recorded
         if key is None:
             key = jax.random.PRNGKey(0)
         elif isinstance(key, int):
@@ -185,12 +193,34 @@ class SynthesisService:
                         and self.store_max_bytes is not None):
                     self._evicted_entries += len(
                         self.store.evict(self.store_max_bytes))
+                self._observe_latencies()
+
+    def _observe_latencies(self):
+        """Fold each request's lifecycle stamps into the engine's
+        ``request.queue_wait`` / ``request.e2e_latency`` histograms —
+        once per rid, however many drains or gathers follow."""
+        tr, m = self.engine.tracer, self.engine.metrics
+        if not tr.enabled:
+            return
+        for rid in tr.lifecycle:
+            if rid in self._observed:
+                continue
+            lat = tr.request_latency(rid)
+            if "e2e_latency" not in lat:
+                continue                    # still in flight
+            self._observed.add(rid)
+            m.observe("request.e2e_latency", lat["e2e_latency"])
+            if "queue_wait" in lat:
+                m.observe("request.queue_wait", lat["queue_wait"])
 
     def gather(self, futures: list[SynthesisFuture],
                key=None) -> list[np.ndarray]:
-        """Results for ``futures`` in order, draining (once) if needed."""
+        """Results for ``futures`` in order, draining (once) if needed.
+        Queue-wait and end-to-end latency for every request served so
+        far land in the engine metrics as ``request.*`` histograms."""
         if any(not f.done() for f in futures):
             self.drain(key)
+        self._observe_latencies()
         return [f.result() for f in futures]
 
     @property
@@ -199,4 +229,9 @@ class SynthesisService:
         s["drains"] = self._drain_i
         s["store_entries"] = len(self.store) if self.store is not None else 0
         s["store_evicted"] = self._evicted_entries
+        if self.engine.tracer.enabled:
+            m = self.engine.metrics
+            s["latency"] = {
+                "queue_wait": m.get("request.queue_wait", default=None),
+                "e2e_latency": m.get("request.e2e_latency", default=None)}
         return s

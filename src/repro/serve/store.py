@@ -31,10 +31,14 @@ from __future__ import annotations
 import hashlib
 import json
 import os
+import time
 from pathlib import Path
 from typing import Optional
 
 import numpy as np
+
+from repro.obs.metrics import MetricsRegistry
+from repro.obs.trace import Tracer
 
 _VERSION = 1
 
@@ -51,6 +55,11 @@ class SynthesisStore:
     """On-disk companion to the engine's in-memory output cache."""
 
     def __init__(self, root: str | Path):
+        # standalone defaults; ``bind`` swaps in the engine's shared
+        # registry/tracer at drain start so store I/O lands on the same
+        # timeline and metrics dump as the waves it feeds
+        self.metrics = MetricsRegistry()
+        self.tracer = Tracer(enabled=False)
         self.root = Path(root)
         self._shards = self.root / "shards"
         self._rows: dict[str, np.ndarray] = {}      # loaded / pending shards
@@ -70,6 +79,11 @@ class SynthesisStore:
         self._clock = 1 + max((e.get("lru", 0)
                                for e in self._manifest["entries"].values()),
                               default=0)
+
+    def bind(self, metrics: MetricsRegistry, tracer: Tracer):
+        """Adopt the engine's shared metrics registry and tracer."""
+        self.metrics = metrics
+        self.tracer = tracer
 
     def _touch(self, slug: str):
         ent = self._manifest["entries"].get(slug)
@@ -93,9 +107,11 @@ class SynthesisStore:
         s = _slug(cache_key)
         if s in self._rows:
             self._touch(s)
+            self.metrics.inc("store.hits")
             return self._rows[s]
         ent = self._manifest["entries"].get(s)
         if ent is None:
+            self.metrics.inc("store.misses")
             return None
         enc_hash, guidance, steps = cache_key
         if (ent["key"]["encoding_sha1"] != enc_hash
@@ -105,11 +121,15 @@ class SynthesisStore:
                 f"store {self.root}: shard {s} records a different cache "
                 f"key than requested — refusing to serve the wrong D_syn")
         try:
-            with np.load(self._shards / f"{s}.npz") as z:
-                rows = z["rows"]
+            t0 = time.perf_counter()
+            with self.tracer.span("store.read", track="store", slug=s):
+                with np.load(self._shards / f"{s}.npz") as z:
+                    rows = z["rows"]
+            self.metrics.observe("store.read_s", time.perf_counter() - t0)
         except FileNotFoundError:
             # another handle evicted the shard after we read the manifest
             # — a miss, not corruption: re-synthesize and heal
+            self.metrics.inc("store.misses")
             return None
         if (list(rows.shape[1:]) != list(ent["shape"])[1:]
                 or str(rows.dtype) != ent["dtype"]):
@@ -118,9 +138,11 @@ class SynthesisStore:
                 f"entry (shape {rows.shape}/{ent['shape']}, dtype "
                 f"{rows.dtype}/{ent['dtype']})")
         if len(rows) < ent["count"]:
+            self.metrics.inc("store.misses")
             return None                     # lost flush race: re-synthesize
         self._rows[s] = rows = rows[:ent["count"]]
         self._touch(s)
+        self.metrics.inc("store.hits")
         return rows
 
     def __contains__(self, cache_key: tuple) -> bool:
@@ -168,14 +190,21 @@ class SynthesisStore:
         if not self._dirty:
             return
         self._shards.mkdir(parents=True, exist_ok=True)
-        for s in sorted(self._dirty):
-            # pid-suffixed like the manifest tmp: concurrent flushes must
-            # never interleave writes into one tmp and publish a torn npz
-            tmp = self._shards / f"{s}.{os.getpid()}.tmp"
-            with open(tmp, "wb") as f:
-                np.savez(f, rows=self._rows[s])
-            os.replace(tmp, self._shards / f"{s}.npz")
-        self._write_manifest()
+        with self.tracer.span("store.flush", track="store",
+                              shards=len(self._dirty)):
+            for s in sorted(self._dirty):
+                # pid-suffixed like the manifest tmp: concurrent flushes
+                # must never interleave writes into one tmp and publish a
+                # torn npz
+                t0 = time.perf_counter()
+                with self.tracer.span("store.write", track="store", slug=s):
+                    tmp = self._shards / f"{s}.{os.getpid()}.tmp"
+                    with open(tmp, "wb") as f:
+                        np.savez(f, rows=self._rows[s])
+                    os.replace(tmp, self._shards / f"{s}.npz")
+                self.metrics.observe("store.write_s",
+                                     time.perf_counter() - t0)
+            self._write_manifest()
         self._dirty.clear()
 
     def _write_manifest(self):
@@ -233,6 +262,7 @@ class SynthesisStore:
                 break
             total -= self._entry_bytes(ent)
             victims.append(s)
+        self.metrics.inc("store.evictions", len(victims))
         for s in victims:
             entries.pop(s)
             self._rows.pop(s, None)

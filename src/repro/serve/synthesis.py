@@ -112,6 +112,8 @@ from repro.diffusion.sampler import (_window_segment, sample_cfg,
                                      sample_cfg_compacted, sample_cfg_ragged,
                                      sample_classifier_guided, sample_uncond)
 from repro.diffusion.schedule import NoiseSchedule
+from repro.obs.metrics import MetricsRegistry
+from repro.obs.trace import Tracer
 from repro.serve.topology import HostTopology, WavePlacement
 
 
@@ -223,7 +225,9 @@ class SynthesisEngine:
                  compaction: int | str | None = None,
                  compaction_compile_cost: int = 256,
                  topology: HostTopology | None = None,
-                 hosts: int | None = None):
+                 hosts: int | None = None,
+                 tracer: Tracer | None = None,
+                 metrics: MetricsRegistry | None = None):
         self.dm_params, self.dc, self.sched = dm_params, dc, sched
         self.image_size, self.channels = image_size, channels
         self.eta, self.use_pallas = eta, use_pallas
@@ -262,13 +266,38 @@ class SynthesisEngine:
         # plan_epochs treats a split that lands in a bucket as
         # compile-free, so recurring wave shapes compact deeper
         self._segment_geoms: set[tuple] = set()
-        self.stats = {"requests": 0, "waves": 0, "generated": 0,
-                      "padded": 0, "cache_hits": 0, "store_hits": 0,
-                      "streamed": 0, "merged_waves": 0, "compiled_shapes": 0,
-                      "segments": 0,
-                      "row_iters_scheduled": 0, "row_iters_active": 0}
+        # observability: a disabled tracer is the default (near-zero-cost
+        # no-op spans/stamps); every counter lives in the registry and
+        # the legacy ``stats`` dict is a read-only VIEW over it
+        self.tracer = tracer if tracer is not None else Tracer(enabled=False)
+        self.metrics = metrics if metrics is not None else MetricsRegistry()
         if topology is not None or hosts is not None:
             self.set_topology(topology if topology is not None else hosts)
+
+    #: legacy counter keys, in the order the pre-registry stats dict
+    #: carried them — the view preserves both names and order bit-for-bit
+    _STAT_KEYS = ("requests", "waves", "generated", "padded", "cache_hits",
+                  "store_hits", "streamed", "merged_waves",
+                  "compiled_shapes", "segments",
+                  "row_iters_scheduled", "row_iters_active")
+    _HOST_STAT_KEYS = ("rows", "padded", "waves", "row_iters_scheduled",
+                       "row_iters_active", "queue_depth_at_start")
+
+    @property
+    def stats(self) -> dict:
+        """Backward-compatible dict view over the metrics registry: all
+        pre-registry keys (including the per-host breakdown under a
+        topology) with identical values.  A fresh dict per read — bump
+        counters through ``self.metrics``, not this view."""
+        m = self.metrics
+        s = {k: m.get(k) for k in self._STAT_KEYS}
+        if self.topology is not None:
+            s["hosts"] = self.topology.num_hosts
+            s["per_host"] = [
+                {k: m.get(f"host.{k}", host=h)
+                 for k in self._HOST_STAT_KEYS}
+                for h in range(self.topology.num_hosts)]
+        return s
 
     def set_topology(self, topology):
         """Normalize + apply the placement knob.  ``None`` leaves the
@@ -300,12 +329,14 @@ class SynthesisEngine:
                               # must not wipe the per-host accounting
         self.topology = topology
         self._host_shardings = {}
-        self.stats["hosts"] = topology.num_hosts
-        self.stats["per_host"] = [
-            {"rows": 0, "padded": 0, "waves": 0,
-             "row_iters_scheduled": 0, "row_iters_active": 0,
-             "queue_depth_at_start": 0}
-            for _ in range(topology.num_hosts)]
+        # counters from another layout cannot be merged: drop the old
+        # breakdown, then materialize zeroed counters for every host so
+        # the stats view (and the metrics dump) lists each one
+        self.metrics.drop("host.")
+        self.metrics.set_gauge("hosts", topology.num_hosts)
+        for h in range(topology.num_hosts):
+            for k in self._HOST_STAT_KEYS:
+                self.metrics.counter(f"host.{k}", host=h)
 
     def set_compaction(self, compaction):
         """Normalize + apply the compaction knob.  ``None`` leaves the
@@ -327,22 +358,26 @@ class SynthesisEngine:
         self.ragged = True
 
     def opt_in(self, *, ragged: bool | None = None, compaction=None,
-               topology=None, hosts: int | None = None):
+               topology=None, hosts: int | None = None,
+               tracer: Tracer | None = None):
         """Thread scheduling knobs from a run entry point, OPT-IN ONLY:
         ``ragged=True`` switches this engine to ragged waves,
         ``compaction`` (``"full"``/``"auto"``/int K) enables compacted
-        scheduling, and ``topology``/``hosts`` places drains over a host
-        topology — but none of them ever forces a shared engine's mode
-        back: ``ragged=False``/``None``, ``compaction="off"``/``None``,
-        and ``topology=None``/``hosts=None`` leave it alone here (disable
-        directly via the attribute or the ``set_*`` helpers).  This is
-        THE contract every runner and the service constructor share; keep
-        them on this helper."""
+        scheduling, ``topology``/``hosts`` places drains over a host
+        topology, and ``tracer`` attaches a span/lifecycle tracer — but
+        none of them ever forces a shared engine's mode back:
+        ``ragged=False``/``None``, ``compaction="off"``/``None``,
+        ``topology=None``/``hosts=None``, and ``tracer=None`` leave it
+        alone here (disable directly via the attribute or the ``set_*``
+        helpers).  This is THE contract every runner and the service
+        constructor share; keep them on this helper."""
         if ragged:
             self.ragged = True
         if compaction != "off":
             self.set_compaction(compaction)
         self.set_topology(topology if topology is not None else hosts)
+        if tracer is not None:
+            self.tracer = tracer
         return self
 
     # -- submission -------------------------------------------------------
@@ -423,17 +458,23 @@ class SynthesisEngine:
         """
         stream = (poll is not None) if stream is None else stream
         results: dict[int, np.ndarray] = {}
-        try:
-            self._drain(key, results, poll=poll, stream=stream,
-                        on_result=on_result)
-        finally:
-            if self.store is not None:
-                self.store.flush()
-            # in-place removal, not a rebuild: a concurrent submit from
-            # another thread (SynthesisService) may append mid-removal and
-            # a rebuilt list would silently drop that request
-            for r in [r for r in self._queue if r.rid in results]:
-                self._queue.remove(r)
+        if self.store is not None:
+            # store observability rides the engine's tracer/registry —
+            # shard I/O spans land on the exported store track
+            self.store.bind(self.metrics, self.tracer)
+        with self.tracer.span("drain", queued=len(self._queue)):
+            try:
+                self._drain(key, results, poll=poll, stream=stream,
+                            on_result=on_result)
+            finally:
+                if self.store is not None:
+                    self.store.flush()
+                # in-place removal, not a rebuild: a concurrent submit
+                # from another thread (SynthesisService) may append
+                # mid-removal and a rebuilt list would silently drop
+                # that request
+                for r in [r for r in self._queue if r.rid in results]:
+                    self._queue.remove(r)
         return results
 
     # -- internals --------------------------------------------------------
@@ -445,7 +486,8 @@ class SynthesisEngine:
         req.rid = self._next_rid
         self._next_rid += 1
         self._queue.append(req)
-        self.stats["requests"] += 1
+        self.metrics.inc("requests")
+        self.tracer.stamp(req.rid, "admit")
         return req.rid
 
     def _group_key(self, r: SynthesisRequest):
@@ -463,7 +505,7 @@ class SynthesisEngine:
             rows = self.store.get(ck)
             if rows is not None:
                 self._cache[ck] = rows
-                self.stats["store_hits"] += len(rows)
+                self.metrics.inc("store_hits", len(rows))
         return rows
 
     def _plan_waves(self, n: int) -> tuple[int, int]:
@@ -483,7 +525,7 @@ class SynthesisEngine:
         """Track distinct compiled wave geometries (the jit-static part of
         a wave's sampler signature) — the benchmark's compile-count lens."""
         self.traj_shapes.add(sig)
-        self.stats["compiled_shapes"] = len(self.traj_shapes)
+        self.metrics.set_gauge("compiled_shapes", len(self.traj_shapes))
 
     def _row_keys(self, meta, key):
         """Per-row noise keys: ``fold_in(fold_in(drain_key, rid),
@@ -522,7 +564,7 @@ class SynthesisEngine:
             self._note_shape(("cfg-seg", prev, rows, end - begin))
             self._segment_geoms.add((prev, rows, end - begin))
             prev = rows
-        self.stats["segments"] += len(epochs)
+        self.metrics.inc("segments", len(epochs))
         x = sample_cfg_compacted(self.dm_params, self.dc, self.sched,
                                  self._shard(jnp.asarray(cond_rows)),
                                  row_keys, jnp.asarray(g), steps,
@@ -582,11 +624,13 @@ class SynthesisEngine:
     def _drain(self, key, results, *, poll, stream, on_result=None):
         st = _DrainState()
         st.on_result = on_result
-        self._admit_new(st, results)
+        st.tracer = self.tracer       # deliver stamps ride the drain state
+        with self.tracer.span("drain.admit"):
+            self._admit_new(st, results)
         st.started = True             # later admissions count as streamed
         if self.topology is not None:
             for h, q in enumerate(self._host_depths(st)):
-                self.stats["per_host"][h]["queue_depth_at_start"] += q
+                self.metrics.inc("host.queue_depth_at_start", q, host=h)
         while True:
             live = sorted(g for g, q in st.groups.items()
                           if q.rows_available())
@@ -623,7 +667,7 @@ class SynthesisEngine:
                 continue
             st.admitted.add(r.rid)
             if st.started:
-                self.stats["streamed"] += 1
+                self.metrics.inc("streamed")
             if r.count <= 0:               # degenerate: nothing to generate
                 st.deliver(results, r.rid, np.zeros(
                     (0, self.image_size, self.image_size, self.channels),
@@ -635,7 +679,7 @@ class SynthesisEngine:
                 have = ((0 if cached is None else len(cached))
                         + st.planned.get(r.cache_key, 0))
             fresh = max(r.count - have, 0)
-            self.stats["cache_hits"] += r.count - fresh
+            self.metrics.inc("cache_hits", r.count - fresh)
             if fresh == 0:
                 cached = self._cached_rows(r.cache_key)
                 if cached is not None and len(cached) >= r.count:
@@ -653,6 +697,7 @@ class SynthesisEngine:
             if gk not in st.groups:
                 st.groups[gk] = (_ShardedGroup(r, self.topology.num_hosts)
                                  if placed else _GroupQueue(r))
+            self.tracer.stamp(r.rid, "enqueue")
             if placed:
                 # ingress routing keyed by request IDENTITY, not arrival
                 # order: a replayed trace lands every request on the same
@@ -702,53 +747,69 @@ class SynthesisEngine:
             # rounds to a granule multiple (one extra compiled tail shape)
             target = (-(-got // self.granule) * self.granule if stream
                       else wave_rows)
-            rows = np.concatenate([p.row_block(t, s) for p, t, s in parts])
-            meta = None
-            if ragged:
-                # (guidance, steps, rid, absolute row index) per row; the
-                # index offsets past the cached prefix so a top-up row has
-                # the same identity whichever drain generates it
-                meta = [(p.req.guidance, p.req.num_steps, p.req.rid,
-                         p.req.count - p.fresh + s + i)
-                        for p, t, s in parts for i in range(t)]
-            if target > got:
-                rows = np.concatenate(
-                    [rows, np.repeat(rows[-1:], target - got, axis=0)])
+            with self.tracer.span("wave.pack", wave=st.wave_i, host=0,
+                                  rows=target, real=got):
+                rows = np.concatenate([p.row_block(t, s)
+                                       for p, t, s in parts])
+                meta = None
                 if ragged:
-                    # padding duplicates the last row's identity: same key,
-                    # same cond — a discarded bit-identical copy that can
-                    # never perturb the real rows
-                    meta += [meta[-1]] * (target - got)
+                    # (guidance, steps, rid, absolute row index) per row;
+                    # the index offsets past the cached prefix so a top-up
+                    # row has the same identity whichever drain generates
+                    # it
+                    meta = [(p.req.guidance, p.req.num_steps, p.req.rid,
+                             p.req.count - p.fresh + s + i)
+                            for p, t, s in parts for i in range(t)]
+                if target > got:
+                    rows = np.concatenate(
+                        [rows, np.repeat(rows[-1:], target - got, axis=0)])
+                    if ragged:
+                        # padding duplicates the last row's identity: same
+                        # key, same cond — a discarded bit-identical copy
+                        # that can never perturb the real rows
+                        meta += [meta[-1]] * (target - got)
+            for p, _, _ in parts:
+                self.tracer.stamp(p.req.rid, "pack")
             kw = jax.random.fold_in(key, st.wave_i)
             st.wave_i += 1
-            if ragged:
-                smax = max(smax, *(m[1] for m in meta))
-                # honest device-work accounting, split two ways:
-                # ``row_iters_active`` is the useful work — each REAL
-                # row's own step count (padding duplicates are discarded,
-                # so they are never useful); ``row_iters_scheduled`` is
-                # what the device actually ran, padding included.
-                # One-shot ragged schedules every row for the wave's step
-                # ceiling (frozen right-aligned rows ride the denoiser —
-                # the price of one shared geometry); compaction closes
-                # the gap by skipping frozen epochs.
-                active_iters = int(sum(m[1] for m in meta[:got]))
-                if self.compaction is not None:
-                    x, sched_iters = \
-                        self._sample_wave_compacted(rows, meta, key, smax)
+            with self.tracer.span("wave.dispatch", wave=st.wave_i - 1,
+                                  host=0, rows=target,
+                                  mode=q.head.mode) as sp:
+                if ragged:
+                    smax = max(smax, *(m[1] for m in meta))
+                    # honest device-work accounting, split two ways:
+                    # ``row_iters_active`` is the useful work — each REAL
+                    # row's own step count (padding duplicates are
+                    # discarded, so they are never useful);
+                    # ``row_iters_scheduled`` is what the device actually
+                    # ran, padding included.  One-shot ragged schedules
+                    # every row for the wave's step ceiling (frozen
+                    # right-aligned rows ride the denoiser — the price of
+                    # one shared geometry); compaction closes the gap by
+                    # skipping frozen epochs.
+                    active_iters = int(sum(m[1] for m in meta[:got]))
+                    if self.compaction is not None:
+                        x, sched_iters = \
+                            self._sample_wave_compacted(rows, meta, key,
+                                                        smax)
+                    else:
+                        x = self._sample_wave_ragged(rows, meta, key, smax)
+                        sched_iters = target * smax
+                    self.metrics.inc("merged_waves")
+                    self.metrics.inc("row_iters_scheduled", sched_iters)
+                    self.metrics.inc("row_iters_active", active_iters)
+                    sp.set(iters_scheduled=sched_iters)
                 else:
-                    x = self._sample_wave_ragged(rows, meta, key, smax)
-                    sched_iters = target * smax
-                self.stats["merged_waves"] += 1
-                self.stats["row_iters_scheduled"] += sched_iters
-                self.stats["row_iters_active"] += active_iters
-            else:
-                x = self._sample_wave(q.head, rows, kw)
-                self.stats["row_iters_scheduled"] += target * q.head.num_steps
-                self.stats["row_iters_active"] += got * q.head.num_steps
-            self.stats["waves"] += 1
-            self.stats["generated"] += target
-            self.stats["padded"] += target - got
+                    x = self._sample_wave(q.head, rows, kw)
+                    self.metrics.inc("row_iters_scheduled",
+                                     target * q.head.num_steps)
+                    self.metrics.inc("row_iters_active",
+                                     got * q.head.num_steps)
+            for p, _, _ in parts:
+                self.tracer.stamp(p.req.rid, "dispatch")
+            self.metrics.inc("waves")
+            self.metrics.inc("generated", target)
+            self.metrics.inc("padded", target - got)
             if inflight is not None:
                 self._retire(st, results, *inflight)
             if self.async_waves:
@@ -799,25 +860,33 @@ class SynthesisEngine:
                 [sum(t for _, t, _ in parts) for parts in parts_h],
                 topo.granules)
             st.wave_i += 1
+            for parts in parts_h:
+                for p, _, _ in parts:
+                    self.tracer.stamp(p.req.rid, "pack")
             deep = max(p.req.num_steps
                        for parts in parts_h for p, _, _ in parts)
             smax = max(smax, deep)
             xs, invs, host_stats = self._sample_wave_placed(
-                parts_h, placement, key, smax)
-            self.stats["waves"] += 1
+                parts_h, placement, key, smax, wave=st.wave_i - 1)
+            for parts in parts_h:
+                for p, _, _ in parts:
+                    self.tracer.stamp(p.req.rid, "dispatch")
+            self.metrics.inc("waves")
             if self.ragged:
-                self.stats["merged_waves"] += 1
-            self.stats["generated"] += placement.total_rows
-            self.stats["padded"] += placement.padded
+                self.metrics.inc("merged_waves")
+            self.metrics.inc("generated", placement.total_rows)
+            self.metrics.inc("padded", placement.padded)
             for w, hs in zip(placement.windows, host_stats):
-                ph = self.stats["per_host"][w.host]
-                ph["rows"] += w.real
-                ph["padded"] += w.rows - w.real
-                ph["waves"] += 1
-                ph["row_iters_scheduled"] += hs["scheduled"]
-                ph["row_iters_active"] += hs["active"]
-                self.stats["row_iters_scheduled"] += hs["scheduled"]
-                self.stats["row_iters_active"] += hs["active"]
+                h = w.host
+                self.metrics.inc("host.rows", w.real, host=h)
+                self.metrics.inc("host.padded", w.rows - w.real, host=h)
+                self.metrics.inc("host.waves", host=h)
+                self.metrics.inc("host.row_iters_scheduled",
+                                 hs["scheduled"], host=h)
+                self.metrics.inc("host.row_iters_active", hs["active"],
+                                 host=h)
+                self.metrics.inc("row_iters_scheduled", hs["scheduled"])
+                self.metrics.inc("row_iters_active", hs["active"])
             if inflight is not None:
                 self._retire_placed(st, results, *inflight)
             if self.async_waves:
@@ -829,7 +898,7 @@ class SynthesisEngine:
             self._retire_placed(st, results, *inflight)
 
     def _sample_wave_placed(self, parts_h, placement: WavePlacement, key,
-                            max_steps: int):
+                            max_steps: int, wave: int = -1):
         """Sample one placed wave window by window.
 
         Assembles the merged wave in window order — each window's rows,
@@ -844,47 +913,51 @@ class SynthesisEngine:
         counts."""
         win_rows, win_meta, win_inv, win_plans, host_stats = [], [], [], [], []
         for w in placement.windows:
-            parts = parts_h[w.host]
-            rows = np.concatenate([p.row_block(t, s) for p, t, s in parts])
-            # (guidance, steps, rid, absolute row index) — identical row
-            # identity to the single-host packers, so any engine serving
-            # these requests draws the same noise streams
-            meta = [(p.req.guidance, p.req.num_steps, p.req.rid,
-                     p.req.count - p.fresh + s + i)
-                    for p, t, s in parts for i in range(t)]
-            if w.rows > w.real:
-                # per-window padding duplicates the window's OWN last row
-                # (same identity → a discarded bit-identical copy)
-                rows = np.concatenate(
-                    [rows, np.repeat(rows[-1:], w.rows - w.real, axis=0)])
-                meta += [meta[-1]] * (w.rows - w.real)
-            # useful work: each REAL row's own step count, pre-sort
-            active = int(sum(m[1] for m in meta[:w.real]))
-            steps_w = np.array([m[1] for m in meta], np.int32)
-            if self.compaction is not None:
-                seg_granule = (self.topology.granules[w.host]
-                               if self.mesh is not None else 1)
-                geoms = self._window_geoms.setdefault(
-                    (w.offset, placement.total_rows), set())
-                order, epochs = plan_epochs(
-                    steps_w, max_steps, compaction=self.compaction,
-                    granule=seg_granule, geoms=geoms,
-                    compile_cost=self.compaction_compile_cost)
-                rows = rows[order]
-                meta = [meta[i] for i in order]
-                inv = np.empty_like(order)
-                inv[order] = np.arange(len(order))
-            else:
-                # one segment spanning the whole scan: right-aligned rows
-                # ride frozen, exactly like the one-shot ragged wave
-                epochs, inv = ((w.rows, 0, max_steps),), None
-            win_rows.append(rows)
-            win_meta.append(meta)
-            win_inv.append(inv)
-            win_plans.append(epochs)
-            host_stats.append({"active": active,
-                               "scheduled": sum(r * (e - b)
-                                                for r, b, e in epochs)})
+            with self.tracer.span("window.pack", wave=wave, **w.span_attrs):
+                parts = parts_h[w.host]
+                rows = np.concatenate([p.row_block(t, s)
+                                       for p, t, s in parts])
+                # (guidance, steps, rid, absolute row index) — identical
+                # row identity to the single-host packers, so any engine
+                # serving these requests draws the same noise streams
+                meta = [(p.req.guidance, p.req.num_steps, p.req.rid,
+                         p.req.count - p.fresh + s + i)
+                        for p, t, s in parts for i in range(t)]
+                if w.rows > w.real:
+                    # per-window padding duplicates the window's OWN last
+                    # row (same identity → a discarded bit-identical copy)
+                    rows = np.concatenate(
+                        [rows,
+                         np.repeat(rows[-1:], w.rows - w.real, axis=0)])
+                    meta += [meta[-1]] * (w.rows - w.real)
+                # useful work: each REAL row's own step count, pre-sort
+                active = int(sum(m[1] for m in meta[:w.real]))
+                steps_w = np.array([m[1] for m in meta], np.int32)
+                if self.compaction is not None:
+                    seg_granule = (self.topology.granules[w.host]
+                                   if self.mesh is not None else 1)
+                    geoms = self._window_geoms.setdefault(
+                        (w.offset, placement.total_rows), set())
+                    order, epochs = plan_epochs(
+                        steps_w, max_steps, compaction=self.compaction,
+                        granule=seg_granule, geoms=geoms,
+                        compile_cost=self.compaction_compile_cost)
+                    rows = rows[order]
+                    meta = [meta[i] for i in order]
+                    inv = np.empty_like(order)
+                    inv[order] = np.arange(len(order))
+                else:
+                    # one segment spanning the whole scan: right-aligned
+                    # rows ride frozen, exactly like the one-shot ragged
+                    # wave
+                    epochs, inv = ((w.rows, 0, max_steps),), None
+                win_rows.append(rows)
+                win_meta.append(meta)
+                win_inv.append(inv)
+                win_plans.append(epochs)
+                host_stats.append({"active": active,
+                                   "scheduled": sum(r * (e - b)
+                                                    for r, b, e in epochs)})
         meta_wave = [m for ms in win_meta for m in ms]
         cond = np.concatenate(win_rows)
         g = jnp.asarray([m[0] for m in meta_wave], jnp.float32)
@@ -901,35 +974,43 @@ class SynthesisEngine:
             x = jnp.zeros((0, self.image_size, self.image_size,
                            self.channels))
             prev = 0
-            for rows, begin, end in epochs:
-                # full executable key: a window segment specializes on
-                # (wave width, offset, carried, live, iterations)
-                self._note_shape(("cfg-win", B, lo, prev, rows, end - begin))
-                if self.compaction is not None:
-                    self._window_geoms[(lo, B)].add((prev, rows, end - begin))
-                    self.stats["segments"] += 1
-                hi = lo + rows
-                args = dict(y=y[lo:hi], rk=row_keys[lo:hi], g=g,
-                            ts=ts[lo:hi, begin:end],
-                            jloc=jloc[lo:hi, begin:end],
-                            ab_t=ab_t[:, begin:end],
-                            ab_prev=ab_prev[:, begin:end],
-                            act=act[:, begin:end])
-                if sh is not None:
-                    # the row-window layout (wave_window_specs): window
-                    # rows shard over the host submesh's data axes, the
-                    # wave-resident tables replicate onto that submesh
-                    args = {k: jax.device_put(v, sh[k])
-                            for k, v in args.items()}
-                x = _window_segment(self.dm_params, self.dc, x, args["y"],
-                                    args["rk"], args["g"], args["ts"],
-                                    args["jloc"], args["ab_t"],
-                                    args["ab_prev"], args["act"],
-                                    row_offset=lo,
-                                    image_size=self.image_size,
-                                    channels=self.channels, eta=self.eta,
-                                    use_pallas=self.use_pallas)
-                prev = rows
+            with self.tracer.span("window.dispatch", wave=wave,
+                                  segments=len(epochs), **w.span_attrs):
+                for rows, begin, end in epochs:
+                    # full executable key: a window segment specializes on
+                    # (wave width, offset, carried, live, iterations)
+                    self._note_shape(("cfg-win", B, lo, prev, rows,
+                                      end - begin))
+                    if self.compaction is not None:
+                        self._window_geoms[(lo, B)].add(
+                            (prev, rows, end - begin))
+                        self.metrics.inc("segments")
+                    hi = lo + rows
+                    args = dict(y=y[lo:hi], rk=row_keys[lo:hi], g=g,
+                                ts=ts[lo:hi, begin:end],
+                                jloc=jloc[lo:hi, begin:end],
+                                ab_t=ab_t[:, begin:end],
+                                ab_prev=ab_prev[:, begin:end],
+                                act=act[:, begin:end])
+                    if sh is not None:
+                        # the row-window layout (wave_window_specs):
+                        # window rows shard over the host submesh's data
+                        # axes, the wave-resident tables replicate onto
+                        # that submesh
+                        args = {k: jax.device_put(v, sh[k])
+                                for k, v in args.items()}
+                    with self.tracer.span("segment.dispatch", host=w.host,
+                                          rows=rows, begin=begin, end=end):
+                        x = _window_segment(
+                            self.dm_params, self.dc, x, args["y"],
+                            args["rk"], args["g"], args["ts"],
+                            args["jloc"], args["ab_t"],
+                            args["ab_prev"], args["act"],
+                            row_offset=lo,
+                            image_size=self.image_size,
+                            channels=self.channels, eta=self.eta,
+                            use_pallas=self.use_pallas)
+                    prev = rows
             xs.append(jnp.clip(x, -1.0, 1.0))
         return xs, win_inv, host_stats
 
@@ -962,8 +1043,9 @@ class SynthesisEngine:
                        placement: WavePlacement, parts_h):
         """Fence on every window, unsort compacted windows back to pack
         order, strip per-window padding, scatter rows to requests."""
-        for x in xs:
-            jax.block_until_ready(x)
+        for w, x in zip(placement.windows, xs):
+            with self.tracer.span("device.scan", host=w.host, rows=w.rows):
+                jax.block_until_ready(x)
         for w, x, inv in zip(placement.windows, xs, invs):
             arr = np.asarray(x)
             if inv is not None:
@@ -979,7 +1061,8 @@ class SynthesisEngine:
     def _retire(self, st: "_DrainState", results, x, parts, n_real):
         """Fence on the wave's device computation, scatter rows back to
         their requests, finalize any request whose rows are complete."""
-        jax.block_until_ready(x)
+        with self.tracer.span("device.scan", host=0, rows=int(x.shape[0])):
+            jax.block_until_ready(x)
         outs = np.asarray(x)[:n_real]
         off = 0
         for p, t, _ in parts:
@@ -989,6 +1072,7 @@ class SynthesisEngine:
                 self._finalize(st, p, results)
 
     def _finalize(self, st: "_DrainState", p: _Pending, results):
+        self.tracer.stamp(p.req.rid, "retire")
         new = (np.concatenate(p.chunks) if p.chunks else
                np.zeros((0, self.image_size, self.image_size, self.channels),
                         np.float32))
@@ -1033,8 +1117,11 @@ class _DrainState:
         self.wave_i = 0
         self.started = False          # True once initial admission is done
         self.on_result = None         # this drain's streaming delivery hook
+        self.tracer = None            # set by the engine at drain start
 
     def deliver(self, results: dict, rid: int, rows):
+        if self.tracer is not None:
+            self.tracer.stamp(rid, "deliver")
         results[rid] = rows
         if self.on_result is not None:
             self.on_result(rid, rows)

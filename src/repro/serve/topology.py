@@ -52,6 +52,13 @@ class HostWindow:
             raise ValueError(f"window host={self.host} offset={self.offset} "
                              f"must be non-negative")
 
+    @property
+    def span_attrs(self) -> dict:
+        """Attributes a trace span carries for this window — ``host``
+        routes the span onto the host's timeline track."""
+        return {"host": self.host, "offset": self.offset,
+                "rows": self.rows, "real": self.real}
+
 
 @dataclass(frozen=True)
 class HostTopology:
