@@ -43,6 +43,14 @@ categories, k samples per (client, category) encoding.  Five runs:
   schedules exactly its active row-iterations PER HOST — both gating
   CI's smoke run.
 
+* ``failover``     — the mixed workload over ``--hosts`` hosts with one
+  host KILLED mid-drain through the fault-injection layer
+  (``serve/faults.py``): the drain marks it failed, requeues its rows
+  onto the survivors, and finishes.  ASSERTS — gating CI's smoke run —
+  that D_syn is BIT-IDENTICAL to the fault-free drain (failover is a
+  placement change, never a resample), that zero requests are lost, and
+  that the survivor per-host sums still equal the global counters.
+
 * ``fused``        — the mixed workload with the FUSED DENOISER
   (``use_pallas=True``: Pallas flash-attention + adaln_norm inside
   ``dit_apply``) vs naive, in ragged and compacted modes.  ASSERTS the
@@ -60,8 +68,8 @@ categories, k samples per (client, category) encoding.  Five runs:
 
 Writes ``results/BENCH_synthesis.json`` via the shared harness
 (``--mode ragged`` / ``--mode compacted`` / ``--mode multihost`` /
-``--mode fused`` / ``--mode trace`` re-run only their comparison and
-merge it into an existing results file).
+``--mode failover`` / ``--mode fused`` / ``--mode trace`` re-run only
+their comparison and merge it into an existing results file).
 """
 from __future__ import annotations
 
@@ -79,7 +87,8 @@ from repro.diffusion.dit import init_dit
 from repro.diffusion.sampler import sample_cfg
 from repro.diffusion.schedule import make_schedule
 from repro.obs import Tracer, chrome_trace, validate_chrome_trace, write_trace
-from repro.serve import SynthesisEngine, SynthesisService, SynthesisStore
+from repro.serve import (FaultInjector, SynthesisEngine, SynthesisService,
+                         SynthesisStore)
 
 SEED_CHUNK = 512          # the pre-refactor chunk stride (core/oscar.py)
 
@@ -362,6 +371,87 @@ def _bench_multihost(params, dc, sched, enc, *, steps, k, hosts: int):
     return res
 
 
+def _bench_failover(params, dc, sched, enc, *, steps, k, hosts: int):
+    """Elastic-membership failover on the mixed workload: the same
+    requests drained single-host (oracle), over ``hosts`` fault-free
+    hosts, and over ``hosts`` hosts with one host KILLED mid-drain
+    (``FaultInjector`` ``window`` schedule), in ragged AND compacted
+    modes.  ASSERTS — gating CI's smoke run — that D_syn is
+    BIT-IDENTICAL across all three (failover is a placement change,
+    never a resample: row noise is keyed by request identity), that
+    every submitted request is served (zero loss), that the dead host is
+    marked failed with its queued rows requeued onto survivors, and that
+    the survivor per-host sums still equal the global counters."""
+    reqs = _mixed_reqs(enc, steps)
+    kill = hosts - 1
+    # kill mid-drain when the workload spans several waves (quick/paper);
+    # smoke's single wave dies at its first dispatch — still a full
+    # requeue onto the survivors
+    kill_wave = 1 if len(reqs) * k > 2 * 128 else 0
+
+    def run_mode(**kw):
+        eng = SynthesisEngine(params, dc, sched, image_size=16, cache=False,
+                              granule=1, **kw)
+        rids = [eng.submit(enc[r, c], c, k, guidance=g, num_steps=s)
+                for r, c, g, s in reqs]
+        wall, out = _timed(eng.run, jax.random.PRNGKey(6))
+        assert sorted(out) == sorted(rids), (
+            "drain lost or invented requests")
+        return wall, eng, [out[rid] for rid in rids]
+
+    t_one, _, out_one = run_mode(ragged=True)
+    t_ff, _, out_ff = run_mode(ragged=True, hosts=hosts)
+    assert all(np.array_equal(a, b) for a, b in zip(out_one, out_ff))
+    res = {"hosts": hosts, "killed_host": kill, "kill_wave": kill_wave,
+           "single_host_s": t_one, "fault_free_s": t_ff}
+    for name, kw in (("ragged", {"ragged": True}),
+                     ("compacted", {"compaction": "full"})):
+        t_f, eng, out_f = run_mode(
+            hosts=hosts,
+            faults=FaultInjector(schedule=[("window", kill, kill_wave)]),
+            **kw)
+        assert eng.faults.pending == 0, (
+            f"{name}: the scheduled host kill never fired — host {kill} "
+            f"dispatched no window at wave {kill_wave}")
+        assert eng.topology.failed == {kill}, (
+            f"{name}: host {kill} not marked failed after its kill")
+        assert eng.metrics.get("fault.host_lost") == 1
+        requeued = eng.metrics.get("failover.requeued_rows")
+        assert requeued > 0, (
+            f"{name}: failover requeued nothing — the dead host's queue "
+            f"was not migrated to survivors")
+        # the failover-determinism gate: killing a host changes no bit
+        assert all(np.array_equal(a, b)
+                   for a, b in zip(out_one, out_f)), (
+            f"{name}: D_syn after host {kill} failover differs from the "
+            f"fault-free drain — failover resampled instead of replacing")
+        st = eng.stats
+        per = st["per_host"]
+        assert sum(p["rows"] + p["padded"] for p in per) == st["generated"]
+        assert sum(p["row_iters_active"] for p in per) \
+            == st["row_iters_active"]
+        res[f"failover_{name}_s"] = t_f
+        res[f"{name}_requeued_rows"] = requeued
+        res[f"{name}_survivor_rows"] = [p["rows"] for p in per]
+    return res
+
+
+def _print_failover(fo: dict):
+    print_table(
+        f"Failover — {fo['hosts']} hosts, host {fo['killed_host']} killed "
+        f"at wave {fo['kill_wave']}",
+        [{"mode": "single_host", "wall_s": fo["single_host_s"]},
+         {"mode": "fault_free", "wall_s": fo["fault_free_s"]},
+         {"mode": "failover_ragged", "wall_s": fo["failover_ragged_s"]},
+         {"mode": "failover_compacted",
+          "wall_s": fo["failover_compacted_s"]}],
+        ["mode", "wall_s"])
+    print(f"  requeued {fo['ragged_requeued_rows']} rows (ragged) / "
+          f"{fo['compacted_requeued_rows']} (compacted) onto survivors "
+          f"{fo['ragged_survivor_rows']}, zero lost requests, "
+          f"bit-identical to fault-free")
+
+
 def _print_multihost(mh: dict):
     print_table(
         f"Multi-host placed serving — {mh['hosts']} simulated hosts",
@@ -558,6 +648,15 @@ def run(preset: str = "paper", mode: str = "all", hosts: int = 2,
         _print_multihost(mh)
         return _merge_result(preset, {"multihost": mh})
 
+    if mode == "failover":
+        # elastic-membership regression only (the CI failover gate):
+        # host-kill bit-parity + zero-loss + survivor accounting, merged
+        # into an existing results file rather than clobbering the full run
+        fo = _bench_failover(params, dc, sched, enc, steps=steps, k=k,
+                             hosts=hosts)
+        _print_failover(fo)
+        return _merge_result(preset, {"failover": fo})
+
     if mode == "trace":
         # observability regression only (the CI trace gate): tracing
         # on/off bit-parity + schema-validated export, merged into an
@@ -611,6 +710,8 @@ def run(preset: str = "paper", mode: str = "all", hosts: int = 2,
                                      k=k, compacted=True)
     multihost = _bench_multihost(params, dc, sched, enc, steps=steps, k=k,
                                  hosts=hosts)
+    failover = _bench_failover(params, dc, sched, enc, steps=steps, k=k,
+                               hosts=hosts)
     fused = _bench_fused(params, dc, sched, enc, steps=steps, k=k)
     trace = _bench_trace(params, dc, sched, enc, steps=steps, k=k,
                          hosts=hosts, trace_path=trace_path)
@@ -629,6 +730,7 @@ def run(preset: str = "paper", mode: str = "all", hosts: int = 2,
                 rows, ["path", "wall_s", "img_per_s"])
     _print_ragged(ragged, compacted)
     _print_multihost(multihost)
+    _print_failover(failover)
     _print_fused(fused)
     _print_trace(trace)
     print(f"  streaming: padded {streaming['streaming_padded']} rows vs "
@@ -644,7 +746,8 @@ def run(preset: str = "paper", mode: str = "all", hosts: int = 2,
            "speedup_warm": t_seed / max(t_warm, 1e-9),
            "engine_stats": dict(eng.stats),
            "ragged": ragged, "compacted": compacted,
-           "multihost": multihost, "fused": fused, "trace": trace,
+           "multihost": multihost, "failover": failover,
+           "fused": fused, "trace": trace,
            **streaming, **store}
     save_result("BENCH_synthesis", res)
     return res
@@ -656,7 +759,7 @@ def main():
                     choices=("smoke", "quick", "paper"))
     ap.add_argument("--mode", default="all",
                     choices=("all", "ragged", "compacted", "multihost",
-                             "fused", "trace"),
+                             "failover", "fused", "trace"),
                     help="'ragged' runs only the grouped-vs-ragged mixed-"
                          "workload comparison and merges it into an "
                          "existing BENCH_synthesis.json; 'compacted' adds "
@@ -665,7 +768,11 @@ def main():
                          "'multihost' runs the topology-placed comparison "
                          "(--hosts simulated hosts) gating single-host "
                          "bit-parity and the per-host scheduled==active "
-                         "invariant; 'fused' runs the fused-vs-naive "
+                         "invariant; 'failover' kills one of --hosts "
+                         "hosts mid-drain and gates bit-parity vs the "
+                         "fault-free drain, zero lost requests, and "
+                         "survivor accounting; 'fused' runs the fused-vs-"
+                         "naive "
                          "denoiser comparison (ragged+compacted) with its "
                          "fp32 parity gates; 'trace' runs every mode "
                          "traced vs untraced, gating tracing bit-parity "

@@ -1,4 +1,9 @@
 from repro.obs import MetricsRegistry, Tracer, write_trace
+from repro.serve.faults import (AllHostsLostError, FaultInjector,
+                                HostLostError, InjectedFaultError,
+                                RequestFailedError, RetryPolicy,
+                                SynthesisError, TransientFaultError,
+                                UnservedRequestError, is_transient)
 from repro.serve.service import SynthesisFuture, SynthesisService
 from repro.serve.steps import make_prefill_step, make_serve_step
 from repro.serve.store import SynthesisStore

@@ -35,6 +35,8 @@ import jax
 import numpy as np
 
 from repro.obs.trace import Tracer
+from repro.serve.faults import (FaultInjector, RetryPolicy,
+                                SynthesisError, UnservedRequestError)
 from repro.serve.store import SynthesisStore
 from repro.serve.synthesis import SynthesisEngine
 
@@ -43,27 +45,44 @@ class SynthesisFuture:
     """Handle for one submitted request.  ``result()`` drains the queue
     if needed.  Rows are delivered straight onto the future (the service
     only holds a weak reference), so a long-lived service accumulates
-    nothing: discard the future and its images are collectable."""
+    nothing: discard the future and its images are collectable.
+
+    A future resolves to rows OR to a typed ``SynthesisError``
+    (``serve/faults.py``) — never silently to nothing: ``result()``
+    raises the stored error, ``exception()`` returns it, and a drain
+    that somehow bypassed delivery raises ``UnservedRequestError``."""
 
     def __init__(self, service: "SynthesisService", rid: int):
         self._service = service
         self._value: Optional[np.ndarray] = None
+        self._error: Optional[SynthesisError] = None
         self.rid = rid
 
     def done(self) -> bool:
-        return self._value is not None
+        return self._value is not None or self._error is not None
 
     def result(self) -> np.ndarray:
-        if self._value is None:
+        if not self.done():
             self._service.drain()
+        if self._error is not None:
+            raise self._error
         if self._value is None:
-            raise RuntimeError(
+            raise UnservedRequestError(
                 f"request {self.rid} was not served by the drain — "
                 "was the service's engine drained directly?")
         return self._value
 
+    def exception(self) -> Optional[SynthesisError]:
+        """The typed error this request resolved to, or None if it
+        produced rows.  Drains (once) if the request is still pending,
+        mirroring ``result()``."""
+        if not self.done():
+            self._service.drain()
+        return self._error
+
     def __repr__(self):
-        state = "done" if self.done() else "pending"
+        state = ("failed" if self._error is not None
+                 else "done" if self._value is not None else "pending")
         return f"SynthesisFuture(rid={self.rid}, {state})"
 
 
@@ -77,7 +96,9 @@ class SynthesisService:
                  compaction: int | str | None = None,
                  topology=None, hosts: int | None = None,
                  store_max_bytes: int | None = None,
-                 tracer: Tracer | None = None):
+                 tracer: Tracer | None = None,
+                 faults: FaultInjector | None = None,
+                 retry: RetryPolicy | None = None):
         """``ragged`` (opt-in) switches the engine to ragged waves: every
         classifier-free group shares one compiled per-row (guidance,
         steps) trajectory — see ``SynthesisEngine``.  Cache and store
@@ -105,13 +126,20 @@ class SynthesisService:
         span timeline and request lifecycle; the service derives
         ``request.queue_wait`` / ``request.e2e_latency`` histograms from
         the stamps after each drain.  Opt-in only, like the other knobs.
+
+        ``faults`` / ``retry`` (``serve/faults.py``) thread a fault
+        injector and a retry policy through the engine and its store —
+        transient faults retry, a lost host fails over, and permanent
+        failures resolve the affected futures to typed errors.  Opt-in
+        only, like the other knobs.
         """
         if store is not None and not isinstance(store, SynthesisStore):
             store = SynthesisStore(store)
         if store is not None:
             engine.store = store
         engine.opt_in(ragged=ragged, compaction=compaction,
-                      topology=topology, hosts=hosts, tracer=tracer)
+                      topology=topology, hosts=hosts, tracer=tracer,
+                      faults=faults, retry=retry)
         self.engine = engine
         self.store = engine.store
         self.store_max_bytes = store_max_bytes
@@ -140,6 +168,11 @@ class SynthesisService:
         fut = self._futures.get(rid)
         if fut is not None:
             fut._value = rows
+
+    def _deliver_error(self, rid: int, err: Exception):
+        fut = self._futures.get(rid)
+        if fut is not None:
+            fut._error = err
 
     def submit(self, encoding, category: int, count: int | None = None, *,
                guidance: float | None = None,
@@ -176,6 +209,13 @@ class SynthesisService:
         invoked before each wave is packed and may submit new requests —
         compatible ones join the open wave (return falsy once the arrival
         trace is exhausted, or the drain never concludes).
+
+        Failure contract: a PERMANENT failure inside one wave group
+        resolves that group's futures to ``RequestFailedError`` (read
+        via ``exception()``; ``result()`` raises it) while every other
+        group keeps serving — one poisoned request never takes down the
+        drain for every tenant.  Transient faults retry and a lost host
+        fails over inside the engine, invisibly to futures.
         """
         with self._drain_lock:
             if key is None:
@@ -187,7 +227,8 @@ class SynthesisService:
             # value is the full drain's rid -> rows map
             try:
                 return self.engine.run(key, poll=poll, stream=stream,
-                                       on_result=self._deliver)
+                                       on_result=self._deliver,
+                                       on_error=self._deliver_error)
             finally:
                 if (self.store is not None
                         and self.store_max_bytes is not None):
@@ -213,15 +254,25 @@ class SynthesisService:
             if "queue_wait" in lat:
                 m.observe("request.queue_wait", lat["queue_wait"])
 
-    def gather(self, futures: list[SynthesisFuture],
-               key=None) -> list[np.ndarray]:
+    def gather(self, futures: list[SynthesisFuture], key=None, *,
+               return_exceptions: bool = False) -> list:
         """Results for ``futures`` in order, draining (once) if needed.
         Queue-wait and end-to-end latency for every request served so
-        far land in the engine metrics as ``request.*`` histograms."""
+        far land in the engine metrics as ``request.*`` histograms.
+
+        With ``return_exceptions=True`` a failed future contributes its
+        typed ``SynthesisError`` instead of raising, so one poisoned
+        request doesn't hide every other result."""
         if any(not f.done() for f in futures):
             self.drain(key)
         self._observe_latencies()
-        return [f.result() for f in futures]
+        if not return_exceptions:
+            return [f.result() for f in futures]
+        out = []
+        for f in futures:
+            err = f.exception()
+            out.append(err if err is not None else f.result())
+        return out
 
     @property
     def stats(self) -> dict:

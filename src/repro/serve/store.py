@@ -25,6 +25,18 @@ The store does NOT key on the diffusion model's parameters — callers
 serving multiple DMs must use one store root per model (see
 ``core/experiment.py``, which keys the store directory by the DM cache
 tag).
+
+DEGRADED OPERATION (``serve/faults.py``): the store is a CACHE, so no
+I/O problem is ever worth failing a request over.  Transient read/write
+errors retry under the bound ``RetryPolicy``; a shard that stays
+unreadable is a miss (re-synthesize); a CORRUPT shard — undecodable
+npz, wrong recorded key, structural mismatch vs its manifest entry — is
+QUARANTINED: its manifest entry is dropped (rewritten first, same
+crash-safe ordering as ``evict``), the file moves to
+``<root>/quarantine/`` for post-mortem, and the key misses so the
+engine regenerates and the next flush heals the manifest.
+``store.quarantined`` / ``store.write_failures`` / ``retry.*`` counters
+land on the bound registry.
 """
 from __future__ import annotations
 
@@ -39,6 +51,8 @@ import numpy as np
 
 from repro.obs.metrics import MetricsRegistry
 from repro.obs.trace import Tracer
+from repro.serve.faults import (FaultInjector, RetryPolicy,
+                                TransientFaultError)
 
 _VERSION = 1
 
@@ -60,6 +74,8 @@ class SynthesisStore:
         # timeline and metrics dump as the waves it feeds
         self.metrics = MetricsRegistry()
         self.tracer = Tracer(enabled=False)
+        self.faults: Optional[FaultInjector] = None
+        self.retry = RetryPolicy()
         self.root = Path(root)
         self._shards = self.root / "shards"
         self._rows: dict[str, np.ndarray] = {}      # loaded / pending shards
@@ -80,10 +96,27 @@ class SynthesisStore:
                                for e in self._manifest["entries"].values()),
                               default=0)
 
-    def bind(self, metrics: MetricsRegistry, tracer: Tracer):
-        """Adopt the engine's shared metrics registry and tracer."""
+    def bind(self, metrics: MetricsRegistry, tracer: Tracer,
+             faults: FaultInjector | None = None,
+             retry: RetryPolicy | None = None):
+        """Adopt the engine's shared metrics registry, tracer, and fault
+        policy (injector + retry), so store I/O recovers under the same
+        knobs as the drain that drives it."""
         self.metrics = metrics
         self.tracer = tracer
+        if faults is not None:
+            self.faults = faults
+        if retry is not None:
+            self.retry = retry
+
+    def _check_fault(self, site: str):
+        if self.faults is None:
+            return
+        try:
+            self.faults.check(site)
+        except Exception:
+            self.metrics.inc("fault.injected", site=site)
+            raise
 
     def _touch(self, slug: str):
         ent = self._manifest["entries"].get(slug)
@@ -102,8 +135,12 @@ class SynthesisStore:
         ('costs a re-synthesis, never a wrong result').  A shard LONGER
         than its entry (crash between shard and manifest renames) serves
         the recorded prefix; shards are append-only so the prefix is
-        exact.  Structural mismatches (row shape/dtype, recorded key)
-        raise — that is corruption, not a race."""
+        exact.  CORRUPTION — a wrong recorded key, an undecodable npz, a
+        row shape/dtype mismatch — never raises: the shard is quarantined
+        (manifest healed, file moved to ``quarantine/``) and the key
+        misses, so the engine regenerates it.  Transient I/O retries
+        under the bound policy; a shard that stays unreadable is a plain
+        miss (the file may be fine — don't quarantine it)."""
         s = _slug(cache_key)
         if s in self._rows:
             self._touch(s)
@@ -117,26 +154,45 @@ class SynthesisStore:
         if (ent["key"]["encoding_sha1"] != enc_hash
                 or ent["key"]["guidance"] != float(guidance)
                 or ent["key"]["steps"] != int(steps)):
-            raise ValueError(
-                f"store {self.root}: shard {s} records a different cache "
-                f"key than requested — refusing to serve the wrong D_syn")
+            # slugs are content addresses, so a key mismatch means the
+            # manifest entry itself is corrupt — never serve it
+            self._quarantine(s, "recorded cache key mismatch")
+            self.metrics.inc("store.misses")
+            return None
+
+        def _read():
+            self._check_fault("store.read")
+            with np.load(self._shards / f"{s}.npz") as z:
+                return z["rows"]
+
         try:
             t0 = time.perf_counter()
             with self.tracer.span("store.read", track="store", slug=s):
-                with np.load(self._shards / f"{s}.npz") as z:
-                    rows = z["rows"]
+                rows = self.retry.run(_read, metrics=self.metrics,
+                                      site="store.read")
             self.metrics.observe("store.read_s", time.perf_counter() - t0)
         except FileNotFoundError:
             # another handle evicted the shard after we read the manifest
             # — a miss, not corruption: re-synthesize and heal
             self.metrics.inc("store.misses")
             return None
+        except (TransientFaultError, OSError):
+            # unreadable even after retries: miss, but the file may be
+            # fine (flaky media) — leave it in place
+            self.metrics.inc("store.misses")
+            return None
+        except Exception as exc:
+            # np.load decode failure — a torn or garbage shard file
+            self._quarantine(s, f"undecodable shard: {exc!r}")
+            self.metrics.inc("store.misses")
+            return None
         if (list(rows.shape[1:]) != list(ent["shape"])[1:]
                 or str(rows.dtype) != ent["dtype"]):
-            raise ValueError(
-                f"store {self.root}: shard {s} does not match its manifest "
-                f"entry (shape {rows.shape}/{ent['shape']}, dtype "
-                f"{rows.dtype}/{ent['dtype']})")
+            self._quarantine(
+                s, f"shape {list(rows.shape)}/{ent['shape']} dtype "
+                   f"{rows.dtype}/{ent['dtype']} mismatch")
+            self.metrics.inc("store.misses")
+            return None
         if len(rows) < ent["count"]:
             self.metrics.inc("store.misses")
             return None                     # lost flush race: re-synthesize
@@ -144,6 +200,29 @@ class SynthesisStore:
         self._touch(s)
         self.metrics.inc("store.hits")
         return rows
+
+    def _quarantine(self, slug: str, reason: str):
+        """Contain a corrupt shard: drop its manifest entry and every
+        in-memory trace, tombstone it (a concurrent flush must not
+        resurrect the entry), rewrite the manifest, and only THEN move
+        the file into ``quarantine/`` — the same manifest-before-file
+        ordering ``evict`` uses, so a crash mid-quarantine strands at
+        worst an orphaned shard file, never a dangling manifest entry.
+        A later ``put`` on the key regenerates cleanly (it clears the
+        tombstone and heals the manifest)."""
+        self._manifest["entries"].pop(slug, None)
+        self._rows.pop(slug, None)
+        self._dirty.discard(slug)
+        self._evicted.add(slug)
+        self.metrics.inc("store.quarantined")
+        self.tracer.instant("store.quarantine", track="store", slug=slug,
+                            reason=reason)
+        self._write_manifest()
+        src = self._shards / f"{slug}.npz"
+        if src.exists():
+            qdir = self.root / "quarantine"
+            qdir.mkdir(parents=True, exist_ok=True)
+            os.replace(src, qdir / f"{slug}.npz")
 
     def __contains__(self, cache_key: tuple) -> bool:
         return _slug(cache_key) in self._manifest["entries"]
@@ -190,22 +269,38 @@ class SynthesisStore:
         if not self._dirty:
             return
         self._shards.mkdir(parents=True, exist_ok=True)
+        written = set()
         with self.tracer.span("store.flush", track="store",
                               shards=len(self._dirty)):
             for s in sorted(self._dirty):
                 # pid-suffixed like the manifest tmp: concurrent flushes
                 # must never interleave writes into one tmp and publish a
                 # torn npz
-                t0 = time.perf_counter()
-                with self.tracer.span("store.write", track="store", slug=s):
+                def _write(s=s):
+                    self._check_fault("store.write")
                     tmp = self._shards / f"{s}.{os.getpid()}.tmp"
                     with open(tmp, "wb") as f:
                         np.savez(f, rows=self._rows[s])
                     os.replace(tmp, self._shards / f"{s}.npz")
+
+                t0 = time.perf_counter()
+                try:
+                    with self.tracer.span("store.write", track="store",
+                                          slug=s):
+                        self.retry.run(_write, metrics=self.metrics,
+                                       site="store.write")
+                except Exception:
+                    # degraded, not fatal: the shard stays dirty (and in
+                    # memory) for the next flush; serving continues.  If
+                    # its manifest entry lands without the shard, readers
+                    # see FileNotFoundError — a miss, never a wrong row.
+                    self.metrics.inc("store.write_failures")
+                    continue
+                written.add(s)
                 self.metrics.observe("store.write_s",
                                      time.perf_counter() - t0)
             self._write_manifest()
-        self._dirty.clear()
+        self._dirty -= written
 
     def _write_manifest(self):
         """Merge-then-rewrite via temp + rename.  Entries another process

@@ -89,15 +89,36 @@ Classifier-guided and unconditional groups keep the single-host path (a
 classifier closure cannot be sharded by rows).  Per-host accounting
 lands in ``stats["per_host"]``.
 
-Requests stay on the queue until their results are produced: an
-exception mid-drain (a failing sampler, an interrupted process) leaves
-every unserved request queued for the next ``run``.
+Requests stay on the queue until their results are produced OR they
+resolve to a typed failure: an exception mid-drain (a failing sampler,
+an interrupted process) leaves every unserved request queued for the
+next ``run``, and rows already produced by the failed drain are CARRIED
+to that next ``run`` — exception → re-drain serves every admitted
+request with zero loss, whether or not the caller streamed results
+through ``on_result``.
+
+FAULT TOLERANCE (``faults=FaultInjector(...)``, ``retry=RetryPolicy()``,
+``serve/faults.py``): the drain checks injectable fault SITES —
+``window`` (host-window dispatch), ``scan`` (the device fence) — and
+recovers instead of aborting.  A transient scan fault retries under the
+engine's ``RetryPolicy``; a lost host (``HostLostError`` from a window
+dispatch) triggers FAILOVER: ``topology.mark_failed`` removes it, the
+aborted wave's rows are un-taken back onto their queues, the dead host's
+admitted requests migrate to survivors' ingress queues, and the drain
+re-quotas through the same ``wave_quotas``/``WavePlacement.plan`` path.
+D_syn stays bit-identical to the fault-free run under ANY fault
+schedule because row noise is keyed by request identity — failover is a
+placement change, not a resample.  With ``run(on_error=...)`` a
+PERMANENT group failure (e.g. a poisoned classifier closure) is
+isolated: every unserved request of that group resolves to a
+``RequestFailedError`` through the hook and the drain continues serving
+other groups.
 """
 from __future__ import annotations
 
 import hashlib
 from collections import deque
-from dataclasses import dataclass, field
+from dataclasses import dataclass, field, replace
 from typing import Any, Callable, Optional
 
 import jax
@@ -114,6 +135,9 @@ from repro.diffusion.sampler import (_window_segment, sample_cfg,
 from repro.diffusion.schedule import NoiseSchedule
 from repro.obs.metrics import MetricsRegistry
 from repro.obs.trace import Tracer
+from repro.serve.faults import (AllHostsLostError, FaultInjector,
+                                HostLostError, RequestFailedError,
+                                RetryPolicy)
 from repro.serve.topology import HostTopology, WavePlacement
 
 
@@ -175,9 +199,15 @@ class _GroupQueue:
     def __init__(self, head: SynthesisRequest):
         self.head = head                          # defines mode/g/steps/clf
         self.items: deque[_Pending] = deque()
+        # every pending ever pushed here: ``take`` pops exhausted items
+        # off the live deque, so failure handling needs this registry to
+        # enumerate the group's full admitted population
+        self.admitted: list[_Pending] = []
 
     def push(self, p: _Pending):
         self.items.append(p)
+        if not any(q is p for q in self.admitted):
+            self.admitted.append(p)
 
     def rows_available(self) -> int:
         return sum(p.rows_left() for p in self.items)
@@ -227,7 +257,9 @@ class SynthesisEngine:
                  topology: HostTopology | None = None,
                  hosts: int | None = None,
                  tracer: Tracer | None = None,
-                 metrics: MetricsRegistry | None = None):
+                 metrics: MetricsRegistry | None = None,
+                 faults: FaultInjector | None = None,
+                 retry: RetryPolicy | None = None):
         self.dm_params, self.dc, self.sched = dm_params, dc, sched
         self.image_size, self.channels = image_size, channels
         self.eta, self.use_pallas = eta, use_pallas
@@ -271,6 +303,13 @@ class SynthesisEngine:
         # the legacy ``stats`` dict is a read-only VIEW over it
         self.tracer = tracer if tracer is not None else Tracer(enabled=False)
         self.metrics = metrics if metrics is not None else MetricsRegistry()
+        # fault tolerance: an injector (tests/chaos drills) and the retry
+        # policy transient faults run under; both injectable, no wall-clock
+        self.faults = faults
+        self.retry = retry if retry is not None else RetryPolicy()
+        # rows produced by a drain that raised before returning — the next
+        # ``run`` hands them to its caller (zero-loss retry contract)
+        self._carried: dict[int, np.ndarray] = {}
         if topology is not None or hosts is not None:
             self.set_topology(topology if topology is not None else hosts)
 
@@ -323,10 +362,14 @@ class SynthesisEngine:
                         if self.mesh is not None else
                         HostTopology.simulated(topology,
                                                granule=self.granule))
-        if topology == self.topology:
+        if topology == self.topology or (
+                self.topology is not None
+                and topology == replace(self.topology, failed=frozenset())):
             return            # re-threading the same placement (a shared
                               # engine's opt_in runs once per entry point)
-                              # must not wipe the per-host accounting
+                              # must not wipe the per-host accounting —
+                              # nor resurrect hosts the engine has marked
+                              # failed since the fleet was first threaded
         self.topology = topology
         self._host_shardings = {}
         # counters from another layout cannot be merged: drop the old
@@ -359,7 +402,9 @@ class SynthesisEngine:
 
     def opt_in(self, *, ragged: bool | None = None, compaction=None,
                topology=None, hosts: int | None = None,
-               tracer: Tracer | None = None):
+               tracer: Tracer | None = None,
+               faults: FaultInjector | None = None,
+               retry: RetryPolicy | None = None):
         """Thread scheduling knobs from a run entry point, OPT-IN ONLY:
         ``ragged=True`` switches this engine to ragged waves,
         ``compaction`` (``"full"``/``"auto"``/int K) enables compacted
@@ -378,6 +423,10 @@ class SynthesisEngine:
         self.set_topology(topology if topology is not None else hosts)
         if tracer is not None:
             self.tracer = tracer
+        if faults is not None:
+            self.faults = faults
+        if retry is not None:
+            self.retry = retry
         return self
 
     # -- submission -------------------------------------------------------
@@ -431,6 +480,7 @@ class SynthesisEngine:
     def run(self, key, *, poll: Callable[[], bool] | None = None,
             stream: bool | None = None,
             on_result: Callable[[int, np.ndarray], None] | None = None,
+            on_error: Callable[[int, Exception], None] | None = None,
             ) -> dict[int, np.ndarray]:
         """Drain the queue.  Returns rid -> (count, H, W, C) images.
 
@@ -452,20 +502,46 @@ class SynthesisEngine:
         SynthesisService resolving futures) keeps requests served BEFORE
         a mid-drain failure even though ``run`` raises.
 
-        Requests are removed from the queue only once their results are
-        produced — an exception mid-drain keeps every unserved request
-        queued for the next ``run``.
+        ``on_error`` (if given) turns a PERMANENT failure inside one wave
+        group into per-request ``RequestFailedError``s delivered through
+        the hook — the drain continues serving every other group instead
+        of aborting (``AllHostsLostError`` still propagates: with no
+        survivor nothing can make progress).  Without the hook the first
+        group failure raises, preserving the legacy contract.
+
+        Requests are removed from the queue only once their results (or a
+        typed failure) are produced — an exception mid-drain keeps every
+        unserved request queued, and CARRIES rows the failed drain did
+        produce forward to the next ``run``, so exception → re-drain
+        serves every admitted request with zero loss.
         """
         stream = (poll is not None) if stream is None else stream
         results: dict[int, np.ndarray] = {}
+        failed: dict[int, Exception] = {}
         if self.store is not None:
-            # store observability rides the engine's tracer/registry —
+            # store observability + fault policy ride the engine's —
             # shard I/O spans land on the exported store track
-            self.store.bind(self.metrics, self.tracer)
+            self.store.bind(self.metrics, self.tracer,
+                            faults=self.faults, retry=self.retry)
+        if self._carried:
+            # rows a previous drain produced but never returned (it
+            # raised first): they belong to this run's caller now — the
+            # finally block below already dropped their requests from
+            # the queue when they were produced
+            carried, self._carried = self._carried, {}
+            results.update(carried)
+            if on_result is not None:
+                for rid, rows in carried.items():
+                    on_result(rid, rows)
         with self.tracer.span("drain", queued=len(self._queue)):
             try:
-                self._drain(key, results, poll=poll, stream=stream,
-                            on_result=on_result)
+                self._drain(key, results, failed, poll=poll, stream=stream,
+                            on_result=on_result, on_error=on_error)
+            except BaseException:
+                # this drain's caller never sees ``results`` — carry the
+                # produced rows so the NEXT run returns them
+                self._carried.update(results)
+                raise
             finally:
                 if self.store is not None:
                     self.store.flush()
@@ -473,7 +549,8 @@ class SynthesisEngine:
                 # from another thread (SynthesisService) may append
                 # mid-removal and a rebuilt list would silently drop
                 # that request
-                for r in [r for r in self._queue if r.rid in results]:
+                for r in [r for r in self._queue
+                          if r.rid in results or r.rid in failed]:
                     self._queue.remove(r)
         return results
 
@@ -621,9 +698,12 @@ class SynthesisEngine:
                              use_pallas=self.use_pallas)
 
     # -- drain machinery --------------------------------------------------
-    def _drain(self, key, results, *, poll, stream, on_result=None):
+    def _drain(self, key, results, failed, *, poll, stream, on_result=None,
+               on_error=None):
         st = _DrainState()
         st.on_result = on_result
+        st.on_error = on_error
+        st.failed = failed
         st.tracer = self.tracer       # deliver stamps ride the drain state
         with self.tracer.span("drain.admit"):
             self._admit_new(st, results)
@@ -640,12 +720,22 @@ class SynthesisEngine:
                     continue
                 break
             grp = st.groups[live[0]]
-            if isinstance(grp, _ShardedGroup):
-                self._drain_group_placed(grp, st, key, results, poll=poll,
-                                         stream=stream)
-            else:
-                self._drain_group(grp, st, key, results,
-                                  poll=poll, stream=stream)
+            try:
+                if isinstance(grp, _ShardedGroup):
+                    self._drain_group_placed(grp, st, key, results,
+                                             poll=poll, stream=stream)
+                else:
+                    self._drain_group(grp, st, key, results,
+                                      poll=poll, stream=stream)
+            except Exception as exc:
+                # failure isolation: with an on_error hook, a permanent
+                # failure inside ONE group (a poisoned classifier, an
+                # exhausted retry) fails that group's requests with typed
+                # errors and the drain keeps serving everyone else.  No
+                # hook → legacy contract: raise, keep queues intact.
+                if st.on_error is None or isinstance(exc, AllHostsLostError):
+                    raise
+                self._fail_group(grp, st, results, exc)
         # any still-unresolved waiters are covered by rows generated above
         self._serve_waiters(st, results)
 
@@ -657,6 +747,73 @@ class SynthesisEngine:
                 for h, q in enumerate(grp.queues):
                     depths[h] += q.rows_available()
         return depths
+
+    def _check_fault(self, site: str, *, host: int = 0, wave: int = -1):
+        """Injectable fault site: counts what fires, then lets it raise."""
+        if self.faults is None:
+            return
+        try:
+            self.faults.check(site, host=host, wave=wave)
+        except Exception:
+            self.metrics.inc("fault.injected", site=site)
+            raise
+
+    def _fence(self, x, *, host: int, wave: int):
+        """Retire-side device fence with the ``scan`` fault site under
+        the engine's retry policy — a transient device hiccup burns
+        retries instead of aborting the drain."""
+        def attempt():
+            self._check_fault("scan", host=host, wave=wave)
+            jax.block_until_ready(x)
+        self.retry.run(attempt, metrics=self.metrics, site="device.scan")
+
+    def _fail_group(self, grp, st: "_DrainState", results, exc):
+        """Resolve every unserved request admitted to ``grp`` to a typed
+        ``RequestFailedError`` (cause attached) through the drain's
+        ``on_error`` hook, release their cache-coverage claims, fail
+        waiters riding a now-uncovered key, and clear the group's queues
+        so the drain moves on."""
+        queues = grp.queues if isinstance(grp, _ShardedGroup) else [grp]
+        doomed = []
+        for q in queues:
+            for p in q.admitted:
+                rid = p.req.rid
+                if rid in results or rid in st.failed or \
+                        any(d.req.rid == rid for d in doomed):
+                    continue
+                doomed.append(p)
+        bad_keys = set()
+        for p in doomed:
+            r = p.req
+            if r.cache_key is not None:
+                # rows this pending claimed in ``planned`` will never be
+                # generated; a same-key request must not count on them
+                left = st.planned.get(r.cache_key, 0) - p.fresh
+                st.planned[r.cache_key] = max(left, 0)
+                bad_keys.add(r.cache_key)
+            self._fail_request(st, r, exc)
+        still = []
+        for r in st.waiters:
+            cached = self._cache.get(r.cache_key)
+            covered = cached is not None and len(cached) >= r.count
+            if r.cache_key in bad_keys and not covered:
+                self._fail_request(st, r, exc)
+            else:
+                still.append(r)
+        st.waiters = still
+        for q in queues:
+            q.items.clear()
+
+    def _fail_request(self, st: "_DrainState", r: SynthesisRequest, exc):
+        err = RequestFailedError(
+            f"request {r.rid} ({r.mode}) failed permanently: {exc}",
+            rid=r.rid)
+        err.__cause__ = exc
+        st.failed[r.rid] = err
+        self.metrics.inc("requests_failed")
+        self.tracer.instant("request.failed", rid=r.rid)
+        if st.on_error is not None:
+            st.on_error(r.rid, err)
 
     def _admit_new(self, st: "_DrainState", results):
         """Admission: serve full cache hits, compute top-up ``fresh`` row
@@ -723,7 +880,7 @@ class SynthesisEngine:
         # longer), and a drain sees at most one recompile per new deepest
         # step count instead of one per (guidance, steps) group
         smax = 0
-        inflight = None                  # (device x, parts, n_real)
+        inflight = None                  # (device x, parts, n_real, wave)
         while True:
             # admission runs at every wave boundary with or without a
             # poll, so requests submitted by another thread while waves
@@ -813,9 +970,9 @@ class SynthesisEngine:
             if inflight is not None:
                 self._retire(st, results, *inflight)
             if self.async_waves:
-                inflight = (x, parts, got)
+                inflight = (x, parts, got, st.wave_i - 1)
             else:
-                self._retire(st, results, x, parts, got)
+                self._retire(st, results, x, parts, got, st.wave_i - 1)
         if inflight is not None:
             self._retire(st, results, *inflight)
 
@@ -833,11 +990,14 @@ class SynthesisEngine:
         arrivals stream into open windows either way.  Row noise stays
         keyed by request identity, so outputs are bit-identical for ANY
         topology, placement, or arrival order."""
-        topo = self.topology
-        quotas = topo.wave_quotas(self.wave_size)
         smax = 0                         # running step ceiling (see above)
-        inflight = None                  # (xs, invs, placement, parts_h)
+        inflight = None                  # (xs, invs, placement, parts_h, w)
         while True:
+            # re-read topology + quotas EVERY wave: a host lost on the
+            # previous iteration re-spreads its share over survivors
+            # through the same proportional split (failover == re-quota)
+            topo = self.topology
+            quotas = topo.wave_quotas(self.wave_size)
             if poll is not None:
                 poll()
             self._admit_new(st, results)
@@ -866,8 +1026,20 @@ class SynthesisEngine:
             deep = max(p.req.num_steps
                        for parts in parts_h for p, _, _ in parts)
             smax = max(smax, deep)
-            xs, invs, host_stats = self._sample_wave_placed(
-                parts_h, placement, key, smax, wave=st.wave_i - 1)
+            try:
+                xs, invs, host_stats = self._sample_wave_placed(
+                    parts_h, placement, key, smax, wave=st.wave_i - 1)
+            except HostLostError as err:
+                # FAILOVER: the in-flight wave was dispatched before the
+                # loss — retire it first; then un-take this wave, migrate
+                # the dead host's requests to survivors, and re-quota.
+                # Row noise is identity-keyed, so the repacked rows are
+                # bit-identical — a placement change, not a resample.
+                if inflight is not None:
+                    self._retire_placed(st, results, *inflight)
+                    inflight = None
+                self._handle_host_loss(grp, st, parts_h, err)
+                continue
             for parts in parts_h:
                 for p, _, _ in parts:
                     self.tracer.stamp(p.req.rid, "dispatch")
@@ -890,12 +1062,55 @@ class SynthesisEngine:
             if inflight is not None:
                 self._retire_placed(st, results, *inflight)
             if self.async_waves:
-                inflight = (xs, invs, placement, parts_h)
+                inflight = (xs, invs, placement, parts_h, st.wave_i - 1)
             else:
                 self._retire_placed(st, results, xs, invs, placement,
-                                    parts_h)
+                                    parts_h, st.wave_i - 1)
         if inflight is not None:
             self._retire_placed(st, results, *inflight)
+
+    def _handle_host_loss(self, grp: _ShardedGroup, st: "_DrainState",
+                          parts_h, err: HostLostError):
+        """Elastic membership: mark the lost host failed (survivors
+        re-quota on the next wave), put the aborted wave's rows back on
+        their queues (front, pack order), and migrate the dead host's
+        admitted REQUESTS — not its padded rows — onto survivors' ingress
+        queues by identity routing over the live set.  Migration covers
+        EVERY sharded group, not just the one mid-wave: grouped-mode
+        drains hold one ``_ShardedGroup`` per (guidance, steps), and a
+        request parked on the dead host's queue of a not-yet-drained
+        group would otherwise be unreachable (its window quota is 0
+        forever) while still counting as available — losing the request
+        and livelocking the drain loop."""
+        dead = err.host
+        # raises AllHostsLostError when no survivor remains
+        topo = self.topology.mark_failed(dead)
+        self.topology = topo
+        self.metrics.inc("fault.host_lost")
+        self.metrics.set_gauge("hosts_live", len(topo.live_hosts))
+        self.tracer.instant("host.failed", host=dead, wave=err.wave)
+        # un-take the whole aborted wave: restore each pending's ``taken``
+        # and put exhausted (popped) pendings back at the queue front in
+        # pack order — identical rows will repack under the new quotas
+        for hq, parts in zip(grp.queues, parts_h):
+            for p, t, _ in parts:
+                p.taken -= t
+            readd = []
+            for p, _, _ in parts:
+                if not any(q is p for q in readd) and \
+                        not any(q is p for q in hq.items):
+                    readd.append(p)
+            hq.items.extendleft(reversed(readd))
+        moved = 0
+        for g in st.groups.values():
+            if not isinstance(g, _ShardedGroup):
+                continue
+            dq = g.queues[dead]
+            moved += sum(p.rows_left() for p in dq.items)
+            for p in list(dq.items):
+                g.push(p, topo.assign(p.req.rid))
+            dq.items.clear()
+        self.metrics.inc("failover.requeued_rows", moved)
 
     def _sample_wave_placed(self, parts_h, placement: WavePlacement, key,
                             max_steps: int, wave: int = -1):
@@ -969,6 +1184,10 @@ class SynthesisEngine:
         B = placement.total_rows
         xs = []
         for w, epochs in zip(placement.windows, win_plans):
+            # the host-window dispatch fault site: a fault here models
+            # the host dying with its window undispatched — the drain's
+            # failover path requeues the wave and carries on
+            self._check_fault("window", host=w.host, wave=wave)
             lo = w.offset
             sh = self._window_shardings(w.host)
             x = jnp.zeros((0, self.image_size, self.image_size,
@@ -1040,12 +1259,12 @@ class SynthesisEngine:
         return sh
 
     def _retire_placed(self, st: "_DrainState", results, xs, invs,
-                       placement: WavePlacement, parts_h):
+                       placement: WavePlacement, parts_h, wave: int = -1):
         """Fence on every window, unsort compacted windows back to pack
         order, strip per-window padding, scatter rows to requests."""
         for w, x in zip(placement.windows, xs):
             with self.tracer.span("device.scan", host=w.host, rows=w.rows):
-                jax.block_until_ready(x)
+                self._fence(x, host=w.host, wave=wave)
         for w, x, inv in zip(placement.windows, xs, invs):
             arr = np.asarray(x)
             if inv is not None:
@@ -1058,11 +1277,12 @@ class SynthesisEngine:
                 if p.done_rows() == p.fresh:
                     self._finalize(st, p, results)
 
-    def _retire(self, st: "_DrainState", results, x, parts, n_real):
+    def _retire(self, st: "_DrainState", results, x, parts, n_real,
+                wave: int = -1):
         """Fence on the wave's device computation, scatter rows back to
         their requests, finalize any request whose rows are complete."""
         with self.tracer.span("device.scan", host=0, rows=int(x.shape[0])):
-            jax.block_until_ready(x)
+            self._fence(x, host=0, wave=wave)
         outs = np.asarray(x)[:n_real]
         off = 0
         for p, t, _ in parts:
@@ -1117,6 +1337,8 @@ class _DrainState:
         self.wave_i = 0
         self.started = False          # True once initial admission is done
         self.on_result = None         # this drain's streaming delivery hook
+        self.on_error = None          # typed-failure delivery hook
+        self.failed = {}              # rid -> RequestFailedError this drain
         self.tracer = None            # set by the engine at drain start
 
     def deliver(self, results: dict, rid: int, rows):

@@ -30,10 +30,12 @@ moves rows between hosts, never changes their values.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass, field, replace
 from typing import Any
 
 import numpy as np
+
+from repro.serve.faults import AllHostsLostError
 
 
 @dataclass(frozen=True)
@@ -74,6 +76,7 @@ class HostTopology:
     device_counts: tuple
     granules: tuple
     mesh: Any = field(default=None, compare=False, repr=False)
+    failed: frozenset = frozenset()
 
     def __post_init__(self):
         if len(self.device_counts) < 1:
@@ -86,10 +89,36 @@ class HostTopology:
                 any(g < 1 for g in self.granules):
             raise ValueError("HostTopology: device counts and granules "
                              "must be >= 1")
+        object.__setattr__(self, "failed", frozenset(self.failed))
+        if any(not 0 <= h < len(self.device_counts) for h in self.failed):
+            raise ValueError(f"failed hosts {sorted(self.failed)} out of "
+                             f"range for {len(self.device_counts)} hosts")
+        if len(self.failed) >= len(self.device_counts):
+            raise AllHostsLostError(
+                f"all {len(self.device_counts)} hosts failed")
 
     @property
     def num_hosts(self) -> int:
         return len(self.device_counts)
+
+    @property
+    def live_hosts(self) -> tuple:
+        """Hosts still serving, in host order."""
+        return tuple(h for h in range(self.num_hosts)
+                     if h not in self.failed)
+
+    def mark_failed(self, host: int) -> "HostTopology":
+        """Elastic membership: the topology with ``host`` removed from
+        service.  Dead hosts keep their index (per-host stats stay
+        aligned) but get zero wave quota and no ingress traffic; raises
+        ``AllHostsLostError`` when no survivor would remain.  Marking an
+        already-dead host is a no-op."""
+        if not 0 <= host < self.num_hosts:
+            raise ValueError(f"host {host} out of range for "
+                             f"{self.num_hosts} hosts")
+        if host in self.failed:
+            return self
+        return replace(self, failed=self.failed | {host})
 
     @classmethod
     def simulated(cls, hosts: int, *, granule: int = 1) -> "HostTopology":
@@ -147,8 +176,12 @@ class HostTopology:
     def assign(self, rid: int) -> int:
         """Ingress routing: which host's queue a request lands on.  Keyed
         by the request's identity (rid), NOT arrival order, so replaying
-        a trace in any order routes every request identically."""
-        return rid % self.num_hosts
+        a trace in any order routes every request identically.  Only live
+        hosts take traffic; routing is identity-keyed within the
+        survivor set (the ROWS a rerouted request produces are unchanged
+        — row noise is identity-keyed, not host-keyed)."""
+        live = self.live_hosts
+        return live[rid % len(live)]
 
     def host_mesh(self, host: int):
         """Host ``host``'s compute mesh, or None for a simulated
@@ -175,12 +208,18 @@ class HostTopology:
 
     def wave_quotas(self, wave_size: int) -> tuple:
         """Per-host row targets for one wave: ``wave_size`` split
-        proportional to device counts, each rounded up to the host's
-        granule (never below one granule — a live host always gets a
-        packable window)."""
-        total = sum(self.device_counts)
+        proportional to LIVE device counts, each rounded up to the
+        host's granule (never below one granule — a live host always
+        gets a packable window).  Dead hosts get quota 0, so the wave
+        re-spreads over survivors through the same proportional split —
+        failover IS a re-quota, nothing more."""
+        total = sum(d for h, d in enumerate(self.device_counts)
+                    if h not in self.failed)
         quotas = []
-        for d, g in zip(self.device_counts, self.granules):
+        for h, (d, g) in enumerate(zip(self.device_counts, self.granules)):
+            if h in self.failed:
+                quotas.append(0)
+                continue
             share = -(-wave_size * d // total)          # ceil split
             quotas.append(max(-(-share // g) * g, g))
         return tuple(quotas)

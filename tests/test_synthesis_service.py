@@ -11,8 +11,8 @@ import pytest
 from repro.configs.oscar import DiffusionConfig
 from repro.diffusion.dit import init_dit
 from repro.diffusion.schedule import make_schedule
-from repro.serve import (SynthesisEngine, SynthesisFuture, SynthesisService,
-                         SynthesisStore)
+from repro.serve import (RequestFailedError, SynthesisEngine,
+                         SynthesisFuture, SynthesisService, SynthesisStore)
 
 DC = DiffusionConfig(d_model=32, num_layers=1, num_heads=2,
                      sample_timesteps=3, train_timesteps=16)
@@ -175,19 +175,29 @@ def test_store_layout_and_validation(dm, tmp_path):
     (store_dir / "manifest.json").write_text(json.dumps(manifest))
     assert SynthesisStore(store_dir).get(key) is None
 
-    # structural corruption (wrong row shape) must refuse to serve
+    # structural corruption (wrong row shape) must never be served — the
+    # shard is QUARANTINED (entry healed, file moved aside) and the key
+    # misses so the engine regenerates it
     ent["count"] = 2
     ent["shape"] = [2, H + 1, H, 3]
     (store_dir / "manifest.json").write_text(json.dumps(manifest))
-    with pytest.raises(ValueError, match="does not match its manifest"):
-        SynthesisStore(store_dir).get(key)
+    s2 = SynthesisStore(store_dir)
+    assert s2.get(key) is None
+    assert s2.metrics.get("store.quarantined") == 1
+    assert key not in s2
+    assert (store_dir / "quarantine" / f"{slug}.npz").exists()
+    assert not (store_dir / ent["file"]).exists()
+    healed = json.loads((store_dir / "manifest.json").read_text())
+    assert slug not in healed["entries"]
 
-    # a slug recording a different key than requested must refuse too
+    # a slug recording a different key than requested is manifest
+    # corruption — same containment, caught before the shard is read
     ent["shape"] = [2, H, H, 3]
     ent["key"]["steps"] = 999
     (store_dir / "manifest.json").write_text(json.dumps(manifest))
-    with pytest.raises(ValueError, match="different cache key"):
-        SynthesisStore(store_dir).get(key)
+    s3 = SynthesisStore(store_dir)
+    assert s3.get(key) is None
+    assert s3.metrics.get("store.quarantined") == 1
 
 
 def test_midwave_submit_streams_into_drain_without_poll(dm):
@@ -228,9 +238,10 @@ def test_sync_and_async_waves_bit_identical(dm):
 
 
 def test_partial_drain_failure_resolves_served_futures(dm):
-    """Futures resolve as waves retire: a request whose wave completed
-    before a later wave failed stays served (its results are not lost
-    with the exception), and the failed request survives for a retry."""
+    """Failure isolation at the service: a permanent sampler failure in
+    one wave group resolves ONLY that group's futures to typed errors —
+    the drain returns normally, other tenants keep their results, and a
+    resubmit after the fault is fixed serves fresh rows."""
     svc = _service(dm, key=13)
     fa = svc.submit(_enc(90), 0, 4, guidance=1.0)
     fb = svc.submit(_enc(91), 1, 4, guidance=9.0)   # later-sorted group
@@ -245,12 +256,18 @@ def test_partial_drain_failure_resolves_served_futures(dm):
         return orig(head, rows, key)
 
     eng._sample_wave = failing
-    with pytest.raises(RuntimeError, match="mid-drain"):
-        svc.drain()
+    out = svc.drain()                       # one tenant poisoned: no raise
     assert fa.done() and fa.result().shape == (4, H, H, 3)
-    assert not fb.done()
+    assert fa.rid in out and fb.rid not in out
+    err = fb.exception()
+    assert isinstance(err, RequestFailedError) and err.rid == fb.rid
+    assert "mid-drain" in str(err.__cause__)
+    with pytest.raises(RequestFailedError):
+        fb.result()
+    assert eng.metrics.get("requests_failed") == 1
     eng._sample_wave = orig
-    assert fb.result().shape == (4, H, H, 3)        # retry drain serves it
+    retry = svc.submit(_enc(91), 1, 4, guidance=9.0)
+    assert retry.result().shape == (4, H, H, 3)     # healed resubmit
 
 
 def test_store_serves_manifest_prefix_of_outrun_shard(dm, tmp_path):
