@@ -155,16 +155,17 @@ def sample_cfg_compacted(params, dc: DiffusionConfig, sched: NoiseSchedule,
         segment_fn=_compacted_segment)
 
 
-@partial(jax.jit, static_argnames=("dc", "row_offset", "image_size",
-                                   "channels", "eta", "use_pallas"))
+@partial(jax.jit, static_argnames=("dc", "image_size", "channels", "eta",
+                                   "use_pallas"))
 def _window_segment(params, dc, x, y, row_keys, guidance, ts, jloc, ab_t,
                     ab_prev, active, *, row_offset, image_size, channels,
                     eta, use_pallas):
     """One host-window segment, jitted: the executable specializes on
-    (wave width, row_offset, carried rows, window rows, iterations) — the
-    same window geometry recurring across waves or drains reuses one
-    compile.  The wave-resident scalar tables are traced operands, so the
-    same geometry at different schedule values shares the executable."""
+    (wave width, carried rows, window rows, iterations) — the same window
+    geometry recurring across waves, drains, or HOSTS reuses one compile.
+    ``row_offset`` and the wave-resident scalar tables are traced
+    operands: equal-quota hosts at different wave offsets share a single
+    executable, so adding hosts does not multiply the compile bill."""
     return reverse_sample_window(params, dc, x, y, row_keys, guidance,
                                  ts, jloc, ab_t, ab_prev, active,
                                  row_offset=row_offset,

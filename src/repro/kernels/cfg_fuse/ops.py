@@ -51,10 +51,12 @@ def cfg_update_rowwise(x, eps_c, eps_u, s, ab_t, ab_prev, noise, active,
     Row-window path: the scalar vectors may be WIDER than ``x``'s batch —
     tensor row b uses scalar slot ``row_offset + b`` — so a window of a
     wave's rows can update against the wave-wide scalar table without
-    slicing a copy of it per step.  Substrate for the ROADMAP multi-host
-    direction (per-host windows of a sharded wave); the in-tree
-    compaction scheduler slices its segment tables host-side and always
-    uses the default ``row_offset=0``."""
+    slicing a copy of it per step.  ``row_offset`` may be a traced scalar
+    (the multi-host window path passes it as an operand so one compiled
+    executable serves every host offset); the bounds check runs only for
+    concrete offsets.  The in-tree compaction scheduler slices its
+    segment tables host-side and always uses the default
+    ``row_offset=0``."""
     if interpret is None:
         interpret = _on_cpu()
     shape = x.shape
@@ -76,11 +78,12 @@ def cfg_update_rowwise(x, eps_c, eps_u, s, ab_t, ab_prev, noise, active,
         jnp.asarray(s, jnp.float32).reshape(-1),
         jnp.asarray(active).astype(jnp.float32).reshape(-1),
     ])
-    if row_offset < 0 or scal.shape[1] < row_offset + B:
+    if isinstance(row_offset, (int, np.integer)) and \
+            (row_offset < 0 or scal.shape[1] < row_offset + B):
         raise ValueError(
             f"rowwise scalars span {scal.shape[1]} rows; window "
             f"[{row_offset}, {row_offset + B}) is out of range")
-    off = jnp.asarray([row_offset], jnp.int32)
+    off = jnp.asarray(row_offset, jnp.int32).reshape(1)
     out = K.cfg_update_rowwise_3d(flat(x), flat(eps_c), flat(eps_u),
                                   flat(noise), off, scal, eta=float(eta),
                                   interpret=interpret)

@@ -9,6 +9,7 @@ This is the numerical contract the Pallas kernel must match:
 """
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
 
 
@@ -49,14 +50,17 @@ def cfg_update_rowwise(x, eps_c, eps_u, s, ab_t, ab_prev, noise, active,
 
 
 def cfg_update_rowwise_windowed(x, eps_c, eps_u, s, ab_t, ab_prev, noise,
-                                active, row_offset: int = 0,
-                                eta: float = 1.0):
+                                active, row_offset=0, eta: float = 1.0):
     """Oracle for the segment-offset kernel path: the scalar vectors span
     a wave's FULL row range and ``x`` holds only the window starting at
     ``row_offset`` (a compaction segment's live rows) — tensor row b must
     read scalar slot ``row_offset + b``.  Defined as the plain rowwise
     update on the sliced window, which is exactly what the kernel's
-    offset indexing must reproduce."""
-    w = slice(row_offset, row_offset + x.shape[0])
-    return cfg_update_rowwise(x, eps_c, eps_u, s[w], ab_t[w], ab_prev[w],
-                              noise, active[w], eta)
+    offset indexing must reproduce.  ``row_offset`` may be a TRACED
+    scalar (``dynamic_slice``, values identical to a static slice), so
+    one compiled window executable serves every host offset."""
+    B = x.shape[0]
+    sl = lambda v: jax.lax.dynamic_slice_in_dim(jnp.asarray(v),
+                                                row_offset, B, 0)
+    return cfg_update_rowwise(x, eps_c, eps_u, sl(s), sl(ab_t), sl(ab_prev),
+                              noise, sl(active), eta)

@@ -15,9 +15,20 @@ linear interpolation inside the covering bucket — the estimate is
 guaranteed to land within the true quantile's bucket (≤ ~33 % relative
 error at the default resolution; ``tests/test_obs.py`` gates this
 against a numpy oracle).
+
+THREAD-SAFETY: the registry's write paths (``inc``/``set_gauge``/
+``observe``) and its read/maintenance paths take one internal lock —
+the engine's per-host drain workers bump counters concurrently, and a
+bare ``self.value += v`` is a read-modify-write that drops increments
+under interleaving.  The lock is per-OPERATION (a wave bumps a handful
+of counters, never one per sample), so the serialized section is a few
+dict lookups and an add.  Metric handles returned by ``counter()``/
+``gauge()``/``histogram()`` are NOT individually locked — mutate
+through the registry when more than one thread writes.
 """
 from __future__ import annotations
 
+import threading
 from bisect import bisect_right
 
 import numpy as np
@@ -128,12 +139,16 @@ class MetricsRegistry:
 
     def __init__(self):
         self._metrics: dict[tuple, object] = {}
+        # one lock over create + mutate: per-host drain workers write
+        # concurrently and counter increments are read-modify-write
+        self._lock = threading.Lock()
 
     @staticmethod
     def _key(name, labels):
         return (name, tuple(sorted(labels.items())))
 
     def _get_or_make(self, name, labels, cls, *args):
+        # callers hold self._lock
         key = self._key(name, labels)
         m = self._metrics.get(key)
         if m is None:
@@ -145,41 +160,51 @@ class MetricsRegistry:
 
     # -- typed accessors (create on first use) ----------------------------
     def counter(self, name, **labels) -> Counter:
-        return self._get_or_make(name, labels, Counter)
+        with self._lock:
+            return self._get_or_make(name, labels, Counter)
 
     def gauge(self, name, **labels) -> Gauge:
-        return self._get_or_make(name, labels, Gauge)
+        with self._lock:
+            return self._get_or_make(name, labels, Gauge)
 
     def histogram(self, name, buckets=None, **labels) -> Histogram:
-        return self._get_or_make(name, labels, Histogram, buckets)
+        with self._lock:
+            return self._get_or_make(name, labels, Histogram, buckets)
 
     # -- convenience write/read paths -------------------------------------
     def inc(self, name, value=1, **labels):
-        self.counter(name, **labels).inc(value)
+        with self._lock:
+            self._get_or_make(name, labels, Counter).inc(value)
 
     def set_gauge(self, name, value, **labels):
-        self.gauge(name, **labels).set(value)
+        with self._lock:
+            self._get_or_make(name, labels, Gauge).set(value)
 
     def observe(self, name, value, **labels):
-        self.histogram(name, **labels).observe(value)
+        with self._lock:
+            self._get_or_make(name, labels, Histogram, None).observe(value)
 
     def get(self, name, default=0, **labels):
-        m = self._metrics.get(self._key(name, labels))
-        return default if m is None else m.get() if not isinstance(
-            m, Histogram) else m.summary()
+        with self._lock:
+            m = self._metrics.get(self._key(name, labels))
+            return default if m is None else m.get() if not isinstance(
+                m, Histogram) else m.summary()
 
     def drop(self, prefix: str):
         """Remove every metric whose name starts with ``prefix``."""
-        for key in [k for k in self._metrics if k[0].startswith(prefix)]:
-            del self._metrics[key]
+        with self._lock:
+            for key in [k for k in self._metrics
+                        if k[0].startswith(prefix)]:
+                del self._metrics[key]
 
     def as_dict(self) -> dict:
         """Flat dump: ``name`` or ``name{k=v,...}`` → value (histograms
         dump their summary incl. p50/p90/p99)."""
         out = {}
-        for (name, labels), m in sorted(self._metrics.items(),
-                                        key=lambda kv: (kv[0][0],
-                                                        str(kv[0][1]))):
+        with self._lock:
+            items = sorted(self._metrics.items(),
+                           key=lambda kv: (kv[0][0], str(kv[0][1])))
+        for (name, labels), m in items:
             qual = name if not labels else (
                 name + "{" + ",".join(f"{k}={v}" for k, v in labels) + "}")
             out[qual] = (m.summary() if isinstance(m, Histogram)

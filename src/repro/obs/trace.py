@@ -26,11 +26,21 @@ they do not key noise, schedule waves, or order anything — D_syn is
 bit-identical with tracing on or off (gated in ``tests/test_obs.py`` and
 the benchmark's ``--mode trace`` CI step).
 
+THREAD-SAFETY: the engine's per-host drain workers open spans and stamp
+lifecycles concurrently.  Span NESTING is tracked per thread (each
+thread sees its own depth stack — a worker's ``device.scan`` nests
+under whatever that worker opened, never under another host's span),
+while the closed-span buffer and the lifecycle stamps are guarded by
+one lock so no record is lost.  The disabled path is untouched:
+``span()`` still returns the shared no-op and ``stamp`` still returns
+before reading any clock or taking any lock.
+
 Export to a Perfetto/``chrome://tracing``-loadable timeline lives in
 ``obs/export.py``.
 """
 from __future__ import annotations
 
+import threading
 import time
 from dataclasses import dataclass, field
 from typing import Callable, Optional
@@ -44,19 +54,24 @@ _STAGE_SET = frozenset(LIFECYCLE_STAGES)
 class FakeClock:
     """Deterministic injectable clock: returns a fixed time until
     ``advance``d.  ``tick`` (optional) auto-advances by a fixed step on
-    every read, so consecutive spans get distinct, predictable stamps."""
+    every read, so consecutive spans get distinct, predictable stamps.
+    Reads and advances are atomic (its own lock): concurrent drain
+    workers reading a ticking clock must not tear the increment."""
 
     def __init__(self, start: float = 0.0, *, tick: float = 0.0):
         self.t = float(start)
         self.tick = float(tick)
+        self._lock = threading.Lock()
 
     def advance(self, dt: float):
-        self.t += float(dt)
+        with self._lock:
+            self.t += float(dt)
 
     def __call__(self) -> float:
-        now = self.t
-        self.t += self.tick
-        return now
+        with self._lock:
+            now = self.t
+            self.t += self.tick
+            return now
 
 
 @dataclass
@@ -109,8 +124,9 @@ class _OpenSpan:
         return self
 
     def __enter__(self):
-        self.depth = len(self._tracer._stack)
-        self._tracer._stack.append(self)
+        stack = self._tracer._stack   # this THREAD's nesting stack
+        self.depth = len(stack)
+        stack.append(self)
         self._start = self._tracer.clock()
         return self
 
@@ -124,9 +140,10 @@ class _OpenSpan:
                 stack.pop()
             if stack:
                 stack.pop()
-        self._tracer.spans.append(Span(self.name, self._start,
-                                       max(end - self._start, 0.0),
-                                       self.attrs, self.depth))
+        with self._tracer._lock:
+            self._tracer.spans.append(Span(self.name, self._start,
+                                           max(end - self._start, 0.0),
+                                           self.attrs, self.depth))
         return False
 
 
@@ -144,7 +161,18 @@ class Tracer:
         self.enabled = enabled
         self.spans: list[Span] = []
         self.lifecycle: dict[int, dict[str, float]] = {}
-        self._stack: list[_OpenSpan] = []
+        self._tls = threading.local()    # per-thread nesting stacks
+        self._lock = threading.Lock()    # guards spans + lifecycle
+
+    @property
+    def _stack(self) -> list:
+        """The CALLING thread's open-span stack: nesting depth is a
+        per-thread notion (a drain worker's spans nest under what that
+        worker opened, not under another host's)."""
+        stack = getattr(self._tls, "stack", None)
+        if stack is None:
+            stack = self._tls.stack = []
+        return stack
 
     # -- spans ------------------------------------------------------------
     def span(self, name: str, **attrs):
@@ -158,20 +186,33 @@ class Tracer:
         """Record a zero-duration marker at the current clock."""
         if not self.enabled:
             return
-        self.spans.append(Span(name, self.clock(), 0.0, attrs,
-                               len(self._stack)))
+        span = Span(name, self.clock(), 0.0, attrs, len(self._stack))
+        with self._lock:
+            self.spans.append(span)
+
+    def now(self) -> Optional[float]:
+        """Current clock reading, or None when disabled — how the engine
+        captures a timestamp early (e.g. at pack time) to commit as a
+        stamp later, once the wave it belongs to actually dispatched."""
+        return self.clock() if self.enabled else None
 
     # -- request lifecycle ------------------------------------------------
-    def stamp(self, rid: int, stage: str):
+    def stamp(self, rid: int, stage: str, t: Optional[float] = None):
         """Stamp one lifecycle stage for request ``rid``.  First stamp
         per (rid, stage) wins — a request whose rows span several waves
-        keeps its first pack/dispatch time."""
+        keeps its first pack/dispatch time.  ``t`` (from ``now()``)
+        backdates the stamp to a previously captured clock reading, so a
+        stage observed mid-wave can be committed only after the wave
+        succeeds (an aborted wave must not freeze its stamps)."""
         if not self.enabled:
             return
         if stage not in _STAGE_SET:
             raise ValueError(f"unknown lifecycle stage {stage!r}; expected "
                              f"one of {LIFECYCLE_STAGES}")
-        self.lifecycle.setdefault(rid, {}).setdefault(stage, self.clock())
+        if t is None:
+            t = self.clock()
+        with self._lock:
+            self.lifecycle.setdefault(rid, {}).setdefault(stage, t)
 
     def request_latency(self, rid: int) -> dict:
         """Derived latencies for ``rid``: ``queue_wait`` (enqueue →

@@ -34,6 +34,7 @@ reproduces bit-identical rows.  Fault tolerance never resamples.
 """
 from __future__ import annotations
 
+import threading
 import time
 from dataclasses import dataclass, field
 
@@ -125,15 +126,29 @@ class FaultInjector:
       exactly ONCE (first matching check), so a retried operation makes
       progress and a failover's replacement wave is not re-killed by the
       same entry.
-    * ``p``/``seed`` — every check draws from a PRIVATE
-      ``np.random.default_rng(seed)`` and fires with probability ``p``.
-      No global RNG, no wall-clock: two injectors with the same seed see
-      the same fault sequence for the same check sequence.
+    * ``p``/``seed`` — every check draws from a PRIVATE stream keyed by
+      ``(seed, site, host, wave, occurrence)`` and fires with
+      probability ``p``.  No global RNG, no wall-clock, and the draw
+      depends only on WHAT is checked, never on the order checks arrive
+      — so whether any given check WOULD fire is reproducible even when
+      the engine's per-host drain workers hit sites concurrently in
+      scheduler-dependent order.
 
-    ``max_faults`` caps total fires across both modes.  ``check`` raises
+    ``max_faults`` caps total fires across both modes.  The cap is the
+    one arrival-ordered piece of p-mode: slots are claimed first-come,
+    so under concurrent workers WHICH candidate fault wins a scarce
+    slot can vary with thread interleaving (the served bytes are
+    bit-identical either way — failover requeues, never resamples).
+    Sequential drains (``workers=False``) reproduce the full ``fired``
+    sequence exactly.  ``check`` raises
     ``HostLostError`` for the ``window`` site and ``InjectedFaultError``
     (transient) for every other site; ``fired`` records what actually
     fired, in order.
+
+    ``check`` is THREAD-SAFE (one internal lock over the schedule, the
+    per-key occurrence counts, and ``fired``): fault sites fire inside
+    per-host workers once drains are concurrent, and a torn
+    ``del self._schedule[i]`` would double-fire a one-shot entry.
     """
 
     def __init__(self, schedule=(), *, p: float = 0.0, seed: int = 0,
@@ -149,7 +164,9 @@ class FaultInjector:
             raise ValueError(f"fault probability p={p} must be in [0, 1]")
         self._schedule = norm            # entries removed as they fire
         self.p = float(p)
-        self._rng = np.random.default_rng(seed)
+        self._seed = int(seed)
+        self._counts: dict[tuple, int] = {}   # (site,host,wave) -> checks
+        self._lock = threading.Lock()
         self.max_faults = max_faults
         self.fired: list = []            # (site, host, wave) in fire order
 
@@ -157,24 +174,37 @@ class FaultInjector:
         return self.max_faults is not None and \
             len(self.fired) >= self.max_faults
 
+    def _draw(self, site: str, host: int, wave: int) -> float:
+        """One uniform draw keyed by the CHECK's identity (plus how many
+        times this exact site/host/wave was checked before — retries see
+        fresh draws), not by arrival order."""
+        key = (site, int(host), int(wave))
+        n = self._counts.get(key, 0)
+        self._counts[key] = n + 1
+        seq = np.random.SeedSequence(
+            [self._seed, FAULT_SITES.index(site),
+             int(host) + 2, int(wave) + 2, n])
+        return float(np.random.default_rng(seq).random())
+
     def check(self, site: str, *, host: int = -1, wave: int = -1) -> None:
         """Raise if a fault is due at this site, else return.  Called by
         the engine/store at each injectable site; a no-op (beyond one
         schedule scan / RNG draw) when nothing matches."""
-        due = False
-        if not self._capped():
-            for i, (s, h, w) in enumerate(self._schedule):
-                if s == site and (h is None or h == host) \
-                        and (w is None or w == wave):
-                    del self._schedule[i]
+        with self._lock:
+            due = False
+            if not self._capped():
+                for i, (s, h, w) in enumerate(self._schedule):
+                    if s == site and (h is None or h == host) \
+                            and (w is None or w == wave):
+                        del self._schedule[i]
+                        due = True
+                        break
+                if not due and self.p > 0.0 and \
+                        self._draw(site, host, wave) < self.p:
                     due = True
-                    break
-            if not due and self.p > 0.0 and \
-                    float(self._rng.random()) < self.p:
-                due = True
-        if not due:
-            return
-        self.fired.append((site, host, wave))
+            if not due:
+                return
+            self.fired.append((site, host, wave))
         if site == "window":
             raise HostLostError(host, wave)
         raise InjectedFaultError(site, host, wave)

@@ -201,6 +201,7 @@ class SynthesisService:
 
     # -- draining ---------------------------------------------------------
     def drain(self, key=None, *, poll: Callable[[], bool] | None = None,
+              host_polls: dict[int, Callable[[], bool]] | None = None,
               stream: bool | None = None) -> dict[int, np.ndarray]:
         """Drain queued requests, resolving their futures.
 
@@ -209,6 +210,10 @@ class SynthesisService:
         invoked before each wave is packed and may submit new requests —
         compatible ones join the open wave (return falsy once the arrival
         trace is exhausted, or the drain never concludes).
+        ``host_polls`` (requires the engine to have a topology) adds
+        PER-HOST admission hooks on the same contract — every live
+        host's hook runs at each wave boundary, a dead host's hook is
+        dropped; see ``SynthesisEngine.run``.
 
         Failure contract: a PERMANENT failure inside one wave group
         resolves that group's futures to ``RequestFailedError`` (read
@@ -226,7 +231,8 @@ class SynthesisService:
             # failure stay resolved even though run() raises; the return
             # value is the full drain's rid -> rows map
             try:
-                return self.engine.run(key, poll=poll, stream=stream,
+                return self.engine.run(key, poll=poll,
+                                       host_polls=host_polls, stream=stream,
                                        on_result=self._deliver,
                                        on_error=self._deliver_error)
             finally:

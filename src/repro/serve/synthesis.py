@@ -89,6 +89,30 @@ Classifier-guided and unconditional groups keep the single-host path (a
 classifier closure cannot be sharded by rows).  Per-host accounting
 lands in ``stats["per_host"]``.
 
+CONCURRENT PLACED DRAIN (``workers=True``, the default): every live
+host gets its own EXECUTOR THREAD (``_HostPool``), and a placed wave
+runs in two parallel phases — each host packs its window on its own
+worker (``np.concatenate``, meta building, ``plan_epochs``, all
+overlapping other hosts' work), then, after the wave-resident table is
+assembled, each host dispatches its window's jitted segment chain on
+its worker WITHOUT fencing.  Retirement fences every window
+concurrently on its host's worker, so a ``device.scan`` span times only
+its own host's wait (the sequential drain fenced in window order — host
+1's span silently measured host 0's).  Concurrency is VALUE-INVISIBLE:
+row noise is keyed by request identity and scatter order is fixed by
+the placement, so D_syn is bit-identical under any thread interleaving
+— and to the ``workers=False`` sequential oracle.  A ``HostLostError``
+raised inside a worker (the ``window`` fault site fires there) is
+marshalled back to the drain loop after every in-flight dispatch is
+collected, and takes the same ``_handle_host_loss`` failover path;
+hosts lost CONCURRENTLY in one wave ride along on the first error.
+
+PER-HOST STREAMING ADMISSION (``run(host_polls={h: hook})``): each
+host's frontend can poll its own arrival trace — every hook runs at
+every wave boundary (it may submit; identity routing places the
+request), and any hook returning truthy keeps the drain alive when the
+queues run dry, exactly like the global ``poll``.
+
 Requests stay on the queue until their results are produced OR they
 resolve to a typed failure: an exception mid-drain (a failing sampler,
 an interrupted process) leaves every unserved request queued for the
@@ -117,7 +141,9 @@ other groups.
 from __future__ import annotations
 
 import hashlib
+import threading
 from collections import deque
+from concurrent.futures import ThreadPoolExecutor
 from dataclasses import dataclass, field, replace
 from typing import Any, Callable, Optional
 
@@ -244,6 +270,40 @@ class _ShardedGroup:
         return sum(q.rows_available() for q in self.queues)
 
 
+class _HostPool:
+    """One single-thread executor per live host — the concurrency
+    substrate of the placed drain.  A host's pack / dispatch / fence
+    tasks run IN ORDER on its own worker (per-host FIFO preserves the
+    dispatch-before-fence pipeline), while different hosts' tasks
+    overlap freely.  ``discard`` retires exactly one host's worker
+    (failover: survivors' threads are untouched); ``close`` joins
+    everything at drain end."""
+
+    def __init__(self, hosts):
+        self._ex = {h: ThreadPoolExecutor(
+            max_workers=1, thread_name_prefix=f"synth-host{h}")
+            for h in sorted(hosts)}
+
+    @property
+    def hosts(self) -> frozenset:
+        return frozenset(self._ex)
+
+    def submit(self, host: int, fn, *args):
+        return self._ex[host].submit(fn, *args)
+
+    def discard(self, host: int):
+        """Retire one host's worker (called with no task in flight —
+        the drain collects every future before handling a loss)."""
+        ex = self._ex.pop(host, None)
+        if ex is not None:
+            ex.shutdown(wait=False)
+
+    def close(self):
+        for ex in self._ex.values():
+            ex.shutdown(wait=True)
+        self._ex = {}
+
+
 class SynthesisEngine:
     """Wave-based batched diffusion synthesis over a frozen DM."""
 
@@ -256,6 +316,7 @@ class SynthesisEngine:
                  compaction_compile_cost: int = 256,
                  topology: HostTopology | None = None,
                  hosts: int | None = None,
+                 workers: bool = True,
                  tracer: Tracer | None = None,
                  metrics: MetricsRegistry | None = None,
                  faults: FaultInjector | None = None,
@@ -310,12 +371,25 @@ class SynthesisEngine:
         # rows produced by a drain that raised before returning — the next
         # ``run`` hands them to its caller (zero-loss retry contract)
         self._carried: dict[int, np.ndarray] = {}
+        # concurrent placed drain: per-host workers (``_HostPool``), built
+        # lazily per drain for the live host set; ``workers=False`` keeps
+        # the sequential window loop (the fuzz suites' oracle)
+        self.workers = workers
+        self._pool: Optional[_HostPool] = None
+        # test seam: called as (site, host, wave) from inside worker
+        # tasks, so tests can force thread interleavings with a barrier
+        self._sync_hook = None
         if topology is not None or hosts is not None:
             self.set_topology(topology if topology is not None else hosts)
 
     #: legacy counter keys, in the order the pre-registry stats dict
     #: carried them — the view preserves both names and order bit-for-bit
-    _STAT_KEYS = ("requests", "waves", "generated", "padded", "cache_hits",
+    #: ``generated`` counts REAL rows only (images a caller asked for);
+    #: ``scheduled_rows`` counts every device row including alignment
+    #: padding — the invariant ``scheduled_rows == generated + padded``
+    #: holds on every path (grouped/ragged/compacted/placed)
+    _STAT_KEYS = ("requests", "waves", "generated", "scheduled_rows",
+                  "padded", "cache_hits",
                   "store_hits", "streamed", "merged_waves",
                   "compiled_shapes", "segments",
                   "row_iters_scheduled", "row_iters_active")
@@ -478,6 +552,7 @@ class SynthesisEngine:
 
     # -- draining ---------------------------------------------------------
     def run(self, key, *, poll: Callable[[], bool] | None = None,
+            host_polls: dict[int, Callable[[], bool]] | None = None,
             stream: bool | None = None,
             on_result: Callable[[int, np.ndarray], None] | None = None,
             on_error: Callable[[int, Exception], None] | None = None,
@@ -493,9 +568,18 @@ class SynthesisEngine:
         compatible ones are packed into the currently-open wave.  Return
         truthy to keep the drain alive when the queue runs dry, falsy once
         the arrival trace is exhausted.  ``stream`` defaults to
-        ``poll is not None``; streaming packs ``wave_size``-row waves with
-        a granule-rounded tail, snapshot mode packs near-uniform waves
-        (one compiled shape per group).
+        ``poll is not None or bool(host_polls)``; streaming packs
+        ``wave_size``-row waves with a granule-rounded tail, snapshot mode
+        packs near-uniform waves (one compiled shape per group).
+
+        ``host_polls`` (requires a topology) maps host ids to PER-HOST
+        poll hooks — each host's frontend polling its own arrival trace.
+        Every live host's hook runs at every wave boundary alongside the
+        global ``poll`` (a hook may submit; identity routing places the
+        request on its home host's ingress queue), and any hook returning
+        truthy keeps the drain alive when the queues run dry.  A hook
+        whose host has FAILED is dropped, not called — its trace streams
+        nowhere; resubmit through a live frontend.
 
         ``on_result`` (if given) is called with (rid, rows) the moment
         each request's results exist — this drain's caller (e.g. a
@@ -515,7 +599,18 @@ class SynthesisEngine:
         produce forward to the next ``run``, so exception → re-drain
         serves every admitted request with zero loss.
         """
-        stream = (poll is not None) if stream is None else stream
+        stream = ((poll is not None or bool(host_polls))
+                  if stream is None else stream)
+        if host_polls:
+            if self.topology is None:
+                raise ValueError("host_polls requires a topology "
+                                 "(hosts=H / topology=HostTopology(...))")
+            bad = [h for h in host_polls
+                   if not 0 <= h < self.topology.num_hosts]
+            if bad:
+                raise ValueError(
+                    f"host_polls hosts {bad} out of range for "
+                    f"{self.topology.num_hosts} hosts")
         results: dict[int, np.ndarray] = {}
         failed: dict[int, Exception] = {}
         if self.store is not None:
@@ -535,7 +630,8 @@ class SynthesisEngine:
                     on_result(rid, rows)
         with self.tracer.span("drain", queued=len(self._queue)):
             try:
-                self._drain(key, results, failed, poll=poll, stream=stream,
+                self._drain(key, results, failed, poll=poll,
+                            host_polls=host_polls, stream=stream,
                             on_result=on_result, on_error=on_error)
             except BaseException:
                 # this drain's caller never sees ``results`` — carry the
@@ -543,6 +639,9 @@ class SynthesisEngine:
                 self._carried.update(results)
                 raise
             finally:
+                if self._pool is not None:
+                    self._pool.close()     # join every host worker
+                    self._pool = None
                 if self.store is not None:
                     self.store.flush()
                 # in-place removal, not a rebuild: a concurrent submit
@@ -698,8 +797,8 @@ class SynthesisEngine:
                              use_pallas=self.use_pallas)
 
     # -- drain machinery --------------------------------------------------
-    def _drain(self, key, results, failed, *, poll, stream, on_result=None,
-               on_error=None):
+    def _drain(self, key, results, failed, *, poll, stream, host_polls=None,
+               on_result=None, on_error=None):
         st = _DrainState()
         st.on_result = on_result
         st.on_error = on_error
@@ -711,11 +810,12 @@ class SynthesisEngine:
         if self.topology is not None:
             for h, q in enumerate(self._host_depths(st)):
                 self.metrics.inc("host.queue_depth_at_start", q, host=h)
+        polling = poll is not None or bool(host_polls)
         while True:
             live = sorted(g for g, q in st.groups.items()
                           if q.rows_available())
             if not live:
-                if poll is not None and poll():
+                if polling and self._poll_all(poll, host_polls):
                     self._admit_new(st, results)
                     continue
                 break
@@ -723,10 +823,12 @@ class SynthesisEngine:
             try:
                 if isinstance(grp, _ShardedGroup):
                     self._drain_group_placed(grp, st, key, results,
-                                             poll=poll, stream=stream)
+                                             poll=poll,
+                                             host_polls=host_polls,
+                                             stream=stream)
                 else:
-                    self._drain_group(grp, st, key, results,
-                                      poll=poll, stream=stream)
+                    self._drain_group(grp, st, key, results, poll=poll,
+                                      host_polls=host_polls, stream=stream)
             except Exception as exc:
                 # failure isolation: with an on_error hook, a permanent
                 # failure inside ONE group (a poisoned classifier, an
@@ -747,6 +849,74 @@ class SynthesisEngine:
                 for h, q in enumerate(grp.queues):
                     depths[h] += q.rows_available()
         return depths
+
+    def _poll_all(self, poll, host_polls) -> bool:
+        """Admission keep-alive: run the global ``poll`` AND every live
+        host's admission hook.  Every hook runs — no short-circuit,
+        because a hook's side effect is submitting that host's requests
+        — and any truthy return keeps the drain alive.  Hooks for hosts
+        that have since died are dropped: their traffic belongs to
+        survivors now, which identity routing over the live set already
+        handles at admission."""
+        more = False
+        if poll is not None:
+            more = bool(poll()) or more
+        if host_polls:
+            live = (self.topology.live_hosts
+                    if self.topology is not None else ())
+            for h, hook in host_polls.items():
+                if h in live:
+                    more = bool(hook()) or more
+        return more
+
+    def _ensure_pool(self) -> Optional[_HostPool]:
+        """The per-host worker pool for the CURRENT live set, or None
+        when the drain should stay sequential (``workers=False``, no
+        topology, or fewer than two live hosts — one host gains nothing
+        from a worker).  Rebuilt only when membership changes; a host
+        loss discards just the dead host's executor
+        (``_handle_host_loss``), so survivors' threads ride out the
+        failover untouched."""
+        if not self.workers or self.topology is None:
+            return None
+        live = frozenset(self.topology.live_hosts)
+        if len(live) < 2:
+            if self._pool is not None:
+                self._pool.close()
+                self._pool = None
+            return None
+        if self._pool is None or self._pool.hosts != live:
+            if self._pool is not None:
+                self._pool.close()
+            self._pool = _HostPool(live)
+        return self._pool
+
+    @staticmethod
+    def _collect(futs):
+        """Gather per-window worker futures in WINDOW ORDER with
+        deterministic error marshalling: every future is awaited (no
+        task is left running into failover handling), then the first
+        error BY WINDOW ORDER — not completion order — is raised,
+        exactly what the sequential loop would have raised.  When that
+        error is a ``HostLostError``, any further same-wave losses ride
+        along as ``err.also`` so ``_handle_host_loss`` can fail every
+        dead host from one aborted wave."""
+        outs, first, losses = [], None, []
+        for f in futs:
+            try:
+                outs.append(f.result())
+            except HostLostError as err:
+                losses.append(err)
+                if first is None:
+                    first = err
+            except Exception as exc:          # noqa: BLE001 — re-raised
+                if first is None:
+                    first = exc
+        if first is not None:
+            if isinstance(first, HostLostError):
+                first.also = [e for e in losses if e is not first]
+            raise first
+        return outs
 
     def _check_fault(self, site: str, *, host: int = 0, wave: int = -1):
         """Injectable fault site: counts what fires, then lets it raise."""
@@ -866,7 +1036,7 @@ class SynthesisEngine:
                 st.groups[gk].push(_Pending(r, fresh))
 
     def _drain_group(self, q: _GroupQueue, st: "_DrainState", key, results,
-                     *, poll, stream):
+                     *, poll, host_polls, stream):
         """Drain one group's live queue wave by wave, double-buffered:
         wave k+1 is packed and dispatched while wave k runs on device."""
         ragged = self.ragged and q.head.mode == "cfg"
@@ -885,8 +1055,7 @@ class SynthesisEngine:
             # admission runs at every wave boundary with or without a
             # poll, so requests submitted by another thread while waves
             # are in flight stream into this drain too
-            if poll is not None:
-                poll()
+            self._poll_all(poll, host_polls)
             self._admit_new(st, results)
             parts = q.take(wave_rows)
             got = sum(t for _, t, _ in parts)
@@ -894,8 +1063,7 @@ class SynthesisEngine:
                 break
             if got < wave_rows:
                 # open wave: give late arrivals one chance to fill it
-                if poll is not None:
-                    poll()
+                self._poll_all(poll, host_polls)
                 self._admit_new(st, results)
                 more = q.take(wave_rows - got)
                 parts += more
@@ -965,7 +1133,8 @@ class SynthesisEngine:
             for p, _, _ in parts:
                 self.tracer.stamp(p.req.rid, "dispatch")
             self.metrics.inc("waves")
-            self.metrics.inc("generated", target)
+            self.metrics.inc("generated", got)
+            self.metrics.inc("scheduled_rows", target)
             self.metrics.inc("padded", target - got)
             if inflight is not None:
                 self._retire(st, results, *inflight)
@@ -977,7 +1146,7 @@ class SynthesisEngine:
             self._retire(st, results, *inflight)
 
     def _drain_group_placed(self, grp: _ShardedGroup, st: "_DrainState", key,
-                            results, *, poll, stream):
+                            results, *, poll, host_polls, stream):
         """Placement-aware drain of one cfg group over the engine's
         topology, double-buffered like ``_drain_group``: each host packs
         its contiguous window of every wave locally from its own ingress
@@ -992,14 +1161,23 @@ class SynthesisEngine:
         topology, placement, or arrival order."""
         smax = 0                         # running step ceiling (see above)
         inflight = None                  # (xs, invs, placement, parts_h, w)
+        shapes = set()                   # dispatched (host, rows) geometries
+        # snapshot drains spread the group's rows over near-uniform waves
+        # (the exact ``_plan_waves`` policy the single-host packer uses):
+        # no systematic tail wave, so every wave shares the full waves'
+        # window geometry and their compiled executables.  Streaming
+        # drains can't know the total up front and keep ``wave_size``.
+        if stream or grp.rows_available() == 0:
+            wave_target = self.wave_size
+        else:
+            _, wave_target = self._plan_waves(grp.rows_available())
         while True:
             # re-read topology + quotas EVERY wave: a host lost on the
             # previous iteration re-spreads its share over survivors
             # through the same proportional split (failover == re-quota)
             topo = self.topology
-            quotas = topo.wave_quotas(self.wave_size)
-            if poll is not None:
-                poll()
+            quotas = topo.wave_quotas(wave_target)
+            self._poll_all(poll, host_polls)
             self._admit_new(st, results)
             parts_h = [q.take(quotas[h]) for h, q in enumerate(grp.queues)]
             got = sum(t for parts in parts_h for _, t, _ in parts)
@@ -1008,31 +1186,46 @@ class SynthesisEngine:
             if got < sum(quotas):
                 # open wave: give late arrivals one chance to fill the
                 # hosts' windows before padding them
-                if poll is not None:
-                    poll()
+                self._poll_all(poll, host_polls)
                 self._admit_new(st, results)
                 for h, q in enumerate(grp.queues):
                     have = sum(t for _, t, _ in parts_h[h])
                     if have < quotas[h]:
                         parts_h[h] += q.take(quotas[h] - have)
                 got = sum(t for parts in parts_h for _, t, _ in parts)
-            placement = WavePlacement.plan(
-                [sum(t for _, t, _ in parts) for parts in parts_h],
-                topo.granules)
-            st.wave_i += 1
-            for parts in parts_h:
-                for p, _, _ in parts:
-                    self.tracer.stamp(p.req.rid, "pack")
+            rows_h = [sum(t for _, t, _ in parts) for parts in parts_h]
+            placement = WavePlacement.plan(rows_h, topo.granules)
+            geom = tuple((w.host, w.rows) for w in placement.windows)
+            if geom not in shapes:
+                # tail-wave shape promotion: if padding every window up
+                # to its quota reproduces a geometry this drain already
+                # dispatched, take it — the tail then reuses the full
+                # waves' compiled window executables instead of
+                # compiling its own (padding dups are discarded at
+                # scatter, so D_syn is unchanged)
+                quota_pl = WavePlacement.plan(rows_h, topo.granules,
+                                              pad_to=quotas)
+                if tuple((w.host, w.rows)
+                         for w in quota_pl.windows) in shapes:
+                    placement = quota_pl
+            # the wave index is BURNED only on successful dispatch (an
+            # aborted wave's repack keeps the same index, so trace
+            # ``wave=`` ids agree with the ``waves`` counter), and the
+            # pack stamp is captured here but committed only after the
+            # wave dispatches — first-stamp-wins tracer semantics must
+            # not freeze an aborted wave's pack time
+            wave = st.wave_i
+            t_pack = self.tracer.now()
             deep = max(p.req.num_steps
                        for parts in parts_h for p, _, _ in parts)
-            smax = max(smax, deep)
+            smax_w = max(smax, deep)
             try:
                 xs, invs, host_stats = self._sample_wave_placed(
-                    parts_h, placement, key, smax, wave=st.wave_i - 1)
+                    parts_h, placement, key, smax_w, wave=wave)
             except HostLostError as err:
                 # FAILOVER: the in-flight wave was dispatched before the
                 # loss — retire it first; then un-take this wave, migrate
-                # the dead host's requests to survivors, and re-quota.
+                # the dead hosts' requests to survivors, and re-quota.
                 # Row noise is identity-keyed, so the repacked rows are
                 # bit-identical — a placement change, not a resample.
                 if inflight is not None:
@@ -1040,13 +1233,18 @@ class SynthesisEngine:
                     inflight = None
                 self._handle_host_loss(grp, st, parts_h, err)
                 continue
+            st.wave_i += 1
+            smax = smax_w
+            shapes.add(tuple((w.host, w.rows) for w in placement.windows))
             for parts in parts_h:
                 for p, _, _ in parts:
+                    self.tracer.stamp(p.req.rid, "pack", t=t_pack)
                     self.tracer.stamp(p.req.rid, "dispatch")
             self.metrics.inc("waves")
             if self.ragged:
                 self.metrics.inc("merged_waves")
-            self.metrics.inc("generated", placement.total_rows)
+            self.metrics.inc("generated", placement.real_rows)
+            self.metrics.inc("scheduled_rows", placement.total_rows)
             self.metrics.inc("padded", placement.padded)
             for w, hs in zip(placement.windows, host_stats):
                 h = w.host
@@ -1062,10 +1260,10 @@ class SynthesisEngine:
             if inflight is not None:
                 self._retire_placed(st, results, *inflight)
             if self.async_waves:
-                inflight = (xs, invs, placement, parts_h, st.wave_i - 1)
+                inflight = (xs, invs, placement, parts_h, wave)
             else:
                 self._retire_placed(st, results, xs, invs, placement,
-                                    parts_h, st.wave_i - 1)
+                                    parts_h, wave)
         if inflight is not None:
             self._retire_placed(st, results, *inflight)
 
@@ -1082,16 +1280,13 @@ class SynthesisEngine:
         group would otherwise be unreachable (its window quota is 0
         forever) while still counting as available — losing the request
         and livelocking the drain loop."""
-        dead = err.host
-        # raises AllHostsLostError when no survivor remains
-        topo = self.topology.mark_failed(dead)
-        self.topology = topo
-        self.metrics.inc("fault.host_lost")
-        self.metrics.set_gauge("hosts_live", len(topo.live_hosts))
-        self.tracer.instant("host.failed", host=dead, wave=err.wave)
-        # un-take the whole aborted wave: restore each pending's ``taken``
-        # and put exhausted (popped) pendings back at the queue front in
-        # pack order — identical rows will repack under the new quotas
+        # un-take the whole aborted wave FIRST: restore each pending's
+        # ``taken`` and put exhausted (popped) pendings back at the queue
+        # front in pack order — identical rows will repack under the new
+        # quotas.  Doing this before any ``mark_failed`` keeps the queues
+        # whole even when the last survivor dies here (the concurrent
+        # dispatch can lose SEVERAL hosts in one wave, carried on
+        # ``err.also``) and ``AllHostsLostError`` aborts the drain.
         for hq, parts in zip(grp.queues, parts_h):
             for p, t, _ in parts:
                 p.taken -= t
@@ -1101,78 +1296,175 @@ class SynthesisEngine:
                         not any(q is p for q in hq.items):
                     readd.append(p)
             hq.items.extendleft(reversed(readd))
-        moved = 0
-        for g in st.groups.values():
-            if not isinstance(g, _ShardedGroup):
-                continue
-            dq = g.queues[dead]
-            moved += sum(p.rows_left() for p in dq.items)
-            for p in list(dq.items):
-                g.push(p, topo.assign(p.req.rid))
-            dq.items.clear()
-        self.metrics.inc("failover.requeued_rows", moved)
+        for loss in (err, *getattr(err, "also", ())):
+            dead = loss.host
+            # raises AllHostsLostError when no survivor remains
+            topo = self.topology.mark_failed(dead)
+            self.topology = topo
+            self.metrics.inc("fault.host_lost")
+            self.metrics.set_gauge("hosts_live", len(topo.live_hosts))
+            self.tracer.instant("host.failed", host=dead, wave=loss.wave)
+            if self._pool is not None:
+                # retire the dead host's worker only — survivors' threads
+                # (and the tasks queued on them) are untouched
+                self._pool.discard(dead)
+            moved = 0
+            for g in st.groups.values():
+                if not isinstance(g, _ShardedGroup):
+                    continue
+                dq = g.queues[dead]
+                moved += sum(p.rows_left() for p in dq.items)
+                for p in list(dq.items):
+                    g.push(p, topo.assign(p.req.rid))
+                dq.items.clear()
+            self.metrics.inc("failover.requeued_rows", moved)
+
+    def _pack_window(self, w, parts, max_steps: int, total_rows: int,
+                     wave: int):
+        """Pack ONE host's window: concatenate its pending row blocks,
+        build per-row meta, pad, and (under compaction) plan the
+        window's epoch segments with its activation sort.  Host-LOCAL
+        work — it touches only this host's pendings and this window's
+        ``_window_geoms`` bucket, so the per-host workers run packs for
+        different hosts concurrently.  Returns ``(rows, meta, inv,
+        epochs, stats)``."""
+        with self.tracer.span("window.pack", wave=wave, **w.span_attrs):
+            rows = np.concatenate([p.row_block(t, s)
+                                   for p, t, s in parts])
+            # (guidance, steps, rid, absolute row index) — identical
+            # row identity to the single-host packers, so any engine
+            # serving these requests draws the same noise streams
+            meta = [(p.req.guidance, p.req.num_steps, p.req.rid,
+                     p.req.count - p.fresh + s + i)
+                    for p, t, s in parts for i in range(t)]
+            if w.rows > w.real:
+                # per-window padding duplicates the window's OWN last
+                # row (same identity → a discarded bit-identical copy)
+                rows = np.concatenate(
+                    [rows,
+                     np.repeat(rows[-1:], w.rows - w.real, axis=0)])
+                meta += [meta[-1]] * (w.rows - w.real)
+            # useful work: each REAL row's own step count, pre-sort
+            active = int(sum(m[1] for m in meta[:w.real]))
+            steps_w = np.array([m[1] for m in meta], np.int32)
+            if self.compaction is not None:
+                seg_granule = (self.topology.granules[w.host]
+                               if self.mesh is not None else 1)
+                geoms = self._window_geoms.setdefault(
+                    (w.offset, total_rows), set())
+                order, epochs = plan_epochs(
+                    steps_w, max_steps, compaction=self.compaction,
+                    granule=seg_granule, geoms=geoms,
+                    compile_cost=self.compaction_compile_cost)
+                rows = rows[order]
+                meta = [meta[i] for i in order]
+                inv = np.empty_like(order)
+                inv[order] = np.arange(len(order))
+            else:
+                # one segment spanning the whole scan: right-aligned
+                # rows ride frozen, exactly like the one-shot ragged
+                # wave
+                epochs, inv = ((w.rows, 0, max_steps),), None
+            return rows, meta, inv, epochs, \
+                {"active": active,
+                 "scheduled": sum(r * (e - b) for r, b, e in epochs)}
+
+    def _dispatch_window(self, w, epochs, ctx, wave: int):
+        """Dispatch ONE host window's jitted segment chain — device_put
+        through the host submesh shardings, then enqueue every epoch
+        segment — WITHOUT fencing: JAX's async dispatch returns as soon
+        as the work is enqueued, so back-to-back (or per-host-worker)
+        calls overlap host h+1's dispatch with host h's device scan.
+        ``_retire_placed`` fences the returned output later."""
+        y, row_keys, g, ts, ab_t, ab_prev, jloc, act, B = ctx
+        # the host-window dispatch fault site: a fault here models the
+        # host dying with its window undispatched — the drain's failover
+        # path requeues the wave and carries on
+        self._check_fault("window", host=w.host, wave=wave)
+        lo = w.offset
+        sh = self._window_shardings(w.host)
+        x = jnp.zeros((0, self.image_size, self.image_size,
+                       self.channels))
+        prev = 0
+        with self.tracer.span("window.dispatch", wave=wave,
+                              segments=len(epochs), **w.span_attrs):
+            for rows, begin, end in epochs:
+                # full executable key: a window segment specializes on
+                # (wave width, carried, live, iterations) — NOT the
+                # window offset, which is a traced operand, so equal-
+                # quota hosts share one executable per segment geometry
+                self._note_shape(("cfg-win", B, prev, rows,
+                                  end - begin))
+                if self.compaction is not None:
+                    self._window_geoms[(lo, B)].add(
+                        (prev, rows, end - begin))
+                    self.metrics.inc("segments")
+                hi = lo + rows
+                args = dict(y=y[lo:hi], rk=row_keys[lo:hi], g=g,
+                            ts=ts[lo:hi, begin:end],
+                            jloc=jloc[lo:hi, begin:end],
+                            ab_t=ab_t[:, begin:end],
+                            ab_prev=ab_prev[:, begin:end],
+                            act=act[:, begin:end])
+                if sh is not None:
+                    # the row-window layout (wave_window_specs):
+                    # window rows shard over the host submesh's data
+                    # axes, the wave-resident tables replicate onto
+                    # that submesh
+                    args = {k: jax.device_put(v, sh[k])
+                            for k, v in args.items()}
+                with self.tracer.span("segment.dispatch", host=w.host,
+                                      rows=rows, begin=begin, end=end):
+                    x = _window_segment(
+                        self.dm_params, self.dc, x, args["y"],
+                        args["rk"], args["g"], args["ts"],
+                        args["jloc"], args["ab_t"],
+                        args["ab_prev"], args["act"],
+                        row_offset=lo,
+                        image_size=self.image_size,
+                        channels=self.channels, eta=self.eta,
+                        use_pallas=self.use_pallas)
+                prev = rows
+        if self._sync_hook is not None:
+            self._sync_hook("dispatch", w.host, wave)
+        return jnp.clip(x, -1.0, 1.0)
 
     def _sample_wave_placed(self, parts_h, placement: WavePlacement, key,
                             max_steps: int, wave: int = -1):
-        """Sample one placed wave window by window.
+        """Sample one placed wave, window-concurrently.
 
-        Assembles the merged wave in window order — each window's rows,
-        meta, and per-window padding, activation-sorted per window when
-        compaction is on so its epoch segments stay contiguous prefixes —
-        builds ONE wave-resident set of per-row tables
-        (``ragged_tables`` over the whole wave), then runs each host's
-        window as jitted segments whose fused update reads the wave table
-        at ``row_offset = window.offset``.  Returns per-window device
-        outputs (still in sorted order), the per-window inverse
-        permutations, and per-window scheduled/active row-iteration
-        counts."""
-        win_rows, win_meta, win_inv, win_plans, host_stats = [], [], [], [], []
-        for w in placement.windows:
-            with self.tracer.span("window.pack", wave=wave, **w.span_attrs):
-                parts = parts_h[w.host]
-                rows = np.concatenate([p.row_block(t, s)
-                                       for p, t, s in parts])
-                # (guidance, steps, rid, absolute row index) — identical
-                # row identity to the single-host packers, so any engine
-                # serving these requests draws the same noise streams
-                meta = [(p.req.guidance, p.req.num_steps, p.req.rid,
-                         p.req.count - p.fresh + s + i)
-                        for p, t, s in parts for i in range(t)]
-                if w.rows > w.real:
-                    # per-window padding duplicates the window's OWN last
-                    # row (same identity → a discarded bit-identical copy)
-                    rows = np.concatenate(
-                        [rows,
-                         np.repeat(rows[-1:], w.rows - w.real, axis=0)])
-                    meta += [meta[-1]] * (w.rows - w.real)
-                # useful work: each REAL row's own step count, pre-sort
-                active = int(sum(m[1] for m in meta[:w.real]))
-                steps_w = np.array([m[1] for m in meta], np.int32)
-                if self.compaction is not None:
-                    seg_granule = (self.topology.granules[w.host]
-                                   if self.mesh is not None else 1)
-                    geoms = self._window_geoms.setdefault(
-                        (w.offset, placement.total_rows), set())
-                    order, epochs = plan_epochs(
-                        steps_w, max_steps, compaction=self.compaction,
-                        granule=seg_granule, geoms=geoms,
-                        compile_cost=self.compaction_compile_cost)
-                    rows = rows[order]
-                    meta = [meta[i] for i in order]
-                    inv = np.empty_like(order)
-                    inv[order] = np.arange(len(order))
-                else:
-                    # one segment spanning the whole scan: right-aligned
-                    # rows ride frozen, exactly like the one-shot ragged
-                    # wave
-                    epochs, inv = ((w.rows, 0, max_steps),), None
-                win_rows.append(rows)
-                win_meta.append(meta)
-                win_inv.append(inv)
-                win_plans.append(epochs)
-                host_stats.append({"active": active,
-                                   "scheduled": sum(r * (e - b)
-                                                    for r, b, e in epochs)})
+        Three phases.  PACK: each host's window packs on that host's
+        worker (``_pack_window`` — rows, meta, per-window padding,
+        activation-sorted when compaction is on so its epoch segments
+        stay contiguous prefixes), overlapping other hosts' packs and
+        device scans.  ASSEMBLE (sequential, cheap): splice the windows
+        into ONE wave-resident set of per-row tables (``ragged_tables``
+        over the whole wave) in window order.  DISPATCH: every window's
+        jitted segment chain is enqueued — on its host's worker when the
+        pool is live, back-to-back otherwise — before ANY fence, each
+        reading the wave table at ``row_offset = window.offset``.
+        Worker errors marshal back deterministically (``_collect``).
+
+        Returns per-window device outputs (still in sorted order), the
+        per-window inverse permutations, and per-window scheduled/active
+        row-iteration counts.  Bit-identical with the pool on or off:
+        packing/dispatch order never keys noise — row identity does."""
+        pool = self._ensure_pool()
+        wins = placement.windows
+        if pool is not None and all(w.host in pool.hosts for w in wins):
+            packed = self._collect(
+                [pool.submit(w.host, self._pack_window, w, parts_h[w.host],
+                             max_steps, placement.total_rows, wave)
+                 for w in wins])
+        else:
+            packed = [self._pack_window(w, parts_h[w.host], max_steps,
+                                        placement.total_rows, wave)
+                      for w in wins]
+        win_rows = [p[0] for p in packed]
+        win_meta = [p[1] for p in packed]
+        win_inv = [p[2] for p in packed]
+        win_plans = [p[3] for p in packed]
+        host_stats = [p[4] for p in packed]
         meta_wave = [m for ms in win_meta for m in ms]
         cond = np.concatenate(win_rows)
         g = jnp.asarray([m[0] for m in meta_wave], jnp.float32)
@@ -1181,56 +1473,16 @@ class SynthesisEngine:
         ts, ab_t, ab_prev, jloc = ragged_tables(self.sched, steps, max_steps)
         act = jloc >= 0
         y = jnp.asarray(cond)
-        B = placement.total_rows
-        xs = []
-        for w, epochs in zip(placement.windows, win_plans):
-            # the host-window dispatch fault site: a fault here models
-            # the host dying with its window undispatched — the drain's
-            # failover path requeues the wave and carries on
-            self._check_fault("window", host=w.host, wave=wave)
-            lo = w.offset
-            sh = self._window_shardings(w.host)
-            x = jnp.zeros((0, self.image_size, self.image_size,
-                           self.channels))
-            prev = 0
-            with self.tracer.span("window.dispatch", wave=wave,
-                                  segments=len(epochs), **w.span_attrs):
-                for rows, begin, end in epochs:
-                    # full executable key: a window segment specializes on
-                    # (wave width, offset, carried, live, iterations)
-                    self._note_shape(("cfg-win", B, lo, prev, rows,
-                                      end - begin))
-                    if self.compaction is not None:
-                        self._window_geoms[(lo, B)].add(
-                            (prev, rows, end - begin))
-                        self.metrics.inc("segments")
-                    hi = lo + rows
-                    args = dict(y=y[lo:hi], rk=row_keys[lo:hi], g=g,
-                                ts=ts[lo:hi, begin:end],
-                                jloc=jloc[lo:hi, begin:end],
-                                ab_t=ab_t[:, begin:end],
-                                ab_prev=ab_prev[:, begin:end],
-                                act=act[:, begin:end])
-                    if sh is not None:
-                        # the row-window layout (wave_window_specs):
-                        # window rows shard over the host submesh's data
-                        # axes, the wave-resident tables replicate onto
-                        # that submesh
-                        args = {k: jax.device_put(v, sh[k])
-                                for k, v in args.items()}
-                    with self.tracer.span("segment.dispatch", host=w.host,
-                                          rows=rows, begin=begin, end=end):
-                        x = _window_segment(
-                            self.dm_params, self.dc, x, args["y"],
-                            args["rk"], args["g"], args["ts"],
-                            args["jloc"], args["ab_t"],
-                            args["ab_prev"], args["act"],
-                            row_offset=lo,
-                            image_size=self.image_size,
-                            channels=self.channels, eta=self.eta,
-                            use_pallas=self.use_pallas)
-                    prev = rows
-            xs.append(jnp.clip(x, -1.0, 1.0))
+        ctx = (y, row_keys, g, ts, ab_t, ab_prev, jloc, act,
+               placement.total_rows)
+        if pool is not None and all(w.host in pool.hosts for w in wins):
+            xs = self._collect(
+                [pool.submit(w.host, self._dispatch_window, w, epochs,
+                             ctx, wave)
+                 for w, epochs in zip(wins, win_plans)])
+        else:
+            xs = [self._dispatch_window(w, epochs, ctx, wave)
+                  for w, epochs in zip(wins, win_plans)]
         return xs, win_inv, host_stats
 
     def _window_shardings(self, host: int) -> Optional[dict]:
@@ -1258,13 +1510,32 @@ class SynthesisEngine:
         self._host_shardings[host] = sh
         return sh
 
+    def _fence_window(self, w, x, wave: int):
+        """Fence ONE window's device output.  On a per-host worker the
+        ``device.scan`` span measures that host's own device time — not
+        another host's serialized wait, which is what the old in-order
+        fence loop silently recorded for every window after the first."""
+        with self.tracer.span("device.scan", host=w.host, rows=w.rows):
+            if self._sync_hook is not None:
+                self._sync_hook("fence", w.host, wave)
+            self._fence(x, host=w.host, wave=wave)
+
     def _retire_placed(self, st: "_DrainState", results, xs, invs,
                        placement: WavePlacement, parts_h, wave: int = -1):
-        """Fence on every window, unsort compacted windows back to pack
-        order, strip per-window padding, scatter rows to requests."""
-        for w, x in zip(placement.windows, xs):
-            with self.tracer.span("device.scan", host=w.host, rows=w.rows):
-                self._fence(x, host=w.host, wave=wave)
+        """Fence every window — on the per-host workers when the pool is
+        live, so windows fence as they complete and a straggling host
+        never serializes the others — then unsort compacted windows back
+        to pack order, strip per-window padding, and scatter rows to
+        requests in window order (delivery stays deterministic)."""
+        pool = self._ensure_pool()
+        wins = placement.windows
+        if pool is not None and all(w.host in pool.hosts for w in wins):
+            self._collect([pool.submit(w.host, self._fence_window, w, x,
+                                       wave)
+                           for w, x in zip(wins, xs)])
+        else:
+            for w, x in zip(wins, xs):
+                self._fence_window(w, x, wave)
         for w, x, inv in zip(placement.windows, xs, invs):
             arr = np.asarray(x)
             if inv is not None:

@@ -243,10 +243,16 @@ class WavePlacement:
             off += w.rows
 
     @classmethod
-    def plan(cls, host_rows, granules) -> "WavePlacement":
+    def plan(cls, host_rows, granules, pad_to=None) -> "WavePlacement":
         """Place the rows each host packed: host h's window holds its own
         ``host_rows[h]`` rows padded up to ``granules[h]``; hosts with no
-        rows contribute no window (and no padding)."""
+        rows contribute no window (and no padding).  ``pad_to`` (optional,
+        per-host row counts) pads each NON-EMPTY window further, up to
+        ``pad_to[h]`` — the drain uses it to give a tail wave the same
+        window geometry as the full waves before it, so the tail reuses
+        their compiled executables instead of compiling its own (padding
+        rows duplicate a real row and are discarded at scatter, so the
+        promotion is invisible in D_syn)."""
         if len(host_rows) != len(granules):
             raise ValueError(f"{len(host_rows)} hosts vs "
                              f"{len(granules)} granules")
@@ -255,6 +261,8 @@ class WavePlacement:
             if n == 0:
                 continue
             rows = -(-n // g) * g
+            if pad_to is not None:
+                rows = max(rows, pad_to[h])
             windows.append(HostWindow(host=h, offset=off, rows=rows, real=n))
             off += rows
         return cls(windows=tuple(windows))

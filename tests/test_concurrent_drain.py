@@ -1,0 +1,383 @@
+"""The concurrent placed drain (``workers=True``, the engine default).
+
+The tentpole contract: per-host workers + dispatch-before-fence are a
+pure SCHEDULING change.  Row noise is keyed by request identity, so the
+concurrent drain is BIT-IDENTICAL to the sequential window loop
+(``workers=False``, the oracle here) and to the plain single-host
+ragged engine — across H ∈ {2, 4}, every packing mode, random fault
+schedules, and FORCED thread interleavings (a barrier in the engine's
+``_sync_hook`` test seam holds every host's worker at the same site
+before any proceeds).  On top of that:
+
+* per-host admission (``run(host_polls={h: hook})``): every live host's
+  hook runs at each wave boundary, a dead host's hook is dropped, and
+  the streamed outputs match the snapshot submission bit for bit;
+* aborted-wave bookkeeping: a wave killed by ``HostLostError`` burns no
+  wave index and freezes no ``pack`` stamp (regression for the
+  first-stamp-wins tracer bug);
+* overlap is real: at H=2 the two hosts' ``device.scan`` spans overlap
+  in wall-clock time.
+"""
+import threading
+
+import jax
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ImportError:            # pragma: no cover - CI installs it
+    from _hypothesis_fallback import given, settings, st
+
+from repro.configs.oscar import DiffusionConfig
+from repro.diffusion.dit import init_dit
+from repro.diffusion.schedule import make_schedule
+from repro.obs import FakeClock, Tracer
+from repro.serve import FaultInjector, SynthesisEngine, SynthesisService
+
+DC = DiffusionConfig(d_model=32, num_layers=1, num_heads=2,
+                     sample_timesteps=3, train_timesteps=16)
+H = 8
+
+_DM = None
+
+
+def _dm():
+    global _DM
+    if _DM is None:
+        key = jax.random.PRNGKey(0)
+        params = init_dit(key, DC, H, 3)
+        leaves, treedef = jax.tree.flatten(params)
+        keys = jax.random.split(jax.random.PRNGKey(1), len(leaves))
+        params = jax.tree.unflatten(treedef, [
+            a + 0.05 * jax.random.normal(k, a.shape, a.dtype)
+            for a, k in zip(leaves, keys)])
+        _DM = params, make_schedule(DC.train_timesteps, DC.schedule)
+    return _DM
+
+
+def _enc(seed):
+    e = np.random.default_rng(seed).normal(size=(DC.cond_dim,))
+    return (e / np.linalg.norm(e)).astype(np.float32)
+
+
+def _engine(**kw):
+    params, sched = _dm()
+    kw.setdefault("image_size", H)
+    kw.setdefault("wave_size", 8)
+    kw.setdefault("granule", 1)
+    kw.setdefault("cache", False)
+    return SynthesisEngine(params, DC, sched, **kw)
+
+
+def _mixed_requests(seed):
+    rng = np.random.default_rng(seed)
+    subs = []
+    for i in range(int(rng.integers(2, 6))):
+        subs.append((_enc(100 * seed + i), int(rng.integers(0, 3)),
+                     int(rng.integers(1, 6)),
+                     float(rng.choice([1.5, 4.0, 7.5])),
+                     int(rng.integers(1, 4))))
+    return subs
+
+
+def _run(subs, key, **kw):
+    eng = _engine(**kw)
+    rids = [eng.submit(e, c, n, guidance=g, num_steps=s)
+            for e, c, n, g, s in subs]
+    out = eng.run(key)
+    assert sorted(out) == sorted(rids)
+    return [out[r] for r in rids], eng
+
+
+def _schedule_for(seed, hosts):
+    rng = np.random.default_rng(1000 + seed)
+    sched = []
+    for hkill in rng.permutation(hosts)[:int(rng.integers(1, hosts))]:
+        sched.append(("window", int(hkill), int(rng.integers(0, 3))))
+    for wave in rng.permutation(4)[:int(rng.integers(0, 3))]:
+        sched.append(("scan", None, int(wave)))
+    return sched
+
+
+# ---------------------------------------------------------------------------
+# bit-identity: workers vs the sequential oracle, fuzzed
+# ---------------------------------------------------------------------------
+
+@settings(deadline=None, max_examples=6)
+@given(seed=st.integers(min_value=0, max_value=5),
+       hosts=st.sampled_from([2, 4]),
+       mode=st.sampled_from(["grouped", "ragged", "compacted"]))
+def test_fuzz_concurrent_bit_identical_to_sequential(seed, hosts, mode):
+    """workers=True vs workers=False vs the single-host ragged oracle:
+    same requests, same key, same fault schedule → bit-identical D_syn
+    and zero lost requests, with per-host sums == globals."""
+    kw = {"grouped": {}, "ragged": {"ragged": True},
+          "compacted": {"compaction": "full"}}[mode]
+    subs = _mixed_requests(seed)
+    key = jax.random.PRNGKey(seed)
+    oracle, _ = _run(subs, key, ragged=True, workers=False)
+    schedule = _schedule_for(seed, hosts)
+    seq, _ = _run(subs, key, hosts=hosts, workers=False,
+                  faults=FaultInjector(schedule=list(schedule)), **kw)
+    conc, eng = _run(subs, key, hosts=hosts, workers=True,
+                     faults=FaultInjector(schedule=list(schedule)), **kw)
+    for a, b, c in zip(oracle, seq, conc):
+        assert np.array_equal(a, c)
+        assert np.array_equal(b, c)
+    s = eng.stats
+    assert sum(p["rows"] + p["padded"] for p in s["per_host"]) \
+        == s["scheduled_rows"]
+    assert sum(p["rows"] for p in s["per_host"]) == s["generated"]
+    assert s["scheduled_rows"] == s["generated"] + s["padded"]
+
+
+@settings(deadline=None, max_examples=4)
+@given(seed=st.integers(min_value=0, max_value=3),
+       site=st.sampled_from(["dispatch", "fence"]))
+def test_fuzz_forced_interleavings_bit_identical(seed, site):
+    """The ``_sync_hook`` seam holds EVERY host's worker at one site
+    (dispatch or fence) until all arrive — the worst-case interleaving,
+    every window in flight simultaneously — and D_syn still matches the
+    sequential oracle bit for bit."""
+    hosts = 2
+    subs = _mixed_requests(seed)
+    key = jax.random.PRNGKey(seed)
+    seq, _ = _run(subs, key, hosts=hosts, workers=False, ragged=True)
+
+    eng = _engine(hosts=hosts, workers=True, ragged=True)
+    barrier = threading.Barrier(hosts, timeout=5.0)
+
+    def hook(s, host, wave):
+        if s == site:
+            try:
+                barrier.wait()
+            except threading.BrokenBarrierError:
+                pass             # a single-window wave: no partner comes
+
+    eng._sync_hook = hook
+    rids = [eng.submit(e, c, n, guidance=g, num_steps=st_)
+            for e, c, n, g, st_ in subs]
+    out = eng.run(key)
+    for r, b in zip(rids, seq):
+        assert np.array_equal(out[r], b)
+
+
+def test_concurrent_matches_sequential_with_service_and_store(tmp_path):
+    """A warm store written by the concurrent drain serves a cold
+    sequential engine (and vice versa) with zero sampler calls."""
+    from repro.serve import SynthesisStore
+    subs = [(_enc(70 + i), i % 3, 4, 3.0, 2) for i in range(3)]
+    store_dir = tmp_path / "dsyn"
+    warm = SynthesisService(_engine(hosts=2, workers=True, ragged=True,
+                                    cache=True,
+                                    store=SynthesisStore(store_dir)))
+    outs = warm.gather([warm.submit(e, c, n, guidance=g, num_steps=s)
+                        for e, c, n, g, s in subs], jax.random.PRNGKey(3))
+    cold = SynthesisService(_engine(workers=False, ragged=True, cache=True,
+                                    store=SynthesisStore(store_dir)))
+    outs2 = cold.gather([cold.submit(e, c, n, guidance=g, num_steps=s)
+                         for e, c, n, g, s in subs], jax.random.PRNGKey(9))
+    assert cold.stats["waves"] == 0 and cold.stats["generated"] == 0
+    for a, b in zip(outs, outs2):
+        assert np.array_equal(a, b)
+
+
+# ---------------------------------------------------------------------------
+# overlap: the concurrency is real, not just correct
+# ---------------------------------------------------------------------------
+
+def test_device_scan_spans_overlap_at_two_hosts():
+    """At H=2 the hosts' ``device.scan`` spans overlap in wall-clock
+    time — the dispatch-before-fence pipeline actually runs windows
+    concurrently.  A barrier at the fence site makes the overlap
+    deterministic: both spans are open before either fence proceeds."""
+    tracer = Tracer()                       # real perf_counter clock
+    eng = _engine(hosts=2, workers=True, ragged=True, tracer=tracer)
+    barrier = threading.Barrier(2, timeout=5.0)
+
+    def hook(site, host, wave):
+        if site == "fence":
+            try:
+                barrier.wait()
+            except threading.BrokenBarrierError:
+                pass
+    eng._sync_hook = hook
+    for i in range(4):
+        eng.submit(_enc(40 + i), i % 3, 4, guidance=3.0, num_steps=3)
+    eng.run(jax.random.PRNGKey(7))
+    scans = [s for s in tracer.spans if s.name == "device.scan"]
+    by_host = {h: [s for s in scans if s.attrs.get("host") == h]
+               for h in (0, 1)}
+    assert by_host[0] and by_host[1]
+    overlaps = any(a.start < b.end and b.start < a.end
+                   for a in by_host[0] for b in by_host[1])
+    assert overlaps, "host windows fenced serially — no overlap"
+
+
+def test_sequential_oracle_keeps_no_pool():
+    """workers=False (and H=1) never builds a pool — the oracle truly
+    is the sequential window loop."""
+    eng = _engine(hosts=2, workers=False, ragged=True)
+    eng.submit(_enc(1), 0, 4, guidance=3.0, num_steps=2)
+    eng.run(jax.random.PRNGKey(0))
+    assert eng._pool is None
+    one = _engine(hosts=1, workers=True, ragged=True)
+    one.submit(_enc(1), 0, 4, guidance=3.0, num_steps=2)
+    one.run(jax.random.PRNGKey(0))
+    assert one._pool is None
+
+
+# ---------------------------------------------------------------------------
+# aborted-wave bookkeeping (trace regression)
+# ---------------------------------------------------------------------------
+
+def test_aborted_wave_burns_no_index_and_no_pack_stamp():
+    """A wave killed by ``HostLostError`` must not advance the wave
+    counter nor freeze its ``pack`` stamp: the committed pack time is
+    the SUCCESSFUL repack's, trace ``wave=`` ids agree with the
+    ``waves`` counter, and pack → dispatch intervals exclude failover
+    repack latency."""
+    clock = FakeClock(tick=1.0)
+    tracer = Tracer(clock=clock)
+    eng = _engine(hosts=2, ragged=True, tracer=tracer,
+                  faults=FaultInjector(schedule=[("window", 0, 0)]))
+    rid = eng.submit(_enc(9), 0, 4, guidance=3.0, num_steps=2)
+    out = eng.run(jax.random.PRNGKey(5))
+    assert out[rid].shape[0] == 4
+    # the aborted attempt did not advance the counter: one successful
+    # wave → waves == 1, and every traced wave id is < waves
+    assert eng.stats["waves"] == 1
+    wave_ids = {s.attrs["wave"] for s in tracer.spans
+                if s.name in ("window.pack", "window.dispatch")
+                and "wave" in s.attrs}
+    assert wave_ids == {0}
+    # the pack stamp postdates the host-loss marker: it is the repack's
+    # time, not the aborted first attempt's (first-stamp-wins would have
+    # frozen the earlier one had it been committed)
+    lost = [s for s in tracer.spans if s.name == "host.failed"]
+    assert len(lost) == 1
+    stamps = tracer.lifecycle[rid]
+    assert stamps["pack"] > lost[0].start
+    assert stamps["pack"] <= stamps["dispatch"]
+
+
+def test_aborted_wave_not_counted_in_stats():
+    """Rows from an aborted wave are not double-counted: generated is
+    exactly the real rows requested, once."""
+    eng = _engine(hosts=2, ragged=True,
+                  faults=FaultInjector(schedule=[("window", 1, 0)]))
+    rids = [eng.submit(_enc(60 + i), i % 3, 3, guidance=3.0, num_steps=2)
+            for i in range(2)]
+    out = eng.run(jax.random.PRNGKey(2))
+    assert sum(len(out[r]) for r in rids) == 6
+    assert eng.stats["generated"] == 6
+    assert eng.stats["scheduled_rows"] == \
+        eng.stats["generated"] + eng.stats["padded"]
+
+
+# ---------------------------------------------------------------------------
+# per-host streaming admission
+# ---------------------------------------------------------------------------
+
+def test_host_polls_stream_bit_identical_to_snapshot():
+    """Per-host arrival traces fed through ``host_polls`` produce the
+    same rows as submitting everything up front."""
+    subs = [(_enc(80 + i), i % 3, 3, 3.0, 2) for i in range(6)]
+    key = jax.random.PRNGKey(11)
+    snap, _ = _run(subs, key, hosts=2, ragged=True)
+
+    eng = _engine(hosts=2, ragged=True)
+    rids = {}
+    # route each request to its home host's trace, as a frontend would
+    traces = {0: [], 1: []}
+    probe = _engine(hosts=2, ragged=True)   # rid assignment preview
+    for i, sub in enumerate(subs):
+        traces[probe.topology.assign(i)].append((i, sub))
+
+    def hook_for(h):
+        def hook():
+            if not traces[h]:
+                return False
+            i, (e, c, n, g, s) = traces[h].pop(0)
+            rids[i] = eng.submit(e, c, n, guidance=g, num_steps=s)
+            return True
+        return hook
+
+    out = eng.run(key, host_polls={0: hook_for(0), 1: hook_for(1)})
+    assert eng.stats["streamed"] > 0
+    for i, want in enumerate(snap):
+        assert np.array_equal(out[rids[i]], want)
+
+
+def test_host_polls_keep_drain_alive_without_global_poll():
+    """host_polls alone (no global poll) keeps the drain alive while
+    any hook still has traffic, and implies streaming mode."""
+    eng = _engine(hosts=2, ragged=True)
+    trace = [(_enc(95 + i), i % 3, 2, 3.0, 2) for i in range(3)]
+    got = []
+
+    def hook():
+        if not trace:
+            return False
+        e, c, n, g, s = trace.pop(0)
+        got.append(eng.submit(e, c, n, guidance=g, num_steps=s))
+        return True
+
+    out = eng.run(jax.random.PRNGKey(4), host_polls={1: hook})
+    assert sorted(out) == sorted(got)
+    assert all(out[r].shape[0] == 2 for r in got)
+
+
+def test_host_polls_dropped_for_dead_host():
+    """A failed host's hook is dropped — never called again after the
+    loss — while survivors' hooks keep running."""
+    eng = _engine(hosts=2, ragged=True,
+                  faults=FaultInjector(schedule=[("window", 0, 1)]))
+    calls = {0: 0, 1: 0}
+    trace = [(_enc(120 + i), i % 3, 2, 3.0, 2) for i in range(4)]
+
+    def hook_for(h):
+        def hook():
+            calls[h] += 1
+            if h in eng.topology.failed:      # must never happen
+                raise AssertionError("dead host's hook was called")
+            if not trace:
+                return False
+            e, c, n, g, s = trace.pop(0)
+            eng.submit(e, c, n, guidance=g, num_steps=s)
+            return True
+        return hook
+
+    eng.submit(_enc(119), 0, 3, guidance=3.0, num_steps=2)
+    out = eng.run(jax.random.PRNGKey(6),
+                  host_polls={0: hook_for(0), 1: hook_for(1)})
+    assert eng.topology.failed == {0}
+    calls_at_loss = calls[0]
+    assert calls[1] > calls_at_loss or not trace  # survivor kept polling
+    assert len(out) >= 1
+
+
+def test_host_polls_validation():
+    eng = _engine(ragged=True)              # no topology
+    with pytest.raises(ValueError, match="topology"):
+        eng.run(jax.random.PRNGKey(0), host_polls={0: lambda: False})
+    eng2 = _engine(hosts=2, ragged=True)
+    with pytest.raises(ValueError, match="out of range"):
+        eng2.run(jax.random.PRNGKey(0), host_polls={7: lambda: False})
+
+
+def test_service_forwards_host_polls():
+    svc = SynthesisService(_engine(hosts=2, ragged=True, cache=True))
+    fed = []
+
+    def hook():
+        if fed:
+            return False
+        fed.append(svc.submit(_enc(130), 0, 3, guidance=3.0, num_steps=2))
+        return True
+
+    svc.drain(jax.random.PRNGKey(1), host_polls={0: hook})
+    assert fed and fed[0].done()
+    assert fed[0].result().shape[0] == 3

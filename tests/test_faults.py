@@ -319,9 +319,8 @@ def test_fuzz_failover_bit_identical_to_fault_free(seed, hosts, mode):
     # survivor per-host sums still equal the globals
     s = eng.stats
     assert sum(p["rows"] + p["padded"] for p in s["per_host"]) \
-        == s["generated"]
-    assert sum(p["rows"] for p in s["per_host"]) \
-        == s["generated"] - s["padded"]
+        == s["scheduled_rows"]
+    assert sum(p["rows"] for p in s["per_host"]) == s["generated"]
     if fired_kills:
         for f in fired_kills:
             assert s["per_host"][f[1]]["rows"] <= s["generated"]
@@ -331,18 +330,30 @@ def test_fuzz_failover_bit_identical_to_fault_free(seed, hosts, mode):
 
 def test_failover_with_seeded_probability_faults():
     """Probability-triggered faults (seeded, no global RNG) recover the
-    same way — and two identical engines see identical fault sequences,
-    so the whole degraded run is reproducible end to end."""
+    same way.  The sequential drain reproduces the whole degraded run —
+    which faults fired, in order — end to end.  Concurrent workers keep
+    every per-check draw identity-keyed, but the ``max_faults`` cap is
+    claimed by arrival order, so two runs may cap DIFFERENT candidate
+    faults; the served bytes are bit-identical either way (failover
+    requeues, never resamples)."""
     subs = _mixed_requests(11)
     key = jax.random.PRNGKey(11)
     oracle, _ = _run(subs, key, ragged=True)
     outs = []
     for _ in range(2):
-        res, eng = _run(subs, key, hosts=2, ragged=True,
+        res, eng = _run(subs, key, hosts=2, ragged=True, workers=False,
                         faults=FaultInjector(p=0.2, seed=5, max_faults=1))
         outs.append((res, tuple(eng.faults.fired)))
     assert outs[0][1] == outs[1][1]
+    assert outs[0][1]                    # the seed actually fired a fault
     for a, b in zip(oracle, outs[0][0]):
+        assert np.array_equal(a, b)
+    # concurrent drain: the fired identity may vary with interleaving,
+    # but the cap holds and the output is still the fault-free oracle's
+    res_w, eng_w = _run(subs, key, hosts=2, ragged=True,
+                        faults=FaultInjector(p=0.2, seed=5, max_faults=1))
+    assert len(eng_w.faults.fired) <= 1
+    for a, b in zip(oracle, res_w):
         assert np.array_equal(a, b)
 
 

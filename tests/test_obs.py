@@ -231,11 +231,13 @@ def test_stats_view_backward_compatible(dm, kw):
         eng.submit(_enc(i), i % 3, c)
     eng.run(jax.random.PRNGKey(1))
     s = eng.stats
-    for key in ("requests", "waves", "generated", "padded", "cache_hits",
+    for key in ("requests", "waves", "generated", "scheduled_rows",
+                "padded", "cache_hits",
                 "store_hits", "streamed", "merged_waves", "compiled_shapes",
                 "segments", "row_iters_scheduled", "row_iters_active"):
         assert key in s, key
-    assert s["requests"] == 4 and s["generated"] >= 16
+    assert s["requests"] == 4 and s["generated"] == 16
+    assert s["scheduled_rows"] == s["generated"] + s["padded"]
     if "hosts" in kw:
         assert s["hosts"] == kw["hosts"]
         assert len(s["per_host"]) == kw["hosts"]
@@ -244,7 +246,8 @@ def test_stats_view_backward_compatible(dm, kw):
                               "row_iters_scheduled", "row_iters_active",
                               "queue_depth_at_start"}
         assert sum(p["rows"] + p["padded"] for p in s["per_host"]) \
-            == s["generated"]
+            == s["scheduled_rows"]
+        assert sum(p["rows"] for p in s["per_host"]) == s["generated"]
 
 
 def test_engine_lifecycle_stamps_ordered(dm):
@@ -268,3 +271,68 @@ def test_service_latency_histograms(dm):
     svc.gather(futs)                           # resolved: no double count
     assert eng.metrics.get("request.e2e_latency", default=None)["count"] == 3
     assert "latency" in svc.stats
+
+
+# ---------------------------------------------------------------------------
+# thread-safety: drain workers hammer one registry / tracer
+# ---------------------------------------------------------------------------
+
+def test_metrics_and_tracer_hammer_no_lost_records():
+    """N threads × M ops against one MetricsRegistry and one enabled
+    Tracer: every increment, span, and stamp lands — the per-host drain
+    workers mutate these concurrently, and a torn buffer append or a
+    lost counter bump would silently corrupt stats."""
+    import threading
+
+    m = MetricsRegistry()
+    tr = Tracer(clock=FakeClock(tick=0.001))
+    N, M = 8, 300
+    start = threading.Barrier(N)
+
+    def worker(tid):
+        start.wait()
+        for i in range(M):
+            m.inc("hits")
+            m.inc("host.rows", 2, host=tid)
+            m.observe("lat", float(i % 7))
+            with tr.span("work", host=tid, i=i):
+                tr.stamp(tid * M + i, "admit")
+            tr.stamp(tid * M + i, "deliver")
+
+    threads = [threading.Thread(target=worker, args=(t,)) for t in range(N)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert m.get("hits") == N * M
+    for tid in range(N):
+        assert m.get("host.rows", host=tid) == 2 * M
+    assert m.get("lat", default=None)["count"] == N * M
+    spans = [s for s in tr.spans if s.name == "work"]
+    assert len(spans) == N * M
+    assert len(tr.lifecycle) == N * M
+    assert all(set(st) == {"admit", "deliver"}
+               for st in tr.lifecycle.values())
+    # per-thread nesting: every span opened at depth 0 of its own stack
+    assert all(s.depth == 0 for s in spans)
+
+
+def test_disabled_tracer_stays_nullspan_under_threads():
+    """The disabled fast path records nothing and allocates nothing:
+    every thread gets the one shared NULL_SPAN and no clock is read."""
+    import threading
+
+    reads = []
+    tr = Tracer(clock=lambda: reads.append(1) or 0.0, enabled=False)
+
+    def worker():
+        for i in range(200):
+            assert tr.span("x", i=i) is NULL_SPAN
+            tr.stamp(i, "admit")
+
+    threads = [threading.Thread(target=worker) for _ in range(4)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert not reads and not tr.spans and not tr.lifecycle

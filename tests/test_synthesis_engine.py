@@ -60,7 +60,8 @@ def test_tail_wave_padded_to_granule(dm):
     eng = _engine(dm)
     eng.submit(_enc(0), 0, 5)
     eng.run(jax.random.PRNGKey(1))
-    assert eng.stats["generated"] == 8 and eng.stats["padded"] == 3
+    assert eng.stats["generated"] == 5 and eng.stats["padded"] == 3
+    assert eng.stats["scheduled_rows"] == 8
 
 
 def test_single_full_wave_matches_direct_sampler(dm):
@@ -106,7 +107,8 @@ def test_same_key_requests_in_one_drain_generate_once(dm):
     ra = eng.submit(enc, 0, 3)
     rb = eng.submit(enc, 0, 5)
     out = eng.run(jax.random.PRNGKey(0))
-    assert eng.stats["generated"] == 8          # union (5) + granule pad
+    assert eng.stats["generated"] == 5          # the union, once
+    assert eng.stats["scheduled_rows"] == 8     # union (5) + granule pad
     assert eng.stats["cache_hits"] == 3         # ra's rows shared with rb
     assert np.array_equal(out[ra], out[rb][:3])
     assert out[rb].shape[0] == 5
@@ -166,7 +168,8 @@ def test_wave_planner_count_below_granule(dm):
     assert eng._plan_waves(3) == (1, 8)
     eng.submit(_enc(20), 0, 3)
     eng.run(jax.random.PRNGKey(0))
-    assert eng.stats["generated"] == 8 and eng.stats["padded"] == 5
+    assert eng.stats["generated"] == 3 and eng.stats["padded"] == 5
+    assert eng.stats["scheduled_rows"] == 8
 
 
 def test_wave_planner_exact_wave_multiples(dm):
@@ -196,7 +199,8 @@ def test_wave_planner_rounded_granule(dm):
     eng.run(jax.random.PRNGKey(0))
     # 12 rows → 2 near-uniform waves of ceil(6/5)*5 = 10 rows
     assert eng.stats["waves"] == 2
-    assert eng.stats["generated"] == 20 and eng.stats["padded"] == 8
+    assert eng.stats["generated"] == 12 and eng.stats["padded"] == 8
+    assert eng.stats["scheduled_rows"] == 20
 
 
 def test_two_dim_encoding_one_request_distinct_rows(dm):

@@ -219,25 +219,37 @@ def test_multi_host_drives_row_window_kernel_path(monkeypatch):
     """Acceptance: under any H>1 topology the production cfg_fuse path is
     the segment-offset row-window variant — every window reads the
     wave-resident scalar table at ``row_offset = window.offset``, and at
-    least one window sits at a non-zero offset."""
+    least one window sits at a non-zero offset.  The offset is a TRACED
+    operand of the window executable (so hosts share compiles): the
+    kernel-level spy sees a tracer, and the concrete offsets are read at
+    the jit boundary instead."""
+    import repro.serve.synthesis as synth_mod
     from repro.kernels.cfg_fuse import ref as cfg_ref
-    offsets = []
+    windowed_hits = []
     real = cfg_ref.cfg_update_rowwise_windowed
 
     def spy(x, eps_c, eps_u, s, ab_t, ab_prev, noise, active,
             row_offset=0, eta=1.0):
-        offsets.append(int(row_offset))
+        windowed_hits.append(row_offset)
         return real(x, eps_c, eps_u, s, ab_t, ab_prev, noise, active,
                     row_offset=row_offset, eta=eta)
 
     monkeypatch.setattr(cfg_ref, "cfg_update_rowwise_windowed", spy)
+    offsets = []
+    real_seg = synth_mod._window_segment
+
+    def seg_spy(*a, **kw):
+        offsets.append(int(kw["row_offset"]))
+        return real_seg(*a, **kw)
+
+    monkeypatch.setattr(synth_mod, "_window_segment", seg_spy)
     # geometry unique to this test (wave_size 12, granule 3): the jitted
     # window segments must TRACE here, not hit another test's executable
     subs = [(_enc(900), 0, 5, 7.5, 3), (_enc(901), 1, 4, 1.5, 2),
             (_enc(902), 2, 3, 4.0, 3)]
     outs, eng = _run(subs, jax.random.PRNGKey(77), hosts=2, ragged=True,
                      wave_size=12, granule=3)
-    assert offsets, "H=2 drain never hit the row-window cfg_fuse path"
+    assert windowed_hits, "H=2 drain never hit the row-window cfg_fuse path"
     assert any(o > 0 for o in offsets), \
         f"all windows sampled at offset 0: {offsets}"
     oracle, _ = _run(subs, jax.random.PRNGKey(77), ragged=True,
@@ -250,17 +262,15 @@ def test_compacted_windows_drive_row_window_kernel_path(monkeypatch):
     """Compaction composes with placement: each host's activation-sorted
     window epoch-plans locally, and its SEGMENTS still read the wave
     table through their window's non-zero row offset."""
-    from repro.kernels.cfg_fuse import ref as cfg_ref
+    import repro.serve.synthesis as synth_mod
     offsets = []
-    real = cfg_ref.cfg_update_rowwise_windowed
+    real_seg = synth_mod._window_segment
 
-    def spy(x, eps_c, eps_u, s, ab_t, ab_prev, noise, active,
-            row_offset=0, eta=1.0):
-        offsets.append(int(row_offset))
-        return real(x, eps_c, eps_u, s, ab_t, ab_prev, noise, active,
-                    row_offset=row_offset, eta=eta)
+    def seg_spy(*a, **kw):
+        offsets.append(int(kw["row_offset"]))
+        return real_seg(*a, **kw)
 
-    monkeypatch.setattr(cfg_ref, "cfg_update_rowwise_windowed", spy)
+    monkeypatch.setattr(synth_mod, "_window_segment", seg_spy)
     subs = [(_enc(910), 0, 5, 7.5, 3), (_enc(911), 1, 5, 1.5, 1),
             (_enc(912), 2, 4, 4.0, 2)]
     outs, eng = _run(subs, jax.random.PRNGKey(78), hosts=2,
@@ -319,7 +329,8 @@ def test_per_host_stats_sum_to_global_counters(mode):
     s = svc.stats
     assert s["hosts"] == 2 and len(s["per_host"]) == 2
     per = s["per_host"]
-    assert sum(p["rows"] + p["padded"] for p in per) == s["generated"]
+    assert sum(p["rows"] + p["padded"] for p in per) == s["scheduled_rows"]
+    assert sum(p["rows"] for p in per) == s["generated"]
     assert sum(p["padded"] for p in per) == s["padded"]
     assert sum(p["row_iters_scheduled"] for p in per) \
         == s["row_iters_scheduled"]
@@ -375,7 +386,7 @@ def test_reapplied_topology_keeps_per_host_stats():
     SynthesisService(eng, hosts=2)          # and a service wrap
     assert [p["rows"] for p in eng.stats["per_host"]] == rows_before
     assert sum(p["rows"] + p["padded"] for p in eng.stats["per_host"]) \
-        == eng.stats["generated"]
+        == eng.stats["scheduled_rows"]
 
 
 def test_mesh_backed_topology_places_windows_on_host_submesh():
