@@ -34,6 +34,15 @@ categories, k samples per (client, category) encoding.  Five runs:
   of per-row steps with 0 padded rows, and D_syn must be bit-identical
   to the one-shot ragged run — both ASSERTED, gating CI's smoke run.
 
+* ``mixed``        — a mixed-GUIDANCE-MODE workload: the cfg sweep next
+  to per-category uploaded classifiers (Eq. 4 rows) and unconditional
+  draws, grouped vs the MERGED scheduler (all three modes in the same
+  ragged waves; uncond as s=0 null-cond rows).  ASSERTS — gating CI's
+  smoke run — zero legacy clf/uncond wave groups, strictly fewer padded
+  rows and compiled shapes than grouped, 0 padded rows under full
+  compaction, and D_syn BIT-IDENTICAL across compaction, host counts
+  (1/2/4), and a mid-drain host kill.
+
 * ``multihost``    — the same mixed workload drained over ``--hosts``
   SIMULATED HOSTS through the topology/placement layer
   (``serve/topology.py``): per-host ingress queues, contiguous per-host
@@ -67,9 +76,10 @@ categories, k samples per (client, category) encoding.  Five runs:
   out.json`` writes the Perfetto-loadable timeline (+ metrics dump).
 
 Writes ``results/BENCH_synthesis.json`` via the shared harness
-(``--mode ragged`` / ``--mode compacted`` / ``--mode multihost`` /
-``--mode failover`` / ``--mode fused`` / ``--mode trace`` re-run only
-their comparison and merge it into an existing results file).
+(``--mode ragged`` / ``--mode compacted`` / ``--mode mixed`` /
+``--mode multihost`` / ``--mode failover`` / ``--mode fused`` /
+``--mode trace`` re-run only their comparison and merge it into an
+existing results file).
 """
 from __future__ import annotations
 
@@ -251,6 +261,151 @@ def _mixed_reqs(enc, steps):
     return [(r, c, *combos[i % len(combos)])
             for i, (r, c) in enumerate((r, c) for r in range(R)
                                        for c in range(C))]
+
+
+# module-level classifier closures: stable identity keeps the merged
+# engines' classifier-ensemble jit caches shared across comparison runs
+def _clf_center(x, labels):
+    return -jnp.sum(x ** 2, axis=(1, 2, 3))
+
+
+def _clf_pull(x, labels):
+    pull = labels.astype(x.dtype)[:, None, None, None]
+    return -jnp.sum((x - 0.1 * pull) ** 2, axis=(1, 2, 3))
+
+
+_CLFS = (_clf_center, _clf_pull)
+
+
+def _bench_mixed_guidance(params, dc, sched, enc, *, steps, k, hosts,
+                          preset):
+    """Grouped vs MERGED on a mixed-GUIDANCE-MODE workload: the cfg
+    (guidance, steps) sweep next to per-category uploaded classifiers
+    (Eq. 4 ε̂-correction rows) and unconditional draws.  Grouped packs
+    one wave group per mode×combo; the merged scheduler routes all three
+    modes into the SAME ragged waves (uncond as s=0 null-cond rows, clf
+    rows batching their classifier over the wave).  ASSERTS — gating
+    CI's smoke run — that the merged drain dispatches ZERO legacy
+    grouped clf/uncond waves, pads and compiles strictly less than
+    grouped, that full compaction pads exactly 0, and that D_syn is
+    BIT-IDENTICAL across compaction, host counts, and a mid-drain host
+    kill.  Wall-clock is gated merged < grouped at the paper preset
+    (smoke/quick runs are compile-dominated)."""
+    R, C = enc.shape[:2]
+    half = max(steps // 2, 2)
+    cfg_reqs = _mixed_reqs(enc, steps)
+    clf_reqs = [(c, _CLFS[c % len(_CLFS)], steps if c % 2 else half)
+                for c in range(C)]
+    unc_reqs = [(c, half if c % 2 else steps) for c in range(min(C, 4))]
+    true_row_iters = (sum(k * s for _, _, _, s in cfg_reqs)
+                      + sum(k * s for _, _, s in clf_reqs)
+                      + sum(k * s for _, s in unc_reqs))
+
+    def submit_all(eng):
+        rids = [eng.submit(enc[r, c], c, k, guidance=g, num_steps=s)
+                for r, c, g, s in cfg_reqs]
+        rids += [eng.submit_classifier_guided(fn, c, k, guidance=1.0,
+                                              num_steps=s, group=("clf", c))
+                 for c, fn, s in clf_reqs]
+        rids += [eng.submit_unconditional(k, category=c, num_steps=s)
+                 for c, s in unc_reqs]
+        return rids
+
+    def run_mode(**kw):
+        eng = SynthesisEngine(params, dc, sched, image_size=16,
+                              cache=False, **kw)
+        rids = submit_all(eng)
+        wall, out = _timed(eng.run, jax.random.PRNGKey(3))
+        assert all(out[rid].shape[0] == k for rid in rids)
+        return wall, eng, [out[rid] for rid in rids]
+
+    t_grp, eng_grp, out_grp = run_mode(ragged=False)
+    t_mrg, eng_mrg, out_mrg = run_mode(ragged=True)
+    st_grp, st_mrg = dict(eng_grp.stats), dict(eng_mrg.stats)
+    legacy = sum(1 for sh in eng_mrg.traj_shapes
+                 if sh[0] in ("clf", "uncond"))
+    res = {"cfg_requests": len(cfg_reqs), "clf_requests": len(clf_reqs),
+           "uncond_requests": len(unc_reqs),
+           "grouped_s": t_grp, "merged_s": t_mrg,
+           "grouped_padded": st_grp["padded"],
+           "merged_padded": st_mrg["padded"],
+           "grouped_compiled": st_grp["compiled_shapes"],
+           "merged_compiled": st_mrg["compiled_shapes"],
+           "grouped_waves": st_grp["waves"],
+           "merged_waves": st_mrg["merged_waves"],
+           "legacy_mode_waves": legacy,
+           "merged_row_iters_active": st_mrg["row_iters_active"]}
+    # the scheduler-merge gate: clf/uncond must never fall back to their
+    # legacy single-mode wave groups once the merged queue serves them
+    assert legacy == 0, (
+        f"{legacy} legacy clf/uncond wave shapes dispatched by the merged "
+        f"scheduler: {sorted(eng_mrg.traj_shapes)}")
+    assert res["merged_row_iters_active"] == true_row_iters, (
+        f"merged active row_iters {res['merged_row_iters_active']} != true "
+        f"sum {true_row_iters} — padding leaked into the useful-work stat")
+    assert res["merged_padded"] < res["grouped_padded"], (
+        f"merged padded {res['merged_padded']} rows >= grouped "
+        f"{res['grouped_padded']} — cross-mode wave fusion regressed")
+    assert res["merged_compiled"] < res["grouped_compiled"], (
+        f"merged compiled {res['merged_compiled']} shapes >= grouped "
+        f"{res['grouped_compiled']} — cross-mode wave fusion regressed")
+    if preset == "paper":
+        assert t_mrg < t_grp, (
+            f"merged wall {t_mrg:.2f}s >= grouped {t_grp:.2f}s at paper "
+            f"scale — the merged scheduler lost its throughput edge")
+
+    # full compaction on the merged queue: padding stays under the
+    # near-uniform planner's bound (< one granule per wave — exactly 0
+    # whenever the workload divides), and no schedule change moves a bit
+    t_cmp, eng_cmp, out_cmp = run_mode(ragged=True, compaction="full")
+    res["compacted_s"] = t_cmp
+    res["compacted_padded"] = eng_cmp.stats["padded"]
+    assert (res["compacted_padded"]
+            < eng_cmp.granule * max(eng_cmp.stats["waves"], 1)), (
+        f"compacted merged drain padded {res['compacted_padded']} rows "
+        f">= granule x waves — wave planning regressed")
+    assert all(np.array_equal(a, b) for a, b in zip(out_mrg, out_cmp)), (
+        "compacted merged D_syn differs from one-shot merged")
+
+    # placement invariance: the SAME mixed workload over 1/2/4 simulated
+    # hosts, plus one host killed mid-drain — every row bit-identical
+    for h in sorted({2, hosts, 4}):
+        _, eng_h, out_h = run_mode(ragged=True, hosts=h)
+        assert all(np.array_equal(a, b) for a, b in zip(out_mrg, out_h)), (
+            f"merged D_syn differs at hosts={h} — placement leaked into "
+            f"row values")
+        ph = eng_h.stats["per_host"]
+        assert sum(p["rows"] for p in ph) == eng_h.stats["generated"]
+    res["parity_hosts"] = sorted({1, 2, hosts, 4})
+    _, eng_f, out_f = run_mode(
+        ragged=True, hosts=2,
+        faults=FaultInjector(schedule=[("window", 0, 0)]))
+    assert eng_f.topology.failed == {0}, "injected host kill never landed"
+    assert all(np.array_equal(a, b) for a, b in zip(out_mrg, out_f)), (
+        "merged D_syn differs after a mid-drain host kill — failover "
+        "resampled instead of replacing")
+    res["failover_parity"] = True
+    return res
+
+
+def _print_mixed_guidance(mg: dict):
+    print_table(
+        "Merged guidance modes — cfg + classifier-guided + uncond, one "
+        "scheduler",
+        [{"mode": "grouped", "wall_s": mg["grouped_s"],
+          "padded": mg["grouped_padded"], "compiled": mg["grouped_compiled"],
+          "waves": mg["grouped_waves"]},
+         {"mode": "merged", "wall_s": mg["merged_s"],
+          "padded": mg["merged_padded"], "compiled": mg["merged_compiled"],
+          "waves": mg["merged_waves"]},
+         {"mode": "merged+compacted", "wall_s": mg["compacted_s"],
+          "padded": mg["compacted_padded"], "compiled": "-",
+          "waves": "-"}],
+        ["mode", "wall_s", "padded", "compiled", "waves"])
+    print(f"  {mg['cfg_requests']} cfg + {mg['clf_requests']} clf + "
+          f"{mg['uncond_requests']} uncond requests, "
+          f"{mg['legacy_mode_waves']} legacy mode waves, bit-identical "
+          f"across hosts {mg['parity_hosts']} + mid-drain host kill")
 
 
 def _bench_fused(params, dc, sched, enc, *, steps, k):
@@ -736,6 +891,16 @@ def run(preset: str = "paper", mode: str = "all", hosts: int = 2,
         _print_trace(tr)
         return _merge_result(preset, {"trace": tr})
 
+    if mode == "mixed":
+        # merged guidance-mode regression only (the CI mixed gate):
+        # zero legacy mode waves + padding/compile wins + bit-parity
+        # across hosts and a mid-drain kill, merged into an existing
+        # results file rather than clobbering the full run
+        mg = _bench_mixed_guidance(params, dc, sched, enc, steps=steps,
+                                   k=k, hosts=hosts, preset=preset)
+        _print_mixed_guidance(mg)
+        return _merge_result(preset, {"mixed_guidance": mg})
+
     if mode in ("ragged", "compacted"):
         # mixed-workload comparison only (the CI regression step): merge
         # into an existing results file rather than clobbering the full
@@ -778,6 +943,9 @@ def run(preset: str = "paper", mode: str = "all", hosts: int = 2,
                              store_dir=store_dir)
     ragged, compacted = _bench_mixed(params, dc, sched, enc, steps=steps,
                                      k=k, compacted=True)
+    mixed_guidance = _bench_mixed_guidance(params, dc, sched, enc,
+                                           steps=steps, k=k, hosts=hosts,
+                                           preset=preset)
     multihost = _bench_multihost(params, dc, sched, enc, steps=steps, k=k,
                                  hosts=hosts, preset=preset)
     failover = _bench_failover(params, dc, sched, enc, steps=steps, k=k,
@@ -799,6 +967,7 @@ def run(preset: str = "paper", mode: str = "all", hosts: int = 2,
     print_table("Synthesis throughput — engine waves vs seed chunk loops",
                 rows, ["path", "wall_s", "img_per_s"])
     _print_ragged(ragged, compacted)
+    _print_mixed_guidance(mixed_guidance)
     _print_multihost(multihost)
     _print_failover(failover)
     _print_fused(fused)
@@ -816,6 +985,7 @@ def run(preset: str = "paper", mode: str = "all", hosts: int = 2,
            "speedup_warm": t_seed / max(t_warm, 1e-9),
            "engine_stats": dict(eng.stats),
            "ragged": ragged, "compacted": compacted,
+           "mixed_guidance": mixed_guidance,
            "multihost": multihost, "failover": failover,
            "fused": fused, "trace": trace,
            **streaming, **store}
@@ -828,13 +998,18 @@ def main():
     ap.add_argument("--preset", default="paper",
                     choices=("smoke", "quick", "paper"))
     ap.add_argument("--mode", default="all",
-                    choices=("all", "ragged", "compacted", "multihost",
-                             "failover", "fused", "trace"),
+                    choices=("all", "ragged", "compacted", "mixed",
+                             "multihost", "failover", "fused", "trace"),
                     help="'ragged' runs only the grouped-vs-ragged mixed-"
                          "workload comparison and merges it into an "
                          "existing BENCH_synthesis.json; 'compacted' adds "
                          "the iteration-compacted scheduler with its "
                          "row_iters == true-sum and bit-parity asserts; "
+                         "'mixed' serves cfg + classifier-guided + uncond "
+                         "through the merged scheduler, gating zero "
+                         "legacy mode waves, padding/compile wins over "
+                         "grouped, and bit-parity across host counts and "
+                         "a mid-drain host kill; "
                          "'multihost' runs the topology-placed comparison "
                          "(--hosts simulated hosts) gating single-host "
                          "bit-parity and the per-host scheduled==active "

@@ -1,9 +1,13 @@
 """Paper Table II: OSCAR's synthetic data consumed by stronger classifier
 backbones (ResNet-18/50/101, VGG-16, DenseNet-121, ViT-B16 analogues).
-One synthesis pass (10 samples/category, as in the paper) reused by all."""
+One synthesis pass (10 samples/category, as in the paper) reused by all,
+routed through the MERGED ragged scheduler (``ragged=True`` — the one
+scheduler serving every guidance mode) and gated by a probe parity
+assert."""
 from __future__ import annotations
 
 import jax
+import numpy as np
 
 from benchmarks.common import acc_row, get_experiment, print_table, save_result
 from repro.core.classifier_train import evaluate_per_domain, fit_global
@@ -11,14 +15,41 @@ from repro.core.oscar import client_encodings, synthesize
 from repro.models.classifiers import CLASSIFIERS
 
 
+def _assert_merged_parity(exp, enc, present, k, key):
+    """The merged-scheduler gate: a probe encoding served from a MIXED
+    merged wave (its cfg row block packed next to unconditional rows)
+    must be bit-identical to the same request drained alone — fresh
+    rid-aligned engines, no cache or store in the loop."""
+    from repro.serve.synthesis import SynthesisEngine
+    r, c = (int(v) for v in np.argwhere(present)[0])
+
+    def fresh():
+        return SynthesisEngine(exp.dm_params, exp.ocfg.diffusion, exp.sched,
+                               image_size=exp.ocfg.data.image_size,
+                               channels=exp.ocfg.data.channels,
+                               ragged=True, cache=False)
+
+    mixed = fresh()
+    rid = mixed.submit(enc[r, c], c, k)
+    mixed.submit_unconditional(k, category=c)
+    out_mixed = mixed.run(key)[rid]
+    solo = fresh()
+    srid = solo.submit(enc[r, c], c, k)
+    out_solo = solo.run(key)[srid]
+    assert np.array_equal(out_mixed, out_solo), (
+        "merged-scheduler probe diverged: a cfg request packed into a "
+        "mixed wave no longer matches its isolated drain bit-for-bit")
+
+
 def run(preset: str = "paper", samples_per_category: int = 10):
     exp = get_experiment(preset)
     enc, present = client_encodings(exp.fm, exp.data)
     key = jax.random.PRNGKey(42)
+    _assert_merged_parity(exp, enc, present, samples_per_category, key)
     syn_x, syn_y = synthesize(key, exp.dm_params, exp.ocfg.diffusion,
                               exp.sched, enc, present, samples_per_category,
                               image_size=exp.ocfg.data.image_size,
-                              service=exp.service)
+                              service=exp.service, ragged=True)
     rows, raw = [], {}
     for name in CLASSIFIERS:
         gp = fit_global(jax.random.fold_in(key, hash(name) % 1000), name,

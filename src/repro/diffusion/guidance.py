@@ -418,6 +418,233 @@ def reverse_sample_window(params, dc: DiffusionConfig, x, y, row_keys,
 
 
 # ---------------------------------------------------------------------------
+# mixed mode: cfg + classifier-guided + uncond rows in ONE ragged wave
+# ---------------------------------------------------------------------------
+#
+# Every guidance strategy is the same ancestral loop differing only in how
+# ε̂ is produced, so a wave can carry all three per ROW: ``mode`` (B,)
+# selects the combine (0 = cfg pair-combine; uncond rides it as the s=0,
+# null-cond degenerate point; 1 = classifier ε̂-correction), ``clf_ids``
+# (B,) picks the row's classifier out of the wave's ensemble tuple, and
+# ``labels`` (B,) feeds the classifiers.  The classifier correction is
+# vectorised by evaluating each ensemble member's gradient over the FULL
+# batch and selecting per row — heterogeneous ensembles need no lax.switch
+# because the stack/select is itself shape-uniform.  Batching contract:
+# a classifier's per-row log p(y|x) must depend only on that row (true for
+# any per-sample net; batch-coupled ops like batchnorm would break the
+# row-independence that makes packing invisible in D_syn).  Because each
+# row's noise is keyed by request identity and all per-row arithmetic is
+# row-independent, a mixed wave is bit-exact against the same rows drained
+# in isolated single-mode waves — at any H, packing, or arrival order.
+
+
+def _cfg_update_mixed(x, eps_c, eps_u, mode, s, ab_t, ab_prev, noise, active,
+                      eta, use_pallas):
+    if use_pallas:
+        from repro.kernels.cfg_fuse import ops as cfg_ops
+        return cfg_ops.cfg_update_mixed(x, eps_c, eps_u, mode, s, ab_t,
+                                        ab_prev, noise, active, eta)
+    from repro.kernels.cfg_fuse import ref as cfg_ref
+    return cfg_ref.cfg_update_mixed(x, eps_c, eps_u, mode, s, ab_t, ab_prev,
+                                    noise, active, eta)
+
+
+def _cfg_update_mixed_window(x, eps_c, eps_u, mode, s, ab_t, ab_prev, noise,
+                             active, row_offset, eta, use_pallas):
+    if use_pallas:
+        from repro.kernels.cfg_fuse import ops as cfg_ops
+        return cfg_ops.cfg_update_mixed(x, eps_c, eps_u, mode, s, ab_t,
+                                        ab_prev, noise, active, eta,
+                                        row_offset=row_offset)
+    from repro.kernels.cfg_fuse import ref as cfg_ref
+    return cfg_ref.cfg_update_mixed_windowed(x, eps_c, eps_u, mode, s, ab_t,
+                                             ab_prev, noise, active,
+                                             row_offset=row_offset, eta=eta)
+
+
+def _clf_correct(eps_c, eps_u, x, ab_t, scale, labels, clf_ids, clf_fns,
+                 is_clf):
+    """Row-wise classifier ε̂-correction (Eq. 4) over a mixed wave.
+
+    Replaces ``eps_c`` on classifier rows with the stabilised FedCADO
+    update — ∇ log p(y|x̂₀) with per-sample gradient normalisation and
+    ε-scale magnitude, line-for-line the arithmetic of
+    ``ClassifierGuided.eps`` — leaving every other row's ε_c untouched
+    for the cfg combine.  Each ensemble member is evaluated over the
+    full batch and rows select their own via ``clf_ids``; a member's
+    per-row output depends only on that row (the batching contract), so
+    the values match the isolated per-classifier evaluation bit-exactly.
+    """
+    B = x.shape[0]
+    r = lambda v: jnp.asarray(v).reshape((-1,) + (1,) * (x.ndim - 1))
+    ab = r(ab_t)
+    sigma_t = jnp.sqrt(1.0 - ab)
+    x0 = jnp.clip((x - jnp.sqrt(1 - ab) * eps_u) / jnp.sqrt(ab), -1, 1)
+    enorm = jnp.sqrt(jnp.mean(eps_u ** 2, axis=(1, 2, 3), keepdims=True))
+    hats = []
+    for fn in clf_fns:
+        grad = jax.grad(lambda z, f=fn: jnp.sum(f(z, labels)))(x0)
+        gnorm = jnp.sqrt(jnp.sum(grad ** 2, axis=(1, 2, 3), keepdims=True))
+        grad = grad / jnp.maximum(gnorm, 1e-6)
+        hats.append(eps_u - r(scale) * sigma_t * grad * enorm)  # Eq. 4
+    eps_hat = jnp.stack(hats)[jnp.asarray(clf_ids), jnp.arange(B)]
+    return jnp.where(r(is_clf), eps_hat, eps_c)
+
+
+def _mixed_scan(params, dc: DiffusionConfig, x, y2, row_keys, guidance, mode,
+                clf_ids, labels, ts, ab_t, ab_prev, jloc, *, clf_fns,
+                eta: float, use_pallas: bool):
+    """The mixed-mode sibling of ``_ragged_scan``: same stacked 2B
+    denoiser call, same identity-keyed noise stream, same active mask —
+    plus the per-row classifier correction and the per-row-mode fused
+    update.  Returns x UNCLIPPED."""
+    B, H, _, channels = x.shape
+    mode = jnp.asarray(mode, jnp.float32)
+    is_clf = mode >= 0.5
+
+    def step(x, inp):
+        t, abt, abp, j = inp                     # (B,) each
+        active = j >= 0
+        x2 = jnp.concatenate([x, x], axis=0)
+        t2 = jnp.concatenate([t, t])
+        eps2 = dit_apply(params, dc, x2, t2, y2, use_pallas=use_pallas)
+        eps_c, eps_u = eps2[:B], eps2[B:]
+        if clf_fns:
+            eps_c = _clf_correct(eps_c, eps_u, x, abt, guidance, labels,
+                                 clf_ids, clf_fns, is_clf)
+        nk = jax.vmap(jax.random.fold_in)(row_keys,
+                                          jnp.maximum(j, 0) + 1)
+        noise = jax.vmap(lambda k: jax.random.normal(k, (H, H, channels)))(nk)
+        noise = noise * (t > 0)[:, None, None, None]
+        x = _cfg_update_mixed(x, eps_c, eps_u, mode, guidance, abt, abp,
+                              noise, active, eta, use_pallas)
+        return x, None
+
+    x, _ = jax.lax.scan(step, x,
+                        (jnp.asarray(ts).T, jnp.asarray(ab_t).T,
+                         jnp.asarray(ab_prev).T, jnp.asarray(jloc).T))
+    return x
+
+
+def reverse_sample_mixed(params, dc: DiffusionConfig, y, row_keys, guidance,
+                         mode, clf_ids, labels, ts, ab_t, ab_prev, jloc, *,
+                         clf_fns=(), image_size: int, channels: int = 3,
+                         eta: float = 1.0, use_pallas: bool = False):
+    """Mixed-guidance reverse loop: PER-ROW (mode, guidance, steps).
+
+    ``y`` carries the row's conditioning — the category encoding for cfg
+    rows, the null embedding Ø for classifier-guided and uncond rows
+    (``dit_apply(y=None)`` broadcasts the same Ø, so the substitution is
+    bit-invisible).  Row b draws x_T from ``fold_in(row_keys[b], 0)`` and
+    step-j noise from ``fold_in(row_keys[b], 1 + j)`` exactly like the
+    pure-cfg ragged wave, so a row's value is independent of which modes
+    share its wave."""
+    B = y.shape[0]
+    H = image_size
+    kx = jax.vmap(lambda k: jax.random.fold_in(k, 0))(row_keys)
+    x = jax.vmap(lambda k: jax.random.normal(k, (H, H, channels)))(kx)
+    null = jnp.broadcast_to(params["null_y"], (B, dc.cond_dim))
+    y2 = jnp.concatenate([y, null], axis=0)
+    x = _mixed_scan(params, dc, x, y2, row_keys,
+                    jnp.asarray(guidance, jnp.float32), mode, clf_ids,
+                    labels, ts, ab_t, ab_prev, jloc, clf_fns=clf_fns,
+                    eta=eta, use_pallas=use_pallas)
+    return jnp.clip(x, -1.0, 1.0)
+
+
+def _mixed_scan_window(params, dc: DiffusionConfig, x, y2, row_keys,
+                       guidance, mode, clf_ids, labels, ts, jloc, ab_t,
+                       ab_prev, active, *, clf_fns, row_offset: int,
+                       eta: float, use_pallas: bool):
+    """Windowed mixed scan: ``guidance``/``mode``/``ab_t``/``ab_prev``/
+    ``active`` span the FULL wave (the fused update reads tensor row b at
+    wave slot ``row_offset + b``); ``x``/``y2``/``row_keys``/``labels``/
+    ``clf_ids`` and ``ts``/``jloc`` are window-local.  The classifier
+    correction needs this window's per-row scalars, so it slices the
+    wave-resident ``mode``/``guidance``/``ab_t`` by the (possibly traced)
+    ``row_offset``.  Returns x UNCLIPPED."""
+    B, H, _, channels = x.shape
+    mode = jnp.asarray(mode, jnp.float32)
+    guidance = jnp.asarray(guidance, jnp.float32)
+    sl = lambda v: jax.lax.dynamic_slice_in_dim(v, row_offset, B, 0)
+    is_clf_w = sl(mode) >= 0.5
+    g_w = sl(guidance)
+
+    def step(x, inp):
+        t, j, abt, abp, act = inp         # t/j: (Bw,); abt/abp/act: (B,)
+        x2 = jnp.concatenate([x, x], axis=0)
+        t2 = jnp.concatenate([t, t])
+        eps2 = dit_apply(params, dc, x2, t2, y2, use_pallas=use_pallas)
+        eps_c, eps_u = eps2[:B], eps2[B:]
+        if clf_fns:
+            eps_c = _clf_correct(eps_c, eps_u, x, sl(abt), g_w, labels,
+                                 clf_ids, clf_fns, is_clf_w)
+        nk = jax.vmap(jax.random.fold_in)(row_keys,
+                                          jnp.maximum(j, 0) + 1)
+        noise = jax.vmap(lambda k: jax.random.normal(k, (H, H, channels)))(nk)
+        noise = noise * (t > 0)[:, None, None, None]
+        x = _cfg_update_mixed_window(x, eps_c, eps_u, mode, guidance, abt,
+                                     abp, noise, act, row_offset, eta,
+                                     use_pallas)
+        return x, None
+
+    x, _ = jax.lax.scan(step, x,
+                        (jnp.asarray(ts).T, jnp.asarray(jloc).T,
+                         jnp.asarray(ab_t).T, jnp.asarray(ab_prev).T,
+                         jnp.asarray(active).T))
+    return x
+
+
+def reverse_sample_mixed_window(params, dc: DiffusionConfig, x, y, row_keys,
+                                guidance, mode, clf_ids, labels, ts, jloc,
+                                ab_t, ab_prev, active, *, clf_fns=(),
+                                row_offset: int, image_size: int,
+                                channels: int = 3, eta: float = 1.0,
+                                use_pallas: bool = False):
+    """One segment of one host window of a MIXED wave: advance the
+    carried rows, admit the new (x_T from ``fold_in(row_keys[b], 0)``).
+    Same window contract as ``reverse_sample_window`` plus the wave-
+    resident ``mode`` table and window-local ``clf_ids``/``labels``.
+    Returns x UNCLIPPED."""
+    n_prev = x.shape[0]
+    H = image_size
+    kx = jax.vmap(lambda k: jax.random.fold_in(k, 0))(row_keys[n_prev:])
+    x_new = jax.vmap(lambda k: jax.random.normal(k, (H, H, channels)))(kx)
+    x = jnp.concatenate([x, x_new], axis=0)
+    B = x.shape[0]
+    null = jnp.broadcast_to(params["null_y"], (B, dc.cond_dim))
+    y2 = jnp.concatenate([y, null], axis=0)
+    return _mixed_scan_window(params, dc, x, y2, row_keys,
+                              jnp.asarray(guidance, jnp.float32), mode,
+                              clf_ids, labels, ts, jloc, ab_t, ab_prev,
+                              active, clf_fns=clf_fns, row_offset=row_offset,
+                              eta=eta, use_pallas=use_pallas)
+
+
+def reverse_sample_mixed_segment(params, dc: DiffusionConfig, x, y, row_keys,
+                                 guidance, ts, ab_t, ab_prev, jloc, *,
+                                 mode, clf_ids, labels, clf_fns=(),
+                                 image_size: int, channels: int = 3,
+                                 eta: float = 1.0, use_pallas: bool = False):
+    """One compaction epoch of a MIXED wave: the mixed sibling of
+    ``reverse_sample_segment`` (same admit-then-scan shape, same x_T
+    draw), with the per-row mode/classifier operands riding along.
+    Returns x UNCLIPPED."""
+    n_prev = x.shape[0]
+    H = image_size
+    kx = jax.vmap(lambda k: jax.random.fold_in(k, 0))(row_keys[n_prev:])
+    x_new = jax.vmap(lambda k: jax.random.normal(k, (H, H, channels)))(kx)
+    x = jnp.concatenate([x, x_new], axis=0)
+    B = x.shape[0]
+    null = jnp.broadcast_to(params["null_y"], (B, dc.cond_dim))
+    y2 = jnp.concatenate([y, null], axis=0)
+    return _mixed_scan(params, dc, x, y2, row_keys,
+                       jnp.asarray(guidance, jnp.float32), mode, clf_ids,
+                       labels, ts, ab_t, ab_prev, jloc, clf_fns=clf_fns,
+                       eta=eta, use_pallas=use_pallas)
+
+
+# ---------------------------------------------------------------------------
 # compacted mode: iteration-compacted nested waves (compute-skipping ragged)
 # ---------------------------------------------------------------------------
 #
@@ -563,7 +790,9 @@ def reverse_sample_compacted(params, dc: DiffusionConfig, y, row_keys,
                              guidance, ts, ab_t, ab_prev, jloc, *,
                              epochs, order=None, image_size: int,
                              channels: int = 3, eta: float = 1.0,
-                             use_pallas: bool = False, segment_fn=None):
+                             use_pallas: bool = False, segment_fn=None,
+                             mode=None, clf_ids=None, labels=None,
+                             clf_fns=()):
     """Compute-skipping ragged reverse process: nested activation waves.
 
     Runs one scan segment per epoch from ``plan_epochs`` — each over only
@@ -577,15 +806,33 @@ def reverse_sample_compacted(params, dc: DiffusionConfig, y, row_keys,
 
     ``segment_fn`` defaults to ``reverse_sample_segment``; callers that
     want one compiled executable per segment geometry pass a jitted
-    wrapper (``sampler._compacted_segment``)."""
+    wrapper (``sampler._compacted_segment``).
+
+    Passing ``mode`` (with ``clf_ids``/``labels``/``clf_fns``) selects
+    the MIXED-guidance segment contract: the per-row mode/classifier
+    operands are permuted and sliced alongside every other row vector
+    and forwarded to ``segment_fn`` as keyword arguments (default
+    ``reverse_sample_mixed_segment``)."""
+    mixed = mode is not None
     if segment_fn is None:
-        segment_fn = reverse_sample_segment
+        segment_fn = (reverse_sample_mixed_segment if mixed
+                      else reverse_sample_segment)
+    if mixed:
+        mode = np.asarray(mode, np.float32).reshape(-1)
+        clf_ids = np.asarray(
+            clf_ids if clf_ids is not None else np.zeros_like(mode),
+            np.int32).reshape(-1)
+        labels = np.asarray(
+            labels if labels is not None else np.zeros_like(mode),
+            np.int32).reshape(-1)
     if order is not None:
         idx = np.asarray(order)
         y, row_keys = y[idx], row_keys[idx]
         guidance = jnp.asarray(guidance, jnp.float32)[idx]
         ts, ab_t = ts[idx], ab_t[idx]
         ab_prev, jloc = ab_prev[idx], jloc[idx]
+        if mixed:
+            mode, clf_ids, labels = mode[idx], clf_ids[idx], labels[idx]
     H = image_size
     n_total = y.shape[0]
     if not epochs:
@@ -633,11 +880,15 @@ def reverse_sample_compacted(params, dc: DiffusionConfig, y, row_keys,
                 f"excludes rows that are active within it")
     x = jnp.zeros((0, H, H, channels))
     for rows, begin, end in epochs:
+        kw = dict(image_size=H, channels=channels, eta=eta,
+                  use_pallas=use_pallas)
+        if mixed:
+            kw.update(mode=mode[:rows], clf_ids=clf_ids[:rows],
+                      labels=labels[:rows], clf_fns=clf_fns)
         x = segment_fn(params, dc, x, y[:rows], row_keys[:rows],
                        guidance[:rows], ts[:rows, begin:end],
                        ab_t[:rows, begin:end], ab_prev[:rows, begin:end],
-                       jloc[:rows, begin:end], image_size=H,
-                       channels=channels, eta=eta, use_pallas=use_pallas)
+                       jloc[:rows, begin:end], **kw)
     x = jnp.clip(x, -1.0, 1.0)
     if order is not None:
         inv = np.empty_like(idx)

@@ -26,6 +26,9 @@ from repro.diffusion.guidance import (ClassifierFree, ClassifierGuided,
                                       Unconditional, plan_epochs,
                                       ragged_tables, reverse_sample,
                                       reverse_sample_compacted,
+                                      reverse_sample_mixed,
+                                      reverse_sample_mixed_segment,
+                                      reverse_sample_mixed_window,
                                       reverse_sample_ragged,
                                       reverse_sample_segment,
                                       reverse_sample_window)
@@ -213,6 +216,107 @@ def sample_cfg_window(params, dc: DiffusionConfig, sched: NoiseSchedule,
                         row_offset=row_offset, image_size=image_size or 16,
                         channels=channels, eta=eta, use_pallas=use_pallas)
     return jnp.clip(x, -1.0, 1.0)
+
+
+@partial(jax.jit, static_argnames=("dc", "clf_fns", "image_size", "channels",
+                                   "eta", "use_pallas"))
+def _mixed_core(params, dc, y, row_keys, guidance, mode, clf_ids, labels,
+                ts, ab_t, ab_prev, jloc, *, clf_fns, image_size, channels,
+                eta, use_pallas):
+    return reverse_sample_mixed(params, dc, y, row_keys, guidance, mode,
+                                clf_ids, labels, ts, ab_t, ab_prev, jloc,
+                                clf_fns=clf_fns, image_size=image_size,
+                                channels=channels, eta=eta,
+                                use_pallas=use_pallas)
+
+
+def sample_mixed(params, dc: DiffusionConfig, sched: NoiseSchedule, y,
+                 row_keys, guidance, mode, clf_ids, labels, num_steps, *,
+                 clf_fns=(), max_steps: int | None = None,
+                 image_size: int | None = None, channels: int = 3,
+                 eta: float = 1.0, use_pallas: bool = False):
+    """MIXED ragged wave: per-row (mode, guidance, steps, classifier).
+
+    The per-row contract of ``sample_cfg_ragged`` plus ``mode`` (B,)
+    (0 = cfg / uncond-as-s=0, 1 = classifier-guided), ``clf_ids`` (B,)
+    indices into the static ``clf_fns`` ensemble tuple, and ``labels``
+    (B,) classifier targets.  The executable is keyed by (B, max_steps)
+    and the ensemble tuple identity — NOT by which rows carry which mode
+    — so one compile serves every mixed-tenant packing of a wave shape.
+    """
+    steps = np.asarray(num_steps, np.int32).reshape(-1)
+    S = int(max_steps if max_steps is not None else steps.max())
+    ts, ab_t, ab_prev, jloc = ragged_tables(sched, steps, S)
+    return _mixed_core(params, dc, y, row_keys,
+                       jnp.asarray(guidance, jnp.float32),
+                       jnp.asarray(mode, jnp.float32),
+                       jnp.asarray(clf_ids, jnp.int32),
+                       jnp.asarray(labels, jnp.int32),
+                       ts, ab_t, ab_prev, jloc, clf_fns=tuple(clf_fns),
+                       image_size=image_size or 16, channels=channels,
+                       eta=eta, use_pallas=use_pallas)
+
+
+@partial(jax.jit, static_argnames=("dc", "clf_fns", "image_size", "channels",
+                                   "eta", "use_pallas"))
+def _mixed_segment(params, dc, x, y, row_keys, guidance, ts, ab_t, ab_prev,
+                   jloc, *, mode, clf_ids, labels, clf_fns, image_size,
+                   channels, eta, use_pallas):
+    """One MIXED compaction epoch, jitted: keyed by segment geometry plus
+    the ensemble tuple identity, like ``_compacted_segment``."""
+    return reverse_sample_mixed_segment(params, dc, x, y, row_keys, guidance,
+                                        ts, ab_t, ab_prev, jloc, mode=mode,
+                                        clf_ids=clf_ids, labels=labels,
+                                        clf_fns=clf_fns,
+                                        image_size=image_size,
+                                        channels=channels, eta=eta,
+                                        use_pallas=use_pallas)
+
+
+def sample_mixed_compacted(params, dc: DiffusionConfig, sched: NoiseSchedule,
+                           y, row_keys, guidance, mode, clf_ids, labels,
+                           num_steps, *, clf_fns=(),
+                           max_steps: int | None = None, compaction="full",
+                           plan=None, geoms=None, compile_cost: int = 256,
+                           granule: int = 1, image_size: int | None = None,
+                           channels: int = 3, eta: float = 1.0,
+                           use_pallas: bool = False):
+    """Compacted MIXED wave: ``sample_cfg_compacted``'s nested activation
+    epochs with the mixed per-row operands riding along — bit-identical
+    to ``sample_mixed`` on the same rows."""
+    steps = np.asarray(num_steps, np.int32).reshape(-1)
+    S = int(max_steps if max_steps is not None else steps.max())
+    if plan is None:
+        plan = plan_epochs(steps, S, compaction=compaction, granule=granule,
+                           geoms=geoms, compile_cost=compile_cost)
+    order, epochs = plan
+    ts, ab_t, ab_prev, jloc = ragged_tables(sched, steps, S)
+    return reverse_sample_compacted(
+        params, dc, jnp.asarray(y), jnp.asarray(row_keys),
+        jnp.asarray(guidance, jnp.float32), ts, ab_t, ab_prev, jloc,
+        epochs=epochs, order=order, image_size=image_size or 16,
+        channels=channels, eta=eta, use_pallas=use_pallas,
+        segment_fn=_mixed_segment, mode=mode, clf_ids=clf_ids,
+        labels=labels, clf_fns=tuple(clf_fns))
+
+
+@partial(jax.jit, static_argnames=("dc", "clf_fns", "image_size", "channels",
+                                   "eta", "use_pallas"))
+def _window_segment_mixed(params, dc, x, y, row_keys, guidance, ts, jloc,
+                          ab_t, ab_prev, active, *, mode, clf_ids, labels,
+                          clf_fns, row_offset, image_size, channels, eta,
+                          use_pallas):
+    """One MIXED host-window segment, jitted: same geometry keying as
+    ``_window_segment`` (row_offset and the wave tables are traced), plus
+    the static ensemble tuple."""
+    return reverse_sample_mixed_window(params, dc, x, y, row_keys, guidance,
+                                       mode, clf_ids, labels, ts, jloc,
+                                       ab_t, ab_prev, active,
+                                       clf_fns=clf_fns,
+                                       row_offset=row_offset,
+                                       image_size=image_size,
+                                       channels=channels, eta=eta,
+                                       use_pallas=use_pallas)
 
 
 @partial(jax.jit, static_argnames=("dc", "num", "num_steps", "eta",

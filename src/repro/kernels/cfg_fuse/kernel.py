@@ -61,6 +61,61 @@ def _cfg_rowwise_kernel(off_ref, scal_ref, x_ref, ec_ref, eu_ref, z_ref,
     out_ref[...] = out.astype(out_ref.dtype)
 
 
+def _cfg_mixed_kernel(off_ref, scal_ref, x_ref, ec_ref, eu_ref, z_ref,
+                      out_ref, *, eta):
+    # mixed-guidance row: the (5, Bs) scalar table carries one
+    # (mode, ᾱ_t, ᾱ_prev, s, active) tuple per wave row.  mode selects
+    # the guidance combine — 0 is the cfg pair-combine (uncond rides it
+    # as s=0 with a null cond row), 1 takes ε_c as the classifier-
+    # corrected ε̂ computed upstream.  Same segment-offset indexing as
+    # the pure-cfg rowwise kernel: tensor row b reads column off + b.
+    b = off_ref[0] + pl.program_id(0)
+    mode = scal_ref[0, b]
+    ab_t = scal_ref[1, b]
+    ab_prev = scal_ref[2, b]
+    s = scal_ref[3, b]
+    act = scal_ref[4, b]
+    x = x_ref[...].astype(jnp.float32)
+    ec = ec_ref[...].astype(jnp.float32)
+    eu = eu_ref[...].astype(jnp.float32)
+    eps = jnp.where(mode < 0.5, (1.0 + s) * ec - s * eu, ec)
+    x0 = (x - jnp.sqrt(1.0 - ab_t) * eps) * jax.lax.rsqrt(ab_t)
+    x0 = jnp.clip(x0, -1.0, 1.0)
+    var = (1.0 - ab_prev) / (1.0 - ab_t) * (1.0 - ab_t / ab_prev)
+    sigma = eta * jnp.sqrt(jnp.maximum(var, 0.0))
+    dir_coef = jnp.sqrt(jnp.maximum(1.0 - ab_prev - sigma * sigma, 0.0))
+    out = jnp.sqrt(ab_prev) * x0 + dir_coef * eps \
+        + sigma * z_ref[...].astype(jnp.float32)
+    out = jnp.where(act > 0.0, out, x)
+    out_ref[...] = out.astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("eta", "interpret"))
+def cfg_update_mixed_3d(x, eps_c, eps_u, noise, off, scal, *,
+                        eta: float = 1.0, interpret: bool = False):
+    """Mixed-guidance sibling of ``cfg_update_rowwise_3d``: identical
+    grid/layout, but the scalar-prefetch table is (5, Bs) — a per-row
+    ``(mode, ᾱ_t, ᾱ_prev, s, active)`` tuple — so cfg, classifier-guided
+    and uncond rows share one launch (and one compiled executable)."""
+    B, R, _ = x.shape
+    block = min(BLOCK_ROWS, R)
+    grid = (B, pl.cdiv(R, block))
+    kern = functools.partial(_cfg_mixed_kernel, eta=float(eta))
+    return pl.pallas_call(
+        kern,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=grid,
+            in_specs=[pl.BlockSpec((1, block, LANES),
+                                   lambda b, j, o, s: (b, j, 0))] * 4,
+            out_specs=pl.BlockSpec((1, block, LANES),
+                                   lambda b, j, o, s: (b, j, 0)),
+        ),
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        interpret=interpret,
+    )(off, scal, x, eps_c, eps_u, noise)
+
+
 @functools.partial(jax.jit, static_argnames=("eta", "interpret"))
 def cfg_update_rowwise_3d(x, eps_c, eps_u, noise, off, scal, *,
                           eta: float = 1.0, interpret: bool = False):

@@ -88,3 +88,47 @@ def cfg_update_rowwise(x, eps_c, eps_u, s, ab_t, ab_prev, noise, active,
                                   flat(noise), off, scal, eta=float(eta),
                                   interpret=interpret)
     return out.reshape(B, -1)[:, :n].reshape(shape)
+
+
+def cfg_update_mixed(x, eps_c, eps_u, mode, s, ab_t, ab_prev, noise, active,
+                     eta: float = 1.0, *, row_offset: int = 0,
+                     interpret: bool | None = None):
+    """Per-row MIXED-guidance fused update: like ``cfg_update_rowwise``
+    but with a per-row ``mode`` selecting the guidance combine (0 = cfg
+    pair-combine, uncond riding it as s=0 null-cond; 1 = ε_c is the
+    classifier-corrected ε̂ computed upstream).  The scalar-prefetch
+    table is (5, Bs) — ``(mode, ᾱ_t, ᾱ_prev, s, active)`` per row — and
+    the same row-window contract applies: tensor row b reads scalar slot
+    ``row_offset + b``, with the bounds check only for concrete offsets."""
+    if interpret is None:
+        interpret = _on_cpu()
+    shape = x.shape
+    B = shape[0]
+    n = int(np.prod(shape[1:]))
+    rows = -(-n // K.LANES)
+    rows = -(-rows // 8) * 8
+    pad = rows * K.LANES - n
+
+    def flat(a):
+        a = a.reshape(B, -1)
+        if pad:
+            a = jnp.pad(a, ((0, 0), (0, pad)))
+        return a.reshape(B, rows, K.LANES)
+
+    scal = jnp.stack([
+        jnp.asarray(mode, jnp.float32).reshape(-1),
+        jnp.asarray(ab_t, jnp.float32).reshape(-1),
+        jnp.asarray(ab_prev, jnp.float32).reshape(-1),
+        jnp.asarray(s, jnp.float32).reshape(-1),
+        jnp.asarray(active).astype(jnp.float32).reshape(-1),
+    ])
+    if isinstance(row_offset, (int, np.integer)) and \
+            (row_offset < 0 or scal.shape[1] < row_offset + B):
+        raise ValueError(
+            f"mixed scalars span {scal.shape[1]} rows; window "
+            f"[{row_offset}, {row_offset + B}) is out of range")
+    off = jnp.asarray(row_offset, jnp.int32).reshape(1)
+    out = K.cfg_update_mixed_3d(flat(x), flat(eps_c), flat(eps_u),
+                                flat(noise), off, scal, eta=float(eta),
+                                interpret=interpret)
+    return out.reshape(B, -1)[:, :n].reshape(shape)

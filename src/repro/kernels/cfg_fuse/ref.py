@@ -49,6 +49,39 @@ def cfg_update_rowwise(x, eps_c, eps_u, s, ab_t, ab_prev, noise, active,
     return jnp.where(r(active), out, x)
 
 
+def cfg_update_mixed(x, eps_c, eps_u, mode, s, ab_t, ab_prev, noise, active,
+                     eta: float = 1.0):
+    """Per-row MIXED-guidance variant: ``mode`` (B,) selects the guidance
+    combine per row — 0 is classifier-free ``(1+s)·ε_c − s·ε_u`` (with
+    uncond as its s=0, null-cond degenerate point), 1 takes ``eps_c`` as
+    the already-corrected ε̂ (classifier guidance applies its gradient
+    term upstream, where the classifier ensemble lives).  Every other
+    line is the ``cfg_update_rowwise`` arithmetic, so an all-mode-0 call
+    is bit-identical to the pure-cfg rowwise update."""
+    r = lambda v: jnp.asarray(v).reshape((-1,) + (1,) * (x.ndim - 1))
+    mode, s, ab_t, ab_prev = r(mode), r(s), r(ab_t), r(ab_prev)
+    eps = jnp.where(mode < 0.5, (1.0 + s) * eps_c - s * eps_u, eps_c)
+    x0 = (x - jnp.sqrt(1.0 - ab_t) * eps) / jnp.sqrt(ab_t)
+    x0 = jnp.clip(x0, -1.0, 1.0)
+    var = (1.0 - ab_prev) / (1.0 - ab_t) * (1.0 - ab_t / ab_prev)
+    sigma = eta * jnp.sqrt(jnp.maximum(var, 0.0))
+    dir_coef = jnp.sqrt(jnp.maximum(1.0 - ab_prev - sigma ** 2, 0.0))
+    out = jnp.sqrt(ab_prev) * x0 + dir_coef * eps + sigma * noise
+    return jnp.where(r(active), out, x)
+
+
+def cfg_update_mixed_windowed(x, eps_c, eps_u, mode, s, ab_t, ab_prev, noise,
+                              active, row_offset=0, eta: float = 1.0):
+    """Segment-offset oracle for the mixed update: the per-row scalar
+    vectors (including ``mode``) span the wave's FULL row range, tensor
+    row b reads slot ``row_offset + b``.  ``row_offset`` may be traced."""
+    B = x.shape[0]
+    sl = lambda v: jax.lax.dynamic_slice_in_dim(jnp.asarray(v),
+                                                row_offset, B, 0)
+    return cfg_update_mixed(x, eps_c, eps_u, sl(mode), sl(s), sl(ab_t),
+                            sl(ab_prev), noise, sl(active), eta)
+
+
 def cfg_update_rowwise_windowed(x, eps_c, eps_u, s, ab_t, ab_prev, noise,
                                 active, row_offset=0, eta: float = 1.0):
     """Oracle for the segment-offset kernel path: the scalar vectors span

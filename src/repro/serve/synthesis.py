@@ -32,23 +32,36 @@ the LM runtime:
   ``serve/store.py::SynthesisStore`` attached the cache spills to disk,
   so a cold process serves repeated workloads with zero sampler calls.
 
-Waves are grouped by (mode, guidance, steps[, classifier identity]) —
-classifier-guided requests batch per uploaded classifier, classifier-free
-requests batch across every client and category in the queue.
+In GROUPED mode waves are grouped by (mode, guidance,
+steps[, classifier identity]) — classifier-guided requests batch per
+uploaded classifier, classifier-free requests batch across every client
+and category in the queue.
 
 RAGGED WAVES (``ragged=True``): guidance scale and step count become
-PER-ROW, so every classifier-free group merges into ONE live queue and
-one compiled (wave_rows, max_steps) trajectory serves a mixed
-(guidance, steps) workload — the guidance sweep's groups, FedDISC's
-resampled-statistics requests, and OSCAR's uploads all share waves
-instead of each padding and compiling their own.  Shorter-step rows are
-right-aligned inside the shared scan and frozen by an active mask until
-their trajectory starts; each row's noise stream is keyed by
-``fold_in(fold_in(drain_key, rid), row_index)`` — the row's identity,
-not its wave position — so results are bit-independent of how the
-packer interleaved groups, streamed arrivals, or padded the wave.
-Cache/store keys stay (encoding-hash, guidance, steps), so a ragged
-engine and a grouped engine share a warm store transparently.
+PER-ROW, and EVERY guidance mode merges into ONE live queue — cfg,
+classifier-guided, and unconditional requests share waves instead of
+each padding and compiling their own.  One compiled
+(wave_rows, max_steps) trajectory serves a mixed (mode, guidance,
+steps, classifier) workload: the guidance sweep's groups, FedDISC's
+resampled-statistics requests, OSCAR's uploads, FedCADO-style uploaded
+classifiers, and unguided draws all ride the same waves.  Unconditional
+rows are the s=0 degenerate point of the cfg combine with an explicit
+null conditioning row (bit-identical to ``dit_apply``'s y=None
+broadcast); classifier-guided rows carry a slot into the engine's
+classifier-ensemble registry, and the wave's per-row ε̂-correction
+(Eq. 4) selects each row's classifier by that slot — per-sample
+classifier evaluations, so a row's value is independent of what else is
+batched with it.  A wave with no classifier rows dispatches the pure
+cfg executable (grouped-uncond waves count stays zero either way).
+Shorter-step rows are right-aligned inside the shared scan and frozen
+by an active mask until their trajectory starts; each row's noise
+stream is keyed by ``fold_in(fold_in(drain_key, rid), row_index)`` —
+the row's identity, not its wave position or mode neighborhood — so
+results are bit-independent of how the packer interleaved modes,
+streamed arrivals, or padded the wave, and bit-identical to the same
+engine serving each mode in isolation.  Cache/store keys stay
+(encoding-hash, guidance, steps) (uncond: a synthetic per-category
+key), so ragged and grouped engines share a warm store transparently.
 
 COMPACTION (``compaction="auto" | "full" | K``, implies ``ragged``): the
 one-shot ragged scan still runs every row through the wave's full step
@@ -85,9 +98,11 @@ and epoch-plans its own window, so its segments stay contiguous
 row-windows of the wave table.  Multi-host is SIMULATED in one process
 (host partitions of the local device set); per-host device placement on
 a real pod hangs off ``HostTopology.mesh`` / ``host_submesh``.
-Classifier-guided and unconditional groups keep the single-host path (a
-classifier closure cannot be sharded by rows).  Per-host accounting
-lands in ``stats["per_host"]``.
+Under ragged scheduling EVERY mode places (classifier-guided and uncond
+rows ride the merged waves, so they shard by rows like any cfg row —
+the per-row correction batches the classifier over the window); in
+grouped mode clf/uncond groups keep the single-host path.  Per-host
+accounting lands in ``stats["per_host"]``.
 
 CONCURRENT PLACED DRAIN (``workers=True``, the default): every live
 host gets its own EXECUTOR THREAD (``_HostPool``), and a placed wave
@@ -155,9 +170,11 @@ from jax.sharding import PartitionSpec as P
 
 from repro.configs.oscar import DiffusionConfig
 from repro.diffusion.guidance import plan_epochs, ragged_tables
-from repro.diffusion.sampler import (_window_segment, sample_cfg,
-                                     sample_cfg_compacted, sample_cfg_ragged,
-                                     sample_classifier_guided, sample_uncond)
+from repro.diffusion.sampler import (_window_segment, _window_segment_mixed,
+                                     sample_cfg, sample_cfg_compacted,
+                                     sample_cfg_ragged,
+                                     sample_classifier_guided, sample_mixed,
+                                     sample_mixed_compacted, sample_uncond)
 from repro.diffusion.schedule import NoiseSchedule
 from repro.obs.metrics import MetricsRegistry
 from repro.obs.trace import Tracer
@@ -198,18 +215,24 @@ class _Pending:
     def rows_left(self) -> int:
         return self.fresh - self.taken
 
-    def row_block(self, k: int, start: int) -> np.ndarray:
+    def row_block(self, k: int, start: int, null=None) -> np.ndarray:
         """Rows ``start:start+k`` of this request's fresh conditioning.
         A 1-D cfg encoding repeats one row; a 2-D encoding (one DISTINCT
         conditioning per sample, e.g. FedDISC's resampled statistics)
         slices — offset past the cached prefix, which covered the leading
-        rows."""
+        rows.  ``null`` (the DM's null conditioning row) is passed on the
+        MERGED ragged path, where clf/uncond rows ride cfg waves as
+        explicit null-cond rows (``dit_apply(y=None)`` broadcasts the
+        same row, so the values are bit-identical); without it the legacy
+        grouped packers get their int label/placeholder blocks."""
         r = self.req
         if r.mode == "cfg":
             if r.cond.ndim == 2:
                 off = r.count - self.fresh + start
                 return r.cond[off:off + k]
             return np.repeat(r.cond[None], k, axis=0)
+        if null is not None:
+            return np.repeat(null[None], k, axis=0)
         if r.mode == "clf":
             return np.full((k,), r.category, np.int32)
         return np.zeros((k,), np.int32)          # uncond placeholder ids
@@ -359,6 +382,20 @@ class SynthesisEngine:
         # plan_epochs treats a split that lands in a bucket as
         # compile-free, so recurring wave shapes compact deeper
         self._segment_geoms: set[tuple] = set()
+        # mixed-guidance waves compile their OWN segment executables (the
+        # classifier-correction step changes the jaxpr), so their "auto"
+        # free-split hits live in a separate bucket from the pure-cfg one
+        self._segment_geoms_mixed: set[tuple] = set()
+        # classifier-ensemble registry for MERGED ragged waves: uploaded
+        # classifier closures, in admission order; a wave row selects its
+        # classifier by slot index (meta), and the registry tuple is a
+        # static argument of the mixed sampler.  Slots only grow — an
+        # ensemble extension retraces, a repeat classifier reuses its slot
+        self._clf_fns: list = []
+        # the DM's null conditioning row: merged waves pack clf/uncond
+        # rows as explicit null-cond rows (bit-identical to dit_apply's
+        # y=None broadcast of the same parameter)
+        self._null_row = np.asarray(dm_params["null_y"], np.float32)
         # observability: a disabled tracer is the default (near-zero-cost
         # no-op spans/stamps); every counter lives in the registry and
         # the legacy ``stats`` dict is a read-only VIEW over it
@@ -544,11 +581,17 @@ class SynthesisEngine:
 
     def submit_unconditional(self, count: int, *, category: int = -1,
                              num_steps: int | None = None) -> int:
-        """Unguided p(x) draws through the null embedding."""
+        """Unguided p(x) draws through the null embedding.  Cached/stored
+        like cfg requests under a synthetic per-category key (an uncond
+        draw is fully determined by (category, steps) — there is no
+        encoding to hash), so repeated uncond workloads replay from a
+        warm store with zero sampler calls."""
         _, steps = self._resolve(0.0, num_steps)
+        ck = ((f"uncond:{int(category)}", 0.0, steps)
+              if self.cache_enabled else None)
         return self._push(SynthesisRequest(
             rid=-1, mode="uncond", count=int(count), category=int(category),
-            guidance=0.0, num_steps=steps))
+            guidance=0.0, num_steps=steps, cache_key=ck))
 
     # -- draining ---------------------------------------------------------
     def run(self, key, *, poll: Callable[[], bool] | None = None,
@@ -667,12 +710,29 @@ class SynthesisEngine:
         return req.rid
 
     def _group_key(self, r: SynthesisRequest):
-        if self.ragged and r.mode == "cfg":
-            # one merged super-group: per-row (guidance, steps) inside
-            # shared ragged waves instead of one wave group per pair
+        if self.ragged:
+            # one merged super-group for EVERY guidance mode: per-row
+            # (mode, guidance, steps, classifier) inside shared ragged
+            # waves instead of one wave group per (mode, pair, closure).
+            # uncond rows ride as s=0 null-cond cfg rows; clf rows carry
+            # a slot into the engine's classifier-ensemble registry.
+            # (The key literal stays ("cfg",) for continuity with the
+            # cfg-only merged scheduler this generalizes.)
             return ("cfg",)
         clf = ("clf", repr(r.group)) if r.mode == "clf" else ("", "")
         return (r.mode, r.guidance, r.num_steps) + clf
+
+    def _clf_slot(self, fn) -> int:
+        """Slot of ``fn`` in the classifier-ensemble registry (identity
+        match — closures are not hashable by value), appending on first
+        sight.  New classifiers are registered at ADMISSION (drain
+        thread), so wave packing — which may run on per-host workers —
+        only ever performs read-only lookups."""
+        for i, f in enumerate(self._clf_fns):
+            if f is fn:
+                return i
+        self._clf_fns.append(fn)
+        return len(self._clf_fns) - 1
 
     def _cached_rows(self, ck) -> Optional[np.ndarray]:
         """Memory cache, spilling in from the persistent store on miss."""
@@ -769,6 +829,72 @@ class SynthesisEngine:
                                  image_size=self.image_size,
                                  channels=self.channels, eta=self.eta,
                                  use_pallas=self.use_pallas)
+
+    def _mixed_columns(self, meta):
+        """The per-row mixed-guidance operands carried in meta columns
+        4..6: (mode, clf slot, label) vectors plus the static ensemble
+        tuple snapshot for this dispatch."""
+        mode = np.array([m[4] for m in meta], np.float32)
+        cids = np.array([m[5] for m in meta], np.int32)
+        labels = np.array([m[6] for m in meta], np.int32)
+        return mode, cids, labels, tuple(self._clf_fns)
+
+    def _sample_wave_mixed(self, cond_rows, meta, key, max_steps: int):
+        """One merged MIXED-guidance wave: ``_sample_wave_ragged`` plus
+        per-row (mode, classifier slot, label) operands — cfg, classifier-
+        guided and uncond rows share one launch and one compiled
+        (wave_rows, max_steps, ensemble) executable.  Each row's value is
+        bit-identical to the same merged engine serving that row's mode
+        alone (row noise is identity-keyed and the per-row classifier
+        correction is batch-composition-independent)."""
+        g = np.array([m[0] for m in meta], np.float32)
+        steps = np.array([m[1] for m in meta], np.int32)
+        mode, cids, labels, clf_fns = self._mixed_columns(meta)
+        row_keys = self._row_keys(meta, key)
+        self._note_shape(("mixed-ragged", len(cond_rows), max_steps,
+                          len(clf_fns)))
+        return sample_mixed(self.dm_params, self.dc, self.sched,
+                            self._shard(jnp.asarray(cond_rows)), row_keys,
+                            jnp.asarray(g), mode, cids, labels, steps,
+                            clf_fns=clf_fns, max_steps=max_steps,
+                            image_size=self.image_size,
+                            channels=self.channels, eta=self.eta,
+                            use_pallas=self.use_pallas)
+
+    def _sample_wave_mixed_compacted(self, cond_rows, meta, key,
+                                     max_steps: int):
+        """Iteration-compacted MIXED wave: ``_sample_wave_compacted``'s
+        activation epochs with the mixed per-row operands riding along.
+        Mixed segments compile their own executables (the classifier
+        correction changes the jaxpr), so their "auto" free-split hits
+        track in ``_segment_geoms_mixed``, not the pure-cfg bucket."""
+        g = np.array([m[0] for m in meta], np.float32)
+        steps = np.array([m[1] for m in meta], np.int32)
+        mode, cids, labels, clf_fns = self._mixed_columns(meta)
+        row_keys = self._row_keys(meta, key)
+        seg_granule = self.granule if self.mesh is not None else 1
+        plan = plan_epochs(steps, max_steps, compaction=self.compaction,
+                           granule=seg_granule,
+                           geoms=self._segment_geoms_mixed,
+                           compile_cost=self.compaction_compile_cost)
+        _, epochs = plan
+        prev = 0
+        for rows, begin, end in epochs:
+            self._note_shape(("mixed-seg", prev, rows, end - begin,
+                              len(clf_fns)))
+            self._segment_geoms_mixed.add((prev, rows, end - begin))
+            prev = rows
+        self.metrics.inc("segments", len(epochs))
+        x = sample_mixed_compacted(self.dm_params, self.dc, self.sched,
+                                   self._shard(jnp.asarray(cond_rows)),
+                                   row_keys, jnp.asarray(g), mode, cids,
+                                   labels, steps, clf_fns=clf_fns,
+                                   max_steps=max_steps, plan=plan,
+                                   image_size=self.image_size,
+                                   channels=self.channels, eta=self.eta,
+                                   use_pallas=self.use_pallas)
+        scheduled = sum(rows * (end - begin) for rows, begin, end in epochs)
+        return x, scheduled
 
     def _sample_wave(self, grp_head: SynthesisRequest, cond_rows, key):
         H, C = self.image_size, self.channels
@@ -1016,11 +1142,33 @@ class SynthesisEngine:
                     # resolved once the generating wave retires
                     st.waiters.append(r)
                 continue
+            if r.mode == "clf" and self.ragged:
+                # merged-path classifiers are vetted AT ADMISSION: an
+                # abstract probe catches a poisoned closure before it is
+                # baked into a mixed wave (where it would poison every
+                # co-batched request), and registers the survivor's
+                # ensemble slot while admission is still single-threaded.
+                # With an on_error hook the bad request resolves to a
+                # typed failure and the drain continues; without one the
+                # legacy first-failure-raises contract holds.
+                try:
+                    H, C = self.image_size, self.channels
+                    jax.eval_shape(
+                        r.logprob_fn,
+                        jax.ShapeDtypeStruct((1, H, H, C), jnp.float32),
+                        jax.ShapeDtypeStruct((1,), jnp.int32))
+                    self._clf_slot(r.logprob_fn)
+                except Exception as exc:
+                    if st.on_error is None:
+                        raise
+                    self._fail_request(st, r, exc)
+                    continue
             if r.cache_key is not None:
                 st.planned[r.cache_key] = (st.planned.get(r.cache_key, 0)
                                            + fresh)
             gk = self._group_key(r)
-            placed = self.topology is not None and r.mode == "cfg"
+            placed = self.topology is not None and (r.mode == "cfg"
+                                                    or self.ragged)
             if gk not in st.groups:
                 st.groups[gk] = (_ShardedGroup(r, self.topology.num_hosts)
                                  if placed else _GroupQueue(r))
@@ -1038,8 +1186,13 @@ class SynthesisEngine:
     def _drain_group(self, q: _GroupQueue, st: "_DrainState", key, results,
                      *, poll, host_polls, stream):
         """Drain one group's live queue wave by wave, double-buffered:
-        wave k+1 is packed and dispatched while wave k runs on device."""
-        ragged = self.ragged and q.head.mode == "cfg"
+        wave k+1 is packed and dispatched while wave k runs on device.
+        Under ragged scheduling the one merged queue carries EVERY
+        guidance mode; a wave with classifier-guided rows dispatches
+        through the mixed sampler, a wave without any rides the pure
+        cfg path (uncond rows are s=0 null-cond cfg rows there — the
+        same arithmetic bit-for-bit)."""
+        ragged = self.ragged
         if stream:
             wave_rows = self.wave_size
         else:
@@ -1074,16 +1227,24 @@ class SynthesisEngine:
                       else wave_rows)
             with self.tracer.span("wave.pack", wave=st.wave_i, host=0,
                                   rows=target, real=got):
-                rows = np.concatenate([p.row_block(t, s)
-                                       for p, t, s in parts])
+                rows = np.concatenate(
+                    [p.row_block(t, s, self._null_row if ragged else None)
+                     for p, t, s in parts])
                 meta = None
                 if ragged:
-                    # (guidance, steps, rid, absolute row index) per row;
-                    # the index offsets past the cached prefix so a top-up
-                    # row has the same identity whichever drain generates
-                    # it
+                    # (guidance, steps, rid, absolute row index, mode,
+                    # clf slot, label) per row; the index offsets past
+                    # the cached prefix so a top-up row has the same
+                    # identity whichever drain generates it.  mode is
+                    # 0 for cfg AND uncond (uncond = s=0 null-cond),
+                    # 1 for classifier-guided; slot indexes the engine's
+                    # classifier-ensemble registry
                     meta = [(p.req.guidance, p.req.num_steps, p.req.rid,
-                             p.req.count - p.fresh + s + i)
+                             p.req.count - p.fresh + s + i,
+                             1.0 if p.req.mode == "clf" else 0.0,
+                             (self._clf_slot(p.req.logprob_fn)
+                              if p.req.mode == "clf" else 0),
+                             p.req.category)
                             for p, t, s in parts for i in range(t)]
                 if target > got:
                     rows = np.concatenate(
@@ -1113,12 +1274,15 @@ class SynthesisEngine:
                     # one shared geometry); compaction closes the gap by
                     # skipping frozen epochs.
                     active_iters = int(sum(m[1] for m in meta[:got]))
+                    mixed = any(m[4] for m in meta)
                     if self.compaction is not None:
-                        x, sched_iters = \
-                            self._sample_wave_compacted(rows, meta, key,
-                                                        smax)
+                        sampler = (self._sample_wave_mixed_compacted
+                                   if mixed else self._sample_wave_compacted)
+                        x, sched_iters = sampler(rows, meta, key, smax)
                     else:
-                        x = self._sample_wave_ragged(rows, meta, key, smax)
+                        sampler = (self._sample_wave_mixed if mixed
+                                   else self._sample_wave_ragged)
+                        x = sampler(rows, meta, key, smax)
                         sched_iters = target * smax
                     self.metrics.inc("merged_waves")
                     self.metrics.inc("row_iters_scheduled", sched_iters)
@@ -1147,8 +1311,9 @@ class SynthesisEngine:
 
     def _drain_group_placed(self, grp: _ShardedGroup, st: "_DrainState", key,
                             results, *, poll, host_polls, stream):
-        """Placement-aware drain of one cfg group over the engine's
-        topology, double-buffered like ``_drain_group``: each host packs
+        """Placement-aware drain of one group (grouped cfg, or the
+        merged all-modes ragged queue) over the engine's topology,
+        double-buffered like ``_drain_group``: each host packs
         its contiguous window of every wave locally from its own ingress
         queue (per-window padding, per-window compaction plans), and the
         wave's per-row scalars live in one wave-resident table that every
@@ -1320,22 +1485,31 @@ class SynthesisEngine:
             self.metrics.inc("failover.requeued_rows", moved)
 
     def _pack_window(self, w, parts, max_steps: int, total_rows: int,
-                     wave: int):
+                     wave: int, mixed: bool = False):
         """Pack ONE host's window: concatenate its pending row blocks,
         build per-row meta, pad, and (under compaction) plan the
         window's epoch segments with its activation sort.  Host-LOCAL
         work — it touches only this host's pendings and this window's
         ``_window_geoms`` bucket, so the per-host workers run packs for
-        different hosts concurrently.  Returns ``(rows, meta, inv,
+        different hosts concurrently.  ``mixed`` is the WAVE-level flag
+        (any window of the wave holds a classifier-guided row): mixed
+        window segments are distinct executables, so their "auto"
+        free-split hits bucket separately.  Returns ``(rows, meta, inv,
         epochs, stats)``."""
         with self.tracer.span("window.pack", wave=wave, **w.span_attrs):
-            rows = np.concatenate([p.row_block(t, s)
-                                   for p, t, s in parts])
-            # (guidance, steps, rid, absolute row index) — identical
-            # row identity to the single-host packers, so any engine
-            # serving these requests draws the same noise streams
+            rows = np.concatenate(
+                [p.row_block(t, s, self._null_row if self.ragged else None)
+                 for p, t, s in parts])
+            # (guidance, steps, rid, absolute row index, mode, clf slot,
+            # label) — identical row identity to the single-host packers,
+            # so any engine serving these requests draws the same noise
+            # streams; the mixed columns are inert for pure-cfg waves
             meta = [(p.req.guidance, p.req.num_steps, p.req.rid,
-                     p.req.count - p.fresh + s + i)
+                     p.req.count - p.fresh + s + i,
+                     1.0 if p.req.mode == "clf" else 0.0,
+                     (self._clf_slot(p.req.logprob_fn)
+                      if p.req.mode == "clf" else 0),
+                     p.req.category)
                     for p, t, s in parts for i in range(t)]
             if w.rows > w.real:
                 # per-window padding duplicates the window's OWN last
@@ -1351,7 +1525,8 @@ class SynthesisEngine:
                 seg_granule = (self.topology.granules[w.host]
                                if self.mesh is not None else 1)
                 geoms = self._window_geoms.setdefault(
-                    (w.offset, total_rows), set())
+                    (w.offset, total_rows, "mixed") if mixed
+                    else (w.offset, total_rows), set())
                 order, epochs = plan_epochs(
                     steps_w, max_steps, compaction=self.compaction,
                     granule=seg_granule, geoms=geoms,
@@ -1376,7 +1551,7 @@ class SynthesisEngine:
         as the work is enqueued, so back-to-back (or per-host-worker)
         calls overlap host h+1's dispatch with host h's device scan.
         ``_retire_placed`` fences the returned output later."""
-        y, row_keys, g, ts, ab_t, ab_prev, jloc, act, B = ctx
+        y, row_keys, g, ts, ab_t, ab_prev, jloc, act, B, mx = ctx
         # the host-window dispatch fault site: a fault here models the
         # host dying with its window undispatched — the drain's failover
         # path requeues the wave and carries on
@@ -1392,12 +1567,17 @@ class SynthesisEngine:
                 # full executable key: a window segment specializes on
                 # (wave width, carried, live, iterations) — NOT the
                 # window offset, which is a traced operand, so equal-
-                # quota hosts share one executable per segment geometry
-                self._note_shape(("cfg-win", B, prev, rows,
-                                  end - begin))
+                # quota hosts share one executable per segment geometry.
+                # Mixed waves additionally key on the ensemble tuple.
+                if mx is not None:
+                    self._note_shape(("mixed-win", B, prev, rows,
+                                      end - begin, len(mx[3])))
+                else:
+                    self._note_shape(("cfg-win", B, prev, rows,
+                                      end - begin))
                 if self.compaction is not None:
-                    self._window_geoms[(lo, B)].add(
-                        (prev, rows, end - begin))
+                    gk = (lo, B, "mixed") if mx is not None else (lo, B)
+                    self._window_geoms[gk].add((prev, rows, end - begin))
                     self.metrics.inc("segments")
                 hi = lo + rows
                 args = dict(y=y[lo:hi], rk=row_keys[lo:hi], g=g,
@@ -1406,6 +1586,9 @@ class SynthesisEngine:
                             ab_t=ab_t[:, begin:end],
                             ab_prev=ab_prev[:, begin:end],
                             act=act[:, begin:end])
+                if mx is not None:
+                    args.update(mode=mx[0], cids=mx[1][lo:hi],
+                                labels=mx[2][lo:hi])
                 if sh is not None:
                     # the row-window layout (wave_window_specs):
                     # window rows shard over the host submesh's data
@@ -1415,15 +1598,28 @@ class SynthesisEngine:
                             for k, v in args.items()}
                 with self.tracer.span("segment.dispatch", host=w.host,
                                       rows=rows, begin=begin, end=end):
-                    x = _window_segment(
-                        self.dm_params, self.dc, x, args["y"],
-                        args["rk"], args["g"], args["ts"],
-                        args["jloc"], args["ab_t"],
-                        args["ab_prev"], args["act"],
-                        row_offset=lo,
-                        image_size=self.image_size,
-                        channels=self.channels, eta=self.eta,
-                        use_pallas=self.use_pallas)
+                    if mx is not None:
+                        x = _window_segment_mixed(
+                            self.dm_params, self.dc, x, args["y"],
+                            args["rk"], args["g"], args["ts"],
+                            args["jloc"], args["ab_t"],
+                            args["ab_prev"], args["act"],
+                            mode=args["mode"], clf_ids=args["cids"],
+                            labels=args["labels"], clf_fns=mx[3],
+                            row_offset=lo,
+                            image_size=self.image_size,
+                            channels=self.channels, eta=self.eta,
+                            use_pallas=self.use_pallas)
+                    else:
+                        x = _window_segment(
+                            self.dm_params, self.dc, x, args["y"],
+                            args["rk"], args["g"], args["ts"],
+                            args["jloc"], args["ab_t"],
+                            args["ab_prev"], args["act"],
+                            row_offset=lo,
+                            image_size=self.image_size,
+                            channels=self.channels, eta=self.eta,
+                            use_pallas=self.use_pallas)
                 prev = rows
         if self._sync_hook is not None:
             self._sync_hook("dispatch", w.host, wave)
@@ -1451,14 +1647,20 @@ class SynthesisEngine:
         packing/dispatch order never keys noise — row identity does."""
         pool = self._ensure_pool()
         wins = placement.windows
+        # WAVE-level mixedness: one classifier-guided row anywhere makes
+        # every window of the wave dispatch the mixed executable (windows
+        # share the wave-resident tables; a mixed executable on pure-cfg
+        # rows is the identical arithmetic bit-for-bit)
+        mixed = any(p.req.mode == "clf"
+                    for parts in parts_h for p, _, _ in parts)
         if pool is not None and all(w.host in pool.hosts for w in wins):
             packed = self._collect(
                 [pool.submit(w.host, self._pack_window, w, parts_h[w.host],
-                             max_steps, placement.total_rows, wave)
+                             max_steps, placement.total_rows, wave, mixed)
                  for w in wins])
         else:
             packed = [self._pack_window(w, parts_h[w.host], max_steps,
-                                        placement.total_rows, wave)
+                                        placement.total_rows, wave, mixed)
                       for w in wins]
         win_rows = [p[0] for p in packed]
         win_meta = [p[1] for p in packed]
@@ -1473,8 +1675,17 @@ class SynthesisEngine:
         ts, ab_t, ab_prev, jloc = ragged_tables(self.sched, steps, max_steps)
         act = jloc >= 0
         y = jnp.asarray(cond)
+        # the mixed operands ride the ctx as one optional slot: mode is a
+        # wave-resident table (read through row_offset like ab_t), the
+        # classifier ids/labels are sliced per window like the cond rows
+        mx = None
+        if mixed:
+            mx = (jnp.asarray([m[4] for m in meta_wave], jnp.float32),
+                  np.array([m[5] for m in meta_wave], np.int32),
+                  np.array([m[6] for m in meta_wave], np.int32),
+                  tuple(self._clf_fns))
         ctx = (y, row_keys, g, ts, ab_t, ab_prev, jloc, act,
-               placement.total_rows)
+               placement.total_rows, mx)
         if pool is not None and all(w.host in pool.hosts for w in wins):
             xs = self._collect(
                 [pool.submit(w.host, self._dispatch_window, w, epochs,
@@ -1506,7 +1717,10 @@ class SynthesisEngine:
                   "g": NamedSharding(sub, specs["guidance"]),
                   "ab_t": NamedSharding(sub, specs["scalar_table"]),
                   "ab_prev": NamedSharding(sub, specs["scalar_table"]),
-                  "act": NamedSharding(sub, specs["scalar_table"])}
+                  "act": NamedSharding(sub, specs["scalar_table"]),
+                  "mode": NamedSharding(sub, specs["mode"]),
+                  "cids": NamedSharding(sub, specs["clf_ids"]),
+                  "labels": NamedSharding(sub, specs["labels"])}
         self._host_shardings[host] = sh
         return sh
 

@@ -217,7 +217,13 @@ def wave_window_specs(ax: MeshAxes) -> dict:
     active stack) and the wave-wide guidance vector are REPLICATED: every
     device reads its rows' scalar slots through the ``cfg_fuse``
     ``row_offset`` indexing instead of resharding a sliced copy of the
-    table per host per step."""
+    table per host per step.
+
+    MIXED-guidance waves add three operands: the per-row ``mode`` vector
+    is wave-resident (read through the same ``row_offset`` indexing, so
+    it replicates like the scalar table), while the classifier ids and
+    labels are window-local row vectors that shard with the window's
+    batch dim like ``row_keys``."""
     D = ax.all_data
     return {
         "window": P(D, None, None, None),    # x / eps_c / eps_u / noise
@@ -225,6 +231,9 @@ def wave_window_specs(ax: MeshAxes) -> dict:
         "row_keys": P(D),                    # per-row noise keys
         "scalar_table": P(None, None),       # wave-resident (4, B_wave)
         "guidance": P(None),                 # wave-wide (B_wave,)
+        "mode": P(None),                     # wave-wide (B_wave,) modes
+        "clf_ids": P(D),                     # window-local ensemble slots
+        "labels": P(D),                      # window-local clf targets
     }
 
 

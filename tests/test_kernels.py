@@ -247,6 +247,118 @@ def test_cfg_fuse_bf16(rng_key, shape):
 
 
 # ---------------------------------------------------------------------------
+# mixed-guidance rowwise: per-row (mode, ᾱ_t, ᾱ_prev, s, active)
+# ---------------------------------------------------------------------------
+
+def _mixed_rows(B):
+    mode = (jnp.arange(B) % 2).astype(jnp.float32)
+    s = jnp.linspace(0.0, 7.5, B)
+    ab_t = jnp.linspace(0.05, 0.9, B)
+    ab_prev = jnp.linspace(0.11, 0.95, B)
+    act = (jnp.arange(B) % 3 != 1).astype(jnp.float32)
+    return mode, s, ab_t, ab_prev, act
+
+
+@pytest.mark.parametrize("shape", [(6, 16, 16, 3), (3, 8, 8, 1), (5, 97, 13)])
+def test_cfg_fuse_mixed_matches_oracle(rng_key, shape):
+    """Mixed-guidance kernel: mode-0 rows combine (1+s)ε_c − sε_u, mode-1
+    rows take ε_c as the upstream-corrected ε̂ — vs the rowwise jnp
+    oracle, incl. non-lane-aligned per-image flatten."""
+    B = shape[0]
+    ks = jax.random.split(rng_key, 4)
+    x, ec, eu, z = (jax.random.normal(k, shape) for k in ks)
+    mode, s, ab_t, ab_prev, act = _mixed_rows(B)
+    out = cfg_ops.cfg_update_mixed(x, ec, eu, mode, s, ab_t, ab_prev, z, act)
+    ref = cfg_ref.cfg_update_mixed(x, ec, eu, mode, s, ab_t, ab_prev, z, act)
+    assert out.shape == shape
+    assert jnp.max(jnp.abs(out - ref)) < 1e-5
+
+
+def test_cfg_fuse_mixed_all_cfg_rows_match_rowwise_kernel(rng_key):
+    """mode ≡ 0 must reproduce the pure cfg rowwise kernel BIT-exactly —
+    the contract that lets the engine keep dispatching the pure
+    executable for clf-free waves without a parity cliff."""
+    ks = jax.random.split(rng_key, 4)
+    shape = (4, 16, 16, 3)
+    x, ec, eu, z = (jax.random.normal(k, shape) for k in ks)
+    _, s, ab_t, ab_prev, act = _mixed_rows(4)
+    out = cfg_ops.cfg_update_mixed(x, ec, eu, jnp.zeros((4,)), s, ab_t,
+                                   ab_prev, z, act)
+    pure = cfg_ops.cfg_update_rowwise(x, ec, eu, s, ab_t, ab_prev, z, act)
+    assert jnp.array_equal(out, pure)
+
+
+def test_cfg_fuse_mixed_mode1_ignores_s_and_eps_u(rng_key):
+    """mode-1 rows carry an already-corrected ε̂ in the ε_c slot: their
+    (s, ε_u) row values must be dead — bit-equal to a mode-0 row at
+    s=0, whatever garbage sits in those slots."""
+    ks = jax.random.split(rng_key, 5)
+    shape = (4, 8, 8, 3)
+    x, ec, eu, junk = (jax.random.normal(k, shape) for k in ks[:4])
+    z = jax.random.normal(ks[4], shape)
+    _, _, ab_t, ab_prev, _ = _mixed_rows(4)
+    ones = jnp.ones((4,))
+    clf = cfg_ops.cfg_update_mixed(x, ec, junk, ones, jnp.full((4,), 7.5),
+                                   ab_t, ab_prev, z, ones)
+    s0 = cfg_ops.cfg_update_mixed(x, ec, eu, jnp.zeros((4,)),
+                                  jnp.zeros((4,)), ab_t, ab_prev, z, ones)
+    assert jnp.array_equal(clf, s0)
+
+
+@pytest.mark.parametrize("off,B,Bs", [(0, 4, 4), (2, 3, 8), (3, 5, 8)])
+def test_cfg_fuse_mixed_segment_offset(rng_key, off, B, Bs):
+    """Segment-offset scalar-prefetch path for mixed waves: the (5, Bs)
+    scalar table spans the wave, tensor row b reads slot off+b — exactly
+    the windowed oracle, and bit-equal to slicing the table up front."""
+    ks = jax.random.split(rng_key, 4)
+    shape = (B, 8, 8, 3)
+    x, ec, eu, z = (jax.random.normal(k, shape) for k in ks)
+    mode, s, ab_t, ab_prev, act = _mixed_rows(Bs)
+    out = cfg_ops.cfg_update_mixed(x, ec, eu, mode, s, ab_t, ab_prev, z,
+                                   act, row_offset=off)
+    ref = cfg_ref.cfg_update_mixed_windowed(x, ec, eu, mode, s, ab_t,
+                                            ab_prev, z, act, row_offset=off)
+    assert out.shape == shape
+    assert jnp.max(jnp.abs(out - ref)) < 1e-5
+    w = slice(off, off + B)
+    sliced = cfg_ops.cfg_update_mixed(x, ec, eu, mode[w], s[w], ab_t[w],
+                                      ab_prev[w], z, act[w])
+    assert jnp.array_equal(out, sliced)
+
+
+def test_cfg_fuse_mixed_offset_out_of_range_refuses(rng_key):
+    """A window past the mixed scalar table must refuse loudly — a row
+    reading another row's (mode, ᾱ, s) corrupts a whole trajectory."""
+    ks = jax.random.split(rng_key, 4)
+    x, ec, eu, z = (jax.random.normal(k, (4, 8, 8, 3)) for k in ks)
+    v = jnp.linspace(0.1, 0.9, 6)
+    m = jnp.zeros((6,))
+    with pytest.raises(ValueError, match="out of range"):
+        cfg_ops.cfg_update_mixed(x, ec, eu, m, v, v, v, z, jnp.ones((6,)),
+                                 row_offset=3)
+    with pytest.raises(ValueError, match="out of range"):
+        cfg_ops.cfg_update_mixed(x, ec, eu, m, v, v, v, z, jnp.ones((6,)),
+                                 row_offset=-2)
+
+
+def test_cfg_fuse_mixed_inactive_rows_frozen(rng_key):
+    """active=0 rows pass through bit-unchanged in BOTH modes — retired
+    clf rows freeze exactly like retired cfg rows."""
+    ks = jax.random.split(rng_key, 4)
+    shape = (4, 8, 8, 3)
+    x, ec, eu, z = (jax.random.normal(k, shape) for k in ks)
+    mode = jnp.array([0.0, 1.0, 0.0, 1.0])
+    act = jnp.array([1.0, 1.0, 0.0, 0.0])
+    _, s, ab_t, ab_prev, _ = _mixed_rows(4)
+    out = cfg_ops.cfg_update_mixed(x, ec, eu, mode, s, ab_t, ab_prev, z, act)
+    for b, a in enumerate([1, 1, 0, 0]):
+        if a:
+            assert not jnp.array_equal(out[b], x[b])
+        else:
+            assert jnp.array_equal(out[b], x[b])
+
+
+# ---------------------------------------------------------------------------
 # non-causal S = n_tok + 1 (the DiT's prepended conditioning token)
 # ---------------------------------------------------------------------------
 

@@ -1,0 +1,296 @@
+"""Mixed-guidance ragged waves: ONE scheduler for every guidance mode.
+
+The tentpole contract: cfg, classifier-guided, and unconditional
+requests merge into the same ragged/compacted/placed waves, and every
+row's output is BIT-IDENTICAL to the same merged engine serving that
+row's mode in isolation — for any host count, packing, arrival order,
+or fault schedule.  Uncond rows ride pure cfg waves as s=0 null-cond
+rows (no legacy grouped-uncond waves); classifier-guided rows carry a
+per-row slot into the engine's classifier-ensemble registry and their
+ε̂-correction batches the classifier over the wave without coupling
+rows (per-sample classifier contract).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ImportError:            # pragma: no cover - CI installs it
+    from _hypothesis_fallback import given, settings, st
+
+from repro.configs.oscar import DiffusionConfig
+from repro.diffusion.dit import init_dit
+from repro.diffusion.schedule import make_schedule
+from repro.serve import SynthesisEngine, SynthesisStore
+from repro.serve.faults import FaultInjector, RequestFailedError
+
+DC = DiffusionConfig(d_model=32, num_layers=1, num_heads=2,
+                     sample_timesteps=3, train_timesteps=16)
+H = 8
+
+_DM = None
+
+
+def _dm():
+    global _DM
+    if _DM is None:
+        key = jax.random.PRNGKey(0)
+        params = init_dit(key, DC, H, 3)
+        leaves, treedef = jax.tree.flatten(params)
+        keys = jax.random.split(jax.random.PRNGKey(1), len(leaves))
+        params = jax.tree.unflatten(treedef, [
+            a + 0.05 * jax.random.normal(k, a.shape, a.dtype)
+            for a, k in zip(leaves, keys)])
+        _DM = params, make_schedule(DC.train_timesteps, DC.schedule)
+    return _DM
+
+
+def _engine(**kw):
+    params, sched = _dm()
+    kw.setdefault("image_size", H)
+    kw.setdefault("wave_size", 8)
+    kw.setdefault("ragged", True)
+    kw.setdefault("cache", False)
+    return SynthesisEngine(params, DC, sched, **kw)
+
+
+def _enc(seed):
+    e = np.random.default_rng(seed).normal(size=(DC.cond_dim,))
+    return (e / np.linalg.norm(e)).astype(np.float32)
+
+
+# module-level classifier closures: stable identity → stable ensemble
+# tuples → the jitted mixed executables are shared across engines/tests
+def _lp_sq(x, labels):
+    return -jnp.sum(x ** 2, axis=(1, 2, 3))
+
+
+def _lp_shift(x, labels):
+    pull = labels.astype(x.dtype)[:, None, None, None]
+    return -jnp.sum((x - 0.3) ** 2, axis=(1, 2, 3)) \
+        + 0.1 * jnp.sum(x * pull, axis=(1, 2, 3))
+
+
+def _random_subs(rng, n):
+    """n submission thunks covering random modes/guidances/steps; each
+    replays identically against any engine (the isolated-oracle trick)."""
+    subs = []
+    for i in range(n):
+        mode = ["cfg", "clf", "uncond"][int(rng.integers(0, 3))]
+        count = int(rng.integers(1, 5))
+        steps = int(rng.integers(1, 4))
+        if mode == "cfg":
+            e = _enc(int(rng.integers(0, 100)))
+            g = float(rng.choice([1.5, 3.0, 7.5]))
+            subs.append(lambda eng, e=e, c=count, g=g, s=steps:
+                        eng.submit(e, 0, c, guidance=g, num_steps=s))
+        elif mode == "clf":
+            fn = (_lp_sq, _lp_shift)[int(rng.integers(0, 2))]
+            cat = int(rng.integers(0, 3))
+            g = float(rng.choice([1.0, 2.0]))
+            subs.append(lambda eng, f=fn, cat=cat, c=count, g=g, s=steps,
+                        i=i: eng.submit_classifier_guided(
+                            f, cat, c, guidance=g, num_steps=s,
+                            group=("cl", i)))
+        else:
+            cat = int(rng.integers(0, 3))
+            subs.append(lambda eng, c=count, cat=cat, s=steps:
+                        eng.submit_unconditional(c, category=cat,
+                                                 num_steps=s))
+    return subs
+
+
+# one scheduler config per fuzz example, cycled by seed: every merged
+# geometry (ragged / compacted / placed / placed+compacted) and a
+# mid-drain host kill each get exercised across the example budget
+_CONFIGS = [
+    dict(),
+    dict(compaction="full"),
+    dict(hosts=2),
+    dict(hosts=4, compaction="full"),
+    dict(hosts=2,
+         faults=lambda: FaultInjector(schedule=[("window", 0, 0)])),
+    dict(hosts=3, compaction="full",
+         faults=lambda: FaultInjector(schedule=[("window", 1, 1)])),
+]
+
+
+@given(seed=st.integers(0, 29))
+@settings(max_examples=6, deadline=None)
+def test_mixed_drains_match_isolated_mode_oracles_fuzzed(seed):
+    """Property: for ANY mixed request set, scheduler geometry, and
+    fault schedule, every request's rows are bit-identical to a plain
+    single-host merged engine serving ONLY that request (rid-aligned) —
+    and under a topology the per-host row/padding sums equal the global
+    counters."""
+    rng = np.random.default_rng(seed)
+    key = jax.random.PRNGKey(seed)
+    subs = _random_subs(rng, int(rng.integers(2, 5)))
+    conf = dict(_CONFIGS[seed % len(_CONFIGS)])
+    if "faults" in conf:
+        conf["faults"] = conf["faults"]()
+    eng = _engine(**conf)
+    rids = [sub(eng) for sub in subs]
+    out = eng.run(key)
+    for rid, sub in zip(rids, subs):
+        solo = _engine()
+        solo._next_rid = rid                     # align the row identity
+        srid = sub(solo)
+        assert np.array_equal(out[rid], solo.run(key)[srid]), \
+            f"seed={seed} rid={rid} diverged from its isolated oracle"
+    if eng.topology is not None:
+        s = eng.stats
+        assert sum(p["rows"] for p in s["per_host"]) == s["generated"]
+        assert sum(p["rows"] + p["padded"] for p in s["per_host"]) \
+            == s["scheduled_rows"]
+        assert s["scheduled_rows"] == s["generated"] + s["padded"]
+
+
+def test_uncond_rides_pure_cfg_ragged_waves():
+    """Satellite: uncond rows are the s=0 null-cond degenerate point of
+    the cfg combine — a cfg+uncond workload shares ONE merged wave on
+    the PURE cfg executable (no mixed variant, no legacy grouped-uncond
+    wave is ever dispatched)."""
+    eng = _engine()
+    rc = eng.submit(_enc(60), 0, 3, guidance=7.5, num_steps=3)
+    ru = eng.submit_unconditional(4, num_steps=2)
+    out = eng.run(jax.random.PRNGKey(7))
+    assert out[rc].shape == (3, H, H, 3) and out[ru].shape == (4, H, H, 3)
+    assert eng.stats["waves"] == eng.stats["merged_waves"] == 1
+    assert {s[0] for s in eng.traj_shapes} == {"cfg-ragged"}, \
+        eng.traj_shapes
+
+
+def test_clf_requests_have_real_rids_and_survive_clf_wave_failover():
+    """Satellite: classifier-guided requests carry real (unique,
+    monotone) rids into the merged queue, and a wave holding clf rows
+    fails over a lost host bit-identically to the fault-free drain."""
+    key = jax.random.PRNGKey(13)
+
+    def submit_all(e):
+        return [e.submit_classifier_guided(_lp_sq, 0, 3, num_steps=3,
+                                           group="a"),
+                e.submit(_enc(70), 1, 2, guidance=3.0, num_steps=2),
+                e.submit_classifier_guided(_lp_shift, 2, 3, num_steps=2,
+                                           group="b")]
+
+    ref = _engine(hosts=2)
+    rids = submit_all(ref)
+    assert rids == sorted(set(rids)) and all(r >= 0 for r in rids)
+    want = ref.run(key)
+
+    eng = _engine(hosts=2,
+                  faults=FaultInjector(schedule=[("window", 0, 0)]))
+    rids2 = submit_all(eng)
+    out = eng.run(key)
+    assert eng.topology.failed == frozenset({0})
+    for a, b in zip(rids, rids2):
+        assert np.array_equal(want[a], out[b])
+    s = eng.stats
+    assert sum(p["rows"] for p in s["per_host"]) == s["generated"] == 8
+
+
+def test_mixed_warm_store_replays_with_zero_sampler_calls(tmp_path):
+    """Cross-mode warm-store replay: cfg AND uncond results persist
+    under their (hash/synthetic, guidance, steps) keys, so a cold
+    engine — any merged geometry — serves the repeat workload with zero
+    waves."""
+    key = jax.random.PRNGKey(11)
+    warm = _engine(cache=True, store=SynthesisStore(tmp_path))
+    rc = warm.submit(_enc(50), 0, 3, guidance=7.5, num_steps=3)
+    ru = warm.submit_unconditional(3, category=1, num_steps=2)
+    warm.submit_classifier_guided(_lp_sq, 1, 2, num_steps=2)  # uncached
+    out = warm.run(key)
+    for kw in (dict(), dict(hosts=2, compaction="full")):
+        cold = _engine(cache=True, store=SynthesisStore(tmp_path), **kw)
+        c1 = cold.submit(_enc(50), 0, 3, guidance=7.5, num_steps=3)
+        c2 = cold.submit_unconditional(3, category=1, num_steps=2)
+        got = cold.run(jax.random.PRNGKey(99))
+        assert cold.stats["waves"] == 0 and cold.stats["generated"] == 0
+        assert np.array_equal(got[c1], out[rc])
+        assert np.array_equal(got[c2], out[ru])
+
+
+def test_poisoned_classifier_fails_at_admission_on_merged_path():
+    """A poisoned classifier closure is vetted BEFORE it can poison a
+    mixed wave: with an on_error hook the bad request resolves to a
+    typed failure at admission and every co-submitted request is still
+    served; without the hook the legacy first-failure-raises contract
+    holds and the queue stays intact."""
+    def poisoned(x, labels):
+        raise ValueError("poisoned classifier closure")
+
+    eng = _engine()
+    good = eng.submit(_enc(80), 0, 2, guidance=3.0, num_steps=2)
+    bad = eng.submit_classifier_guided(poisoned, 1, 2, num_steps=2)
+    also = eng.submit_unconditional(2, num_steps=2)
+    errs = {}
+    out = eng.run(jax.random.PRNGKey(3),
+                  on_error=lambda rid, e: errs.__setitem__(rid, e))
+    assert good in out and also in out and bad not in out
+    assert isinstance(errs[bad], RequestFailedError)
+
+    eng2 = _engine()
+    eng2.submit(_enc(80), 0, 2, guidance=3.0, num_steps=2)
+    eng2.submit_classifier_guided(poisoned, 1, 2, num_steps=2)
+    with pytest.raises(ValueError, match="poisoned"):
+        eng2.run(jax.random.PRNGKey(3))
+    assert len(eng2._queue) == 2                 # nothing lost
+
+
+def test_grouped_mode_keeps_legacy_paths_for_mixed_sets():
+    """ragged=False engines keep the legacy per-mode wave groups (wave-
+    keyed noise — NOT cross-oracle bit-comparable) but still serve a
+    mixed submission set completely and replay deterministically."""
+    key = jax.random.PRNGKey(21)
+
+    def drain(e):
+        rc = e.submit(_enc(90), 0, 3, guidance=7.5, num_steps=3)
+        rl = e.submit_classifier_guided(_lp_sq, 1, 3, num_steps=3,
+                                        group="g")
+        ru = e.submit_unconditional(3, num_steps=3)
+        out = e.run(key)
+        return [out[r] for r in (rc, rl, ru)], e
+
+    a, ea = drain(_engine(ragged=False))
+    b, _ = drain(_engine(ragged=False))
+    assert all(x.shape == (3, H, H, 3) for x in a)
+    for x, y in zip(a, b):
+        assert np.array_equal(x, y)
+    assert ea.stats["waves"] == 3                # one wave per legacy group
+    assert {s[0] for s in ea.traj_shapes} == {"cfg", "clf", "uncond"}
+
+
+def test_streamed_mixed_arrivals_extend_open_waves():
+    """Mid-drain clf/uncond arrivals stream into the merged queue (one
+    merged super-group) and come back bit-identical to their isolated
+    oracles — admission order never keys noise."""
+    key = jax.random.PRNGKey(17)
+    eng = _engine()
+    r0 = eng.submit(_enc(95), 0, 2, guidance=3.0, num_steps=2)
+    late = {}
+    calls = {"n": 0}
+
+    def poll():
+        calls["n"] += 1
+        if calls["n"] == 1:
+            late["clf"] = eng.submit_classifier_guided(
+                _lp_shift, 1, 2, num_steps=2, group="late")
+            late["unc"] = eng.submit_unconditional(2, num_steps=2)
+            return True
+        return False
+
+    out = eng.run(key, poll=poll)
+    assert eng.stats["streamed"] == 2
+    for name, sub in [
+            ("clf", lambda e: e.submit_classifier_guided(
+                _lp_shift, 1, 2, num_steps=2, group="late")),
+            ("unc", lambda e: e.submit_unconditional(2, num_steps=2))]:
+        solo = _engine()
+        solo._next_rid = late[name]
+        srid = sub(solo)
+        assert np.array_equal(out[late[name]], solo.run(key)[srid])
+    assert out[r0].shape == (2, H, H, 3)

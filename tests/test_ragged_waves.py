@@ -256,20 +256,38 @@ def test_ragged_engine_packing_independent_across_drains(dm):
     assert np.array_equal(out[r1], out1[s1])
 
 
-def test_ragged_clf_and_uncond_groups_stay_separate(dm):
-    """Ragged merging is classifier-free only: clf/uncond requests keep
-    their own wave groups (a classifier closure cannot be vectorised
-    per-row) and still serve correctly next to merged cfg waves."""
-    eng = _engine(dm)
+def test_ragged_merges_every_guidance_mode(dm):
+    """Ragged merging covers EVERY guidance mode: cfg, classifier-guided
+    (per-row ε̂-correction with a batched classifier ensemble) and uncond
+    (s=0 null-cond) requests share ONE merged wave — no legacy grouped
+    clf/uncond waves are dispatched — and each request's rows are
+    bit-identical to the same engine serving its mode alone."""
+    key = jax.random.PRNGKey(6)
+    eng = _engine(dm, cache=False)
+    lp = lambda x, labels: -jnp.sum(x ** 2, axis=(1, 2, 3))
     rc = eng.submit(_enc(20), 0, 3, guidance=7.5, num_steps=3)
-    rl = eng.submit_classifier_guided(
-        lambda x, labels: -jnp.sum(x ** 2, axis=(1, 2, 3)), 1, 3,
-        group="client0")
-    ru = eng.submit_unconditional(3)
-    out = eng.run(jax.random.PRNGKey(6))
-    assert out[rc].shape == out[rl].shape == out[ru].shape == (3, H, H, 3)
-    assert eng.stats["merged_waves"] == 1          # only the cfg wave
-    assert eng.stats["waves"] == 3
+    rl = eng.submit_classifier_guided(lp, 1, 3, group="client0",
+                                      num_steps=3)
+    ru = eng.submit_unconditional(2)
+    out = eng.run(key)
+    assert out[rc].shape == out[rl].shape == (3, H, H, 3)
+    assert out[ru].shape == (2, H, H, 3)
+    assert eng.stats["merged_waves"] == 1          # ONE wave for all modes
+    assert eng.stats["waves"] == 1
+    # no legacy grouped clf/uncond executables were compiled
+    assert all(s[0].startswith(("cfg", "mixed"))
+               for s in eng.traj_shapes), eng.traj_shapes
+    # per-mode isolated oracles (rid-aligned) are bit-identical
+    for rid, sub in [
+            (rc, lambda e: e.submit(_enc(20), 0, 3, guidance=7.5,
+                                    num_steps=3)),
+            (rl, lambda e: e.submit_classifier_guided(
+                lp, 1, 3, group="client0", num_steps=3)),
+            (ru, lambda e: e.submit_unconditional(2))]:
+        solo = _engine(dm, cache=False)
+        solo._next_rid = rid                     # align the row identity
+        srid = sub(solo)
+        assert np.array_equal(out[rid], solo.run(key)[srid])
 
 
 def test_ragged_cache_topup_and_2d_encodings(dm):

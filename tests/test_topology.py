@@ -432,19 +432,32 @@ def test_run_paths_thread_hosts_knob():
         eng.stats["per_host"][1]["rows"] == 6
 
 
-def test_clf_and_uncond_groups_keep_single_host_path():
-    """Topology shards classifier-free traffic only; clf/uncond groups
-    still serve correctly (single-host waves) next to placed cfg waves."""
+def test_clf_and_uncond_rows_place_with_cfg_waves():
+    """Under ragged scheduling EVERY mode places: clf/uncond rows ride
+    the merged waves and shard over hosts like any cfg row — the whole
+    mixed workload lands in the per-host breakdown, and the placed
+    result is bit-identical to the single-host merged engine."""
+    key = jax.random.PRNGKey(6)
+    lp = lambda x, labels: -jnp.sum(x ** 2, axis=(1, 2, 3))
+
+    def submit_all(e):
+        return (e.submit(_enc(20), 0, 3, guidance=7.5, num_steps=3),
+                e.submit_classifier_guided(lp, 1, 3, group="client0",
+                                           num_steps=3),
+                e.submit_unconditional(3))
+
     eng = _engine(hosts=2, ragged=True)
-    rc = eng.submit(_enc(20), 0, 3, guidance=7.5, num_steps=3)
-    rl = eng.submit_classifier_guided(
-        lambda x, labels: -jnp.sum(x ** 2, axis=(1, 2, 3)), 1, 3,
-        group="client0")
-    ru = eng.submit_unconditional(3)
-    out = eng.run(jax.random.PRNGKey(6))
+    rc, rl, ru = submit_all(eng)
+    out = eng.run(key)
     assert out[rc].shape == out[rl].shape == out[ru].shape == (3, H, H, 3)
-    # only the cfg rows land in the per-host breakdown
-    assert sum(p["rows"] for p in eng.stats["per_host"]) == 3
+    # ALL nine rows land in the per-host breakdown now
+    assert sum(p["rows"] for p in eng.stats["per_host"]) == 9
+    assert eng.stats["generated"] == 9
+    solo = _engine(ragged=True)
+    sc, sl, su = submit_all(solo)
+    sout = solo.run(key)
+    for a, b in ((rc, sc), (rl, sl), (ru, su)):
+        assert np.array_equal(out[a], sout[b])
 
 
 def test_cache_topup_under_topology():
